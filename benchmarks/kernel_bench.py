@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+loop — not meaningful to time), so the timed quantity is the jnp
+REFERENCE path under jit (the algorithmic cost the kernel removes), plus
+the derived HBM-traffic model showing the fusion win the kernel delivers
+on TPU:
+
+    naive chain  : ~9 model-sized HBM transfers per ADOTA update
+    fused kernel : 4 reads + 3 writes in ONE pass (= 7 transfers),
+                   and no intermediate materialisation.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import (adaptive_update_ref, flash_attention_ref,
+                               ota_channel_ref)
+
+
+def _time(fn, *args, iters=20) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def bench_adaptive_update(n: int = 1 << 20) -> Dict:
+    ks = jax.random.split(jax.random.key(0), 4)
+    g = jax.random.normal(ks[0], (n,))
+    d = jax.random.normal(ks[1], (n,))
+    v = jnp.abs(jax.random.normal(ks[2], (n,)))
+    w = jax.random.normal(ks[3], (n,))
+    f = jax.jit(lambda *a: adaptive_update_ref(
+        *a, lr=0.01, beta1=0.9, beta2=0.3, alpha=1.5, eps=1e-8, mode="adam"))
+    us = _time(f, g, d, v, w)
+    hbm_bytes_fused = 7 * 4 * n          # 4 reads + 3 writes, f32
+    return dict(name="adaptive_update_ref_1M", us_per_call=us,
+                derived=f"fused_hbm_bytes={hbm_bytes_fused}")
+
+
+def bench_ota_channel(n_clients: int = 32, d: int = 1 << 18) -> Dict:
+    ks = jax.random.split(jax.random.key(0), 4)
+    G = jax.random.normal(ks[0], (n_clients, d))
+    h = jax.random.uniform(ks[1], (n_clients,))
+    u = jax.random.uniform(ks[2], (d,), minval=-1.5, maxval=1.5)
+    e = -jnp.log(jax.random.uniform(ks[3], (d,), minval=1e-6))
+    f = jax.jit(lambda *a: ota_channel_ref(*a, alpha=1.5, scale=0.1))
+    us = _time(f, G, h, u, e)
+    return dict(name=f"ota_channel_ref_{n_clients}x{d}", us_per_call=us,
+                derived=f"grad_bytes={4 * n_clients * d}")
+
+
+def bench_attention(s: int = 1024) -> Dict:
+    q = jax.random.normal(jax.random.key(0), (1, s, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(1), (1, s, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(2), (1, s, 2, 64), jnp.bfloat16)
+    f = jax.jit(lambda *a: flash_attention_ref(*a, causal=True))
+    us = _time(f, q, k, v, iters=5)
+    flops = 4 * s * s * 8 * 64
+    return dict(name=f"attention_ref_s{s}", us_per_call=us,
+                derived=f"flops={flops}")
+
+
+def all_benches() -> List[Dict]:
+    return [bench_adaptive_update(), bench_ota_channel(), bench_attention()]

@@ -1,0 +1,135 @@
+"""Roofline analysis from the dry-run artifacts.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), derives the
+three roofline terms per (arch x shape) on the single-pod mesh, and emits
+the §Roofline markdown table.
+
+    compute    = FLOPs_per_device / 197e12        (v5e bf16 peak)
+    memory     = bytes_per_device / 819e9         (HBM bw)
+    collective = collective_bytes_per_device / 4.9e10  (~ICI link bw)
+
+FLOPs/bytes/collective-bytes come from the depth-CALIBRATED measurements
+(XLA counts scan bodies once; dryrun extrapolates from unrolled depth-2/4
+compiles — see launch/dryrun.py:calibrate).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 4.9e10           # bytes/s per link (~50 GB/s)
+
+
+def load_records(path_glob: str = "results/dryrun/*.json") -> List[Dict]:
+    """Load dry-run records; when the same (arch, shape, mesh, knobs) was
+    re-run (e.g. a fix re-measurement in a later file), the later OK
+    record supersedes the earlier one."""
+    recs = []
+    for p in sorted(glob.glob(path_glob)):
+        with open(p) as f:
+            data = json.load(f)
+        recs.extend(data if isinstance(data, list) else [data])
+    by_key: Dict = {}
+    for r in recs:
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("optimizer"), r.get("fsdp"), r.get("shard_cache_seq"),
+               r.get("state_dtype"), json.dumps(r.get("overrides", {}),
+                                                sort_keys=True))
+        prev = by_key.get(key)
+        if prev is None or (r.get("ok") and not prev.get("ok")):
+            by_key[key] = r
+    return list(by_key.values())
+
+
+def terms(rec: Dict) -> Optional[Dict]:
+    cal = rec.get("calibrated")
+    if not rec.get("ok") or not cal:
+        return None
+    t_c = cal["flops"] / PEAK_FLOPS
+    t_m = cal["bytes_accessed"] / HBM_BW
+    t_x = cal["collective_bytes"] / ICI_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    # MODEL_FLOPS: 6·N·D training, 2·N·D forward (prefill), 2·N per token
+    # (decode); N = active params.
+    n_act = rec["n_active_params"]
+    shape = rec["shape"]
+    chips = 512 if rec["mesh"] == "multi" else 256
+    from repro.launch.specs import INPUT_SHAPES
+    sh = INPUT_SHAPES[shape]
+    if sh["kind"] == "train":
+        model_flops = 6 * n_act * sh["seq"] * sh["batch"]
+    elif sh["kind"] == "prefill":
+        model_flops = 2 * n_act * sh["seq"] * sh["batch"]
+    else:
+        model_flops = 2 * n_act * sh["batch"]          # one token per seq
+    model_flops_dev = model_flops / chips
+    useful = model_flops_dev / cal["flops"] if cal["flops"] else float("nan")
+    return dict(
+        arch=rec["arch"], shape=shape, mesh=rec["mesh"],
+        compute_s=t_c, memory_s=t_m, collective_s=t_x, dominant=dominant,
+        model_flops=model_flops, model_flops_per_device=model_flops_dev,
+        hlo_flops_per_device=cal["flops"],
+        useful_ratio=useful,
+        collectives=cal["collectives"],
+        memory_bytes=rec.get("memory", {}),
+    )
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "useful (6ND/HLO) |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = terms(r)
+        if t is None or t["mesh"] != mesh:
+            continue
+        rows.append(
+            f"| {t['arch']} | {t['shape']} | {_fmt_s(t['compute_s'])} "
+            f"| {_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} "
+            f"| **{t['dominant']}** | {t['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def pick_hillclimb_targets(recs: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction (compute / max term), most collective-bound,
+    most representative of the paper's technique (train_4k — where the OTA
+    gradient path and ADOTA update actually run)."""
+    ts = [t for t in (terms(r) for r in recs)
+          if t is not None and t["mesh"] == "single"]
+    def frac(t):
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        return t["compute_s"] / total if total else 1.0
+    worst = min(ts, key=frac)
+    coll = max(ts, key=lambda t: t["collective_s"]
+               / max(t["compute_s"] + t["memory_s"], 1e-12))
+    train = [t for t in ts if t["shape"] == "train_4k"]
+    rep = max(train, key=lambda t: t["model_flops"]) if train else worst
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main() -> None:
+    recs = load_records()
+    print(markdown_table(recs, "single"))
+    print()
+    targets = pick_hillclimb_targets(recs)
+    for k, t in targets.items():
+        print(f"{k}: {t['arch']} x {t['shape']} (dominant {t['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

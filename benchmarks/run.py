@@ -1,0 +1,86 @@
+"""Benchmark harness: one entry per paper table/figure + kernel
+microbenches + the roofline summary. Prints ``name,us_per_call,derived``
+CSV (one line per benchmark record).
+
+    PYTHONPATH=src python -m benchmarks.run              # full
+    PYTHONPATH=src python -m benchmarks.run --quick      # reduced rounds
+    PYTHONPATH=src python -m benchmarks.run --only fig5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import kernel_bench, paper_figs  # noqa: E402
+
+
+def _csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def run_paper_fig(fig_name: str, quick: bool) -> list:
+    if quick:
+        paper_figs.ROUNDS = 30
+    fn = getattr(paper_figs, fig_name)
+    records = fn()
+    for r in records:
+        tag = (f"{fig_name}:{r['optimizer']}"
+               + (f":a{r['alpha']}" if fig_name == "fig5" else "")
+               + (f":b2_{r['beta2']}" if fig_name == "fig4" else "")
+               + (f":N{r['n_clients']}" if fig_name == "fig6" else "")
+               + (f":dir{r['dir_alpha']}" if fig_name == "fig7" else ""))
+        _csv(tag, r["us_per_round"],
+             f"final_loss={r['final_loss']:.4f};acc={r['accuracy']:.4f}")
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print("name,us_per_call,derived")
+    figs = ["fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "beyond_yogi"]
+    if args.only:
+        figs = [f for f in figs if f == args.only]
+    all_records = {}
+    for fig in figs:
+        try:
+            all_records[fig] = run_paper_fig(fig, args.quick)
+        except Exception as e:  # noqa: BLE001
+            _csv(f"{fig}:ERROR", 0.0, repr(e)[:80])
+
+    if not args.only or args.only == "kernels":
+        for rec in kernel_bench.all_benches():
+            _csv(rec["name"], rec["us_per_call"], rec["derived"])
+
+    # Roofline summary (if dry-run artifacts exist).
+    try:
+        from benchmarks import roofline
+        recs = roofline.load_records()
+        n_ok = sum(1 for r in recs if r.get("ok"))
+        _csv("dryrun:combos_ok", 0.0, f"ok={n_ok};total={len(recs)}")
+        for r in recs:
+            t = roofline.terms(r)
+            if t and t["mesh"] == "single":
+                _csv(f"roofline:{t['arch']}:{t['shape']}",
+                     max(t['compute_s'], t['memory_s'],
+                         t['collective_s']) * 1e6,
+                     f"dominant={t['dominant']};useful={t['useful_ratio']:.2f}")
+    except Exception as e:  # noqa: BLE001
+        _csv("roofline:ERROR", 0.0, repr(e)[:80])
+
+    with open(os.path.join(args.out, "paper_figs.json"), "w") as f:
+        json.dump(all_records, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

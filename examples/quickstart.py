@@ -1,0 +1,47 @@
+"""Quickstart: 60 rounds of ADOTA-FL (Adam-OTA) on a synthetic federated
+classification task, next to the FedAvgM baseline.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        init_server, make_round_step, run_rounds)
+from repro.data import FederatedBatcher, gaussian_mixture
+from repro.models.vision import accuracy, logistic_regression
+
+
+def train(optimizer: str, lr: float) -> float:
+    n_clients = 20
+    data = gaussian_mixture(4000, 32, 10, seed=0)
+    model = logistic_regression(32, 10)
+    batcher = FederatedBatcher(data, n_clients, 16, dir_alpha=0.1)
+
+    channel = OTAChannelConfig(alpha=1.5, xi_scale=0.5)   # strong interference
+    server = AdaptiveConfig(optimizer=optimizer, lr=lr, alpha=1.5, beta2=0.3)
+    round_step = make_round_step(model.loss_fn, channel, server,
+                                 FLConfig(n_clients=n_clients))
+    params = model.init(jax.random.key(0))
+    state = init_server(params, server)
+
+    def batch_fn(t, key):
+        b = batcher(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    params, state, hist = run_rounds(round_step, params, state,
+                                     jax.random.key(1), batch_fn,
+                                     n_rounds=60, log_every=20)
+    acc = accuracy(model, params, jnp.asarray(data.x), data.y)
+    print(f"{optimizer:12s} final loss {hist[-1]['loss']:.4f}  acc {acc:.4f}")
+    return acc
+
+
+if __name__ == "__main__":
+    print("== Adam-OTA (paper algorithm) ==")
+    acc_adam = train("adam_ota", lr=0.05)
+    print("== FedAvgM-OTA (paper baseline) ==")
+    acc_avgm = train("fedavgm", lr=0.01)
+    print(f"\nADOTA improvement: +{(acc_adam - acc_avgm) * 100:.1f} pts accuracy "
+          "under alpha=1.5 interference")

@@ -1,0 +1,19 @@
+"""Batched serving example: prefill + autoregressive decode with the
+per-family cache (ring KV for windowed archs, latent cache for MLA,
+O(1) recurrent state for RWKV/hybrid).
+
+    PYTHONPATH=src python examples/serve_decode.py -- --arch rwkv6-7b \
+        --preset tiny --batch 4 --gen 16
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    if "--" in sys.argv:
+        sys.argv = [sys.argv[0]] + sys.argv[sys.argv.index("--") + 1:]
+    elif len(sys.argv) == 1:
+        sys.argv += ["--arch", "rwkv6-7b", "--preset", "tiny",
+                     "--batch", "2", "--prompt-len", "32", "--gen", "8"]
+    main()

@@ -1,0 +1,22 @@
+"""End-to-end driver: federated training of a language model with the
+OTA channel + ADOTA server, via the production launcher.
+
+Default is a CPU-friendly reduced model; pass --preset 100m for the
+~100M-parameter run (a few hundred rounds; minutes-to-hours on CPU,
+seconds on a real pod).
+
+    PYTHONPATH=src python examples/train_lm_federated.py -- \
+        --preset tiny --rounds 60 --clients 8
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--" in sys.argv:
+        sys.argv = [sys.argv[0]] + sys.argv[sys.argv.index("--") + 1:]
+    elif len(sys.argv) == 1:
+        sys.argv += ["--preset", "tiny", "--rounds", "60", "--clients", "8",
+                     "--seq", "64"]
+    main()

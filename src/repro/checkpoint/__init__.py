@@ -1,0 +1,90 @@
+"""Pytree checkpointing (npz-based, dependency-free).
+
+Saves/restores {params, server optimizer state, round counter, rng key}
+so long federated runs resume exactly. Leaves are flattened to
+path-keyed arrays in one compressed .npz; pytree structure is rebuilt
+from the stored key paths on load (against a template tree).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "|"
+_BF16 = "~bf16"   # npz cannot store ml_dtypes.bfloat16; stored as uint16 view
+
+
+def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        ks = []
+        for p in path:
+            ks.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        arr = np.asarray(leaf)
+        key = _SEP.join(ks)
+        if arr.dtype == jnp.bfloat16:
+            out[key + _BF16] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save(path: str, tree: PyTree) -> None:
+    """Atomic save: write to a temp file in the same dir, then rename."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez_compressed(f, **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load(path: str, template: PyTree) -> PyTree:
+    """Restore into the structure (and dtypes) of ``template``."""
+    with np.load(path) as data:
+        stored = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in paths:
+        ks = []
+        for p in path_keys:
+            ks.append(str(getattr(p, "key", getattr(p, "idx", p))))
+        key = _SEP.join(ks)
+        if key + _BF16 in stored:
+            arr = jnp.asarray(stored[key + _BF16].view(jnp.bfloat16))
+        elif key in stored:
+            arr = stored[key]
+        else:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        if hasattr(leaf, "dtype"):
+            arr = jnp.asarray(arr, dtype=leaf.dtype)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def latest_round(ckpt_dir: str, prefix: str = "round_") -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    rounds = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith(prefix) and f.endswith(".npz"):
+            try:
+                rounds.append((int(f[len(prefix):-4]), f))
+            except ValueError:
+                continue
+    if not rounds:
+        return None
+    return os.path.join(ckpt_dir, max(rounds)[1])

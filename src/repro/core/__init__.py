@@ -1,0 +1,22 @@
+"""Core ADOTA-FL library: OTA channel, adaptive server optimizers, FL loop."""
+
+from repro.core.adaptive import (AdaptiveConfig, ServerOptimizer, ServerOptState,
+                                 adagrad_ota, adam_ota, amsgrad_ota, fedavg,
+                                 fedavgm, make_server_optimizer, yogi_ota)
+from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
+                                sample_fading, sample_interference, upsilon)
+from repro.core.fl import (FLConfig, RoundMetrics, init_server, make_round_step,
+                           make_sharded_round_step, run_rounds)
+from repro.core.ota import (add_interference, faded_loss_weights,
+                            ota_aggregate_stacked, ota_psum)
+from repro.core.tail_index import hill_estimate, log_moment_estimate
+
+__all__ = [
+    "AdaptiveConfig", "ServerOptimizer", "ServerOptState", "adagrad_ota",
+    "adam_ota", "fedavg", "fedavgm", "make_server_optimizer", "yogi_ota",
+    "amsgrad_ota", "OTAChannelConfig", "sample_alpha_stable", "sample_fading",
+    "sample_interference", "upsilon", "FLConfig", "RoundMetrics",
+    "init_server", "make_round_step", "make_sharded_round_step", "run_rounds",
+    "add_interference", "faded_loss_weights", "ota_aggregate_stacked",
+    "ota_psum", "hill_estimate", "log_moment_estimate",
+]

@@ -1,0 +1,240 @@
+"""ADOTA server optimizers (Algorithm 1 of the paper), as composable
+init/update transforms over parameter pytrees.
+
+All optimizers consume the *noisy OTA-aggregated* global gradient
+``g_t`` (Eq. 7) and produce the new global model:
+
+    Delta_t = beta1 * Delta_{t-1} + (1 - beta1) * g_t            (Eq. 8)
+    v_t     = v_{t-1} + |Delta_t|^alpha                          (AdaGrad-OTA, Eq. 9)
+    v_t     = beta2 * v_{t-1} + (1 - beta2) * |Delta_t|^alpha    (Adam-OTA,   Eq. 10)
+    w_{t+1} = w_t - eta * Delta_t / (v_t + eps)^{1/alpha}        (Eq. 11)
+
+The alpha-power / alpha-root are entrywise; ``alpha`` is the interference
+tail index (estimated online via ``repro.core.tail_index`` in practice,
+Remark 3). With ``alpha == 2`` these reduce to standard AdaGrad / an
+Adam variant (eps inside the root), which the tests assert.
+
+Baselines implemented for the paper's comparisons: FedAvgM (server
+momentum SGD — the paper's main baseline) and plain FedAvg/SGD. A
+beyond-paper ``yogi_ota`` (sign-based second-moment update, Reddi et al.
+2020, generalized with the alpha-power) is provided as an extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ServerOptState(NamedTuple):
+    step: jax.Array          # scalar int32 round counter
+    delta: PyTree            # first moment Delta_t (momentum)
+    nu: PyTree               # second "moment" v_t (alpha-power accumulator)
+
+
+class ServerOptimizer(NamedTuple):
+    init: Callable[[PyTree], ServerOptState]
+    update: Callable[[PyTree, ServerOptState, PyTree], tuple]
+    name: str
+
+
+def _zeros_like_tree(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def _abs_pow(x: jax.Array, alpha) -> jax.Array:
+    """Entrywise |x|^alpha, safe at x == 0 for fractional alpha."""
+    ax = jnp.abs(x)
+    # |x|^alpha = exp(alpha*log|x|) underflows fine but grad at 0 is nan for
+    # alpha<1 in log-space; use power on the clamped value and zero-fill.
+    return jnp.where(ax == 0, jnp.zeros_like(ax), ax ** alpha)
+
+
+def _alpha_root(x: jax.Array, alpha) -> jax.Array:
+    """Entrywise x^{1/alpha} for x >= 0."""
+    return jnp.maximum(x, 0.0) ** (1.0 / alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    """Hyper-parameters of the ADOTA family (paper Sec. IV-B, Sec. VI)."""
+
+    optimizer: str = "adam_ota"   # adagrad_ota | adam_ota | fedavgm | fedavg | yogi_ota
+    lr: float = 1e-2              # eta
+    beta1: float = 0.9            # momentum on Delta_t
+    beta2: float = 0.3            # Adam-OTA amortization (paper fig.4 best: 0.3)
+    alpha: float = 1.5            # interference tail index used in v-update
+    eps: float = 1e-8             # ill-conditioning guard (inside the root)
+    momentum: float = 0.9         # FedAvgM server momentum
+
+
+def _apply_update(params: PyTree, delta: PyTree, nu: PyTree, lr, alpha, eps) -> PyTree:
+    def upd(w, d, v):
+        denom = _alpha_root(v + eps, alpha)
+        return (w - lr * d / denom).astype(w.dtype)
+    return jax.tree.map(upd, params, delta, nu)
+
+
+def adagrad_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """AdaGrad-OTA: cumulative alpha-power second moment (Eq. 9)."""
+
+    def init(params):
+        return ServerOptState(
+            step=jnp.zeros((), jnp.int32),
+            delta=_zeros_like_tree(params, jnp.float32),
+            nu=_zeros_like_tree(params, jnp.float32),
+        )
+
+    def update(g, state, params):
+        delta = jax.tree.map(
+            lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
+            state.delta, g)
+        nu = jax.tree.map(lambda v, d: v + _abs_pow(d, cfg.alpha), state.nu, delta)
+        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        return new_params, ServerOptState(state.step + 1, delta, nu)
+
+    return ServerOptimizer(init, update, "adagrad_ota")
+
+
+def adam_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """Adam-OTA: exponential-moving-average alpha-power second moment (Eq. 10)."""
+
+    def init(params):
+        return ServerOptState(
+            step=jnp.zeros((), jnp.int32),
+            delta=_zeros_like_tree(params, jnp.float32),
+            nu=_zeros_like_tree(params, jnp.float32),
+        )
+
+    def update(g, state, params):
+        delta = jax.tree.map(
+            lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
+            state.delta, g)
+        nu = jax.tree.map(
+            lambda v, d: cfg.beta2 * v + (1.0 - cfg.beta2) * _abs_pow(d, cfg.alpha),
+            state.nu, delta)
+        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        return new_params, ServerOptState(state.step + 1, delta, nu)
+
+    return ServerOptimizer(init, update, "adam_ota")
+
+
+def amsgrad_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """Beyond-paper: AMSGrad-style non-decreasing denominator with the
+    alpha-power. v follows Adam-OTA's EMA, but the stepsize divides by the
+    running MAX of v — restoring AdaGrad-OTA's monotone-stepsize property
+    (the ingredient behind its ln(T)/T^{1-1/a} guarantee) while keeping
+    Adam-OTA's recency weighting."""
+
+    def init(params):
+        z = _zeros_like_tree(params, jnp.float32)
+        return ServerOptState(step=jnp.zeros((), jnp.int32), delta=z,
+                              nu={"v": z, "vmax": _zeros_like_tree(
+                                  params, jnp.float32)})
+
+    def update(g, state, params):
+        delta = jax.tree.map(
+            lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
+            state.delta, g)
+        v = jax.tree.map(
+            lambda v_, d: cfg.beta2 * v_ + (1.0 - cfg.beta2) * _abs_pow(d, cfg.alpha),
+            state.nu["v"], delta)
+        vmax = jax.tree.map(jnp.maximum, state.nu["vmax"], v)
+        new_params = _apply_update(params, delta, vmax, cfg.lr, cfg.alpha,
+                                   cfg.eps)
+        return new_params, ServerOptState(state.step + 1, delta,
+                                          {"v": v, "vmax": vmax})
+
+    return ServerOptimizer(init, update, "amsgrad_ota")
+
+
+def yogi_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """Beyond-paper: Yogi-style additive second-moment with alpha-power.
+
+    v_t = v_{t-1} - (1-beta2) * sign(v_{t-1} - |Delta_t|^a) * |Delta_t|^a
+    Keeps the slow, sign-controlled v growth of Yogi (Zaheer et al. 2018 /
+    Reddi et al. 2020 FedYogi) while inheriting the heavy-tail-aware
+    alpha-power of ADOTA.
+    """
+
+    def init(params):
+        return ServerOptState(
+            step=jnp.zeros((), jnp.int32),
+            delta=_zeros_like_tree(params, jnp.float32),
+            nu=_zeros_like_tree(params, jnp.float32),
+        )
+
+    def update(g, state, params):
+        delta = jax.tree.map(
+            lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
+            state.delta, g)
+
+        def vupd(v, d):
+            da = _abs_pow(d, cfg.alpha)
+            return v - (1.0 - cfg.beta2) * jnp.sign(v - da) * da
+
+        nu = jax.tree.map(vupd, state.nu, delta)
+        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        return new_params, ServerOptState(state.step + 1, delta, nu)
+
+    return ServerOptimizer(init, update, "yogi_ota")
+
+
+def fedavgm(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """FedAvgM baseline (Hsu et al. 2019): server momentum SGD on g_t."""
+
+    def init(params):
+        return ServerOptState(
+            step=jnp.zeros((), jnp.int32),
+            delta=_zeros_like_tree(params, jnp.float32),
+            nu=jnp.zeros((), jnp.float32),   # unused
+        )
+
+    def update(g, state, params):
+        delta = jax.tree.map(
+            lambda d, gi: cfg.momentum * d + gi.astype(jnp.float32), state.delta, g)
+        new_params = jax.tree.map(
+            lambda w, d: (w - cfg.lr * d).astype(w.dtype), params, delta)
+        return new_params, ServerOptState(state.step + 1, delta, state.nu)
+
+    return ServerOptimizer(init, update, "fedavgm")
+
+
+def fedavg(cfg: AdaptiveConfig) -> ServerOptimizer:
+    """Plain FedAvg/SGD on the OTA gradient."""
+
+    def init(params):
+        return ServerOptState(
+            step=jnp.zeros((), jnp.int32),
+            delta=jnp.zeros((), jnp.float32),
+            nu=jnp.zeros((), jnp.float32),
+        )
+
+    def update(g, state, params):
+        new_params = jax.tree.map(
+            lambda w, gi: (w - cfg.lr * gi).astype(w.dtype), params, g)
+        return new_params, ServerOptState(state.step + 1, state.delta, state.nu)
+
+    return ServerOptimizer(init, update, "fedavg")
+
+
+_REGISTRY = {
+    "adagrad_ota": adagrad_ota,
+    "adam_ota": adam_ota,
+    "amsgrad_ota": amsgrad_ota,
+    "yogi_ota": yogi_ota,
+    "fedavgm": fedavgm,
+    "fedavg": fedavg,
+}
+
+
+def make_server_optimizer(cfg: AdaptiveConfig) -> ServerOptimizer:
+    if cfg.optimizer not in _REGISTRY:
+        raise ValueError(
+            f"unknown server optimizer {cfg.optimizer!r}; options: {sorted(_REGISTRY)}")
+    return _REGISTRY[cfg.optimizer](cfg)

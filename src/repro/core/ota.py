@@ -1,0 +1,149 @@
+"""Analog over-the-air (A-OTA) gradient aggregation (paper Eq. 7).
+
+    g_t = (1/N) * sum_n h_{n,t} * grad_n  +  xi_t
+
+Three mathematically-identical realisations, picked by deployment mode:
+
+1. ``ota_aggregate_stacked`` — *simulation*: per-client gradients stacked
+   along a leading axis (produced by ``jax.vmap``/``lax.map`` over
+   clients). Used by the CPU-sized paper-reproduction experiments.
+
+2. ``ota_psum`` — *explicit collective*: used inside ``shard_map`` where
+   each (pod, data) shard IS one client group. Each shard scales its local
+   gradient by its own fading draw, a ``psum`` performs the superposition
+   (the wireless MAC's "free sum" maps to one ICI all-reduce), and a
+   shared-seed interference vector is added identically on every shard so
+   replicas stay bit-identical.
+
+3. ``faded_loss_weights`` + ``add_interference`` — *autodiff form* for the
+   pjit/GSPMD path: since fading enters linearly,
+   ``(1/N) sum_n h_n grad f_n = grad_w [(1/N) sum_n h_n f_n(w)]``,
+   per-client fading is folded into per-example loss weights so a single
+   global backward pass under pjit yields the faded aggregate; the
+   interference is then added to the gradient pytree. This keeps XLA free
+   to fuse/shard the backward pass (no custom collective needed) and is
+   what the production ``train_step`` uses.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
+                                sample_fading, sample_interference)
+
+PyTree = Any
+
+
+def _leaf_keys(key: jax.Array, tree: PyTree) -> PyTree:
+    """One deterministic PRNG key per leaf, stable under pytree structure."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    return jax.tree.unflatten(treedef, keys)
+
+
+def add_interference(key: jax.Array, cfg: OTAChannelConfig, grads: PyTree) -> PyTree:
+    """Add i.i.d. symmetric alpha-stable interference xi_t to every entry."""
+    if not cfg.interference:
+        return grads
+    keys = _leaf_keys(key, grads)
+
+    def noisy(g, k):
+        xi = sample_interference(k, cfg, g.shape, dtype=jnp.float32)
+        return (g.astype(jnp.float32) + xi).astype(g.dtype)
+
+    return jax.tree.map(noisy, grads, keys)
+
+
+# ---------------------------------------------------------------------------
+# 1. Simulation path: stacked per-client gradients.
+# ---------------------------------------------------------------------------
+
+def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
+                          client_grads: PyTree) -> Tuple[PyTree, jax.Array]:
+    """OTA-aggregate gradients stacked on a leading client axis.
+
+    Args:
+      key: PRNG key for this communication round.
+      cfg: channel configuration.
+      client_grads: pytree whose leaves have shape (N, ...) — gradient of
+        client n at leaf[..., n, ...].
+
+    Returns:
+      (g_t, h): the noisy aggregated gradient pytree (leaf shape (...)) and
+      the fading draw h of shape (N,) (returned for logging/analysis).
+    """
+    n = jax.tree.leaves(client_grads)[0].shape[0]
+    kh, kx = jax.random.split(key)
+    h = sample_fading(kh, cfg, (n,))
+
+    def agg(g):
+        hb = h.reshape((n,) + (1,) * (g.ndim - 1)).astype(g.dtype)
+        return jnp.sum(hb * g, axis=0) / n
+
+    g_t = jax.tree.map(agg, client_grads)
+    return add_interference(kx, cfg, g_t), h
+
+
+# ---------------------------------------------------------------------------
+# 2. Explicit-collective path for shard_map (client == mesh shard group).
+# ---------------------------------------------------------------------------
+
+def ota_psum(local_grad: PyTree, key: jax.Array, cfg: OTAChannelConfig,
+             axis_names: Sequence[str]) -> PyTree:
+    """OTA aggregation as a collective; call inside ``shard_map``.
+
+    Each shard holds the gradient of its own client (group). The fading
+    coefficient of shard n is drawn by folding the shard's linear index
+    over ``axis_names`` into the round key, so every shard can compute all
+    coefficients without communication. The psum over ``axis_names``
+    realises the superposition; the interference is sampled from the
+    *round* key (not the shard key) and hence is identical on all shards,
+    exactly like the single RF front end of the server.
+    """
+    axis_names = tuple(axis_names)
+    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    n = math.prod(sizes)
+    # Linear client index of this shard.
+    idx = jnp.zeros((), jnp.int32)
+    for a, s in zip(axis_names, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    kh, kx = jax.random.split(key)
+    h_all = sample_fading(kh, cfg, (n,))
+    h_n = jax.lax.dynamic_index_in_dim(h_all, idx, keepdims=False)
+
+    scaled = jax.tree.map(lambda g: (h_n.astype(g.dtype) * g), local_grad)
+    summed = jax.lax.psum(scaled, axis_names)
+    g_t = jax.tree.map(lambda g: g / n, summed)
+    return add_interference(kx, cfg, g_t)
+
+
+# ---------------------------------------------------------------------------
+# 3. Autodiff path for pjit: fading as per-example loss weights.
+# ---------------------------------------------------------------------------
+
+def faded_loss_weights(key: jax.Array, cfg: OTAChannelConfig,
+                       client_ids: jax.Array, n_clients: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-example weights realising the faded average inside one backward.
+
+    With per-client batch size b and global batch B = N*b,
+    ``(1/N) sum_n h_n * mean_{i in B_n} l_i  =  mean_i  h_{c(i)} * l_i``.
+    So the weighted *mean* loss over the global batch with weights
+    ``h[client_ids]`` has gradient exactly equal to the faded OTA average
+    (before interference).
+
+    Args:
+      key: round key (the fading sub-draw is derived from it).
+      cfg: channel config.
+      client_ids: int32 (batch,) mapping each example row to its client.
+      n_clients: N.
+
+    Returns:
+      (weights, h): weights of shape (batch,) and the h draw (N,).
+    """
+    h = sample_fading(jax.random.fold_in(key, 0x0FAD), cfg, (n_clients,))
+    return h[client_ids], h

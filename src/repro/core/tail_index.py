@@ -1,0 +1,75 @@
+"""On-line estimation of the interference tail index alpha (paper Remark 3).
+
+The ADOTA update needs alpha both for the |Delta|^alpha accumulator and the
+alpha-root stepsize. The paper points to moment-type estimators for
+multivariate alpha-stable laws [42]; we implement the classic *log-moment*
+estimator (Ma & Nikias, 1995), which is simple, consistent, jit-able and
+needs only samples of the interference (e.g. measured on a quiet
+sub-carrier between rounds):
+
+For X ~ S(alpha, beta=0, c, 0):
+
+    E[log|X|]   = euler_gamma * (1/alpha - 1) + log c
+    Var[log|X|] = (pi^2 / 6) * (1/alpha^2 + 1/2)
+
+so  1/alpha^2 = 6 * Var[log|X|] / pi^2 - 1/2, clipped into alpha in (1, 2].
+A Hill-type order-statistics estimator is provided as a cross-check.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EULER = 0.5772156649015329
+
+
+def log_moment_estimate(samples: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Estimate (alpha, scale) of a symmetric alpha-stable law.
+
+    Args:
+      samples: 1-D array of i.i.d. draws (any float dtype).
+
+    Returns:
+      (alpha_hat, scale_hat), clipped to alpha in (1.01, 2.0].
+    """
+    x = jnp.abs(samples.astype(jnp.float32).reshape(-1))
+    x = jnp.maximum(x, jnp.finfo(jnp.float32).tiny)
+    lx = jnp.log(x)
+    mean, var = jnp.mean(lx), jnp.var(lx)
+    inv_a2 = jnp.maximum(6.0 * var / (math.pi**2) - 0.5, 1e-6)
+    alpha = jnp.clip(1.0 / jnp.sqrt(inv_a2), 1.01, 2.0)
+    scale = jnp.exp(mean - _EULER * (1.0 / alpha - 1.0))
+    return alpha, scale
+
+
+def hill_estimate(samples: jax.Array, k_frac: float = 0.05) -> jax.Array:
+    """Hill estimator of the tail index from the upper order statistics.
+
+    alpha_hat = k / sum_{i<k} (log X_(i) - log X_(k)) over the k largest
+    |samples|. Static ``k = max(8, k_frac * n)``. Biased for stable laws at
+    moderate n (the stable tail is only asymptotically Pareto) — used as a
+    sanity cross-check of the log-moment estimator, not in the optimizer.
+    """
+    x = jnp.abs(samples.astype(jnp.float32).reshape(-1))
+    n = x.shape[0]
+    k = max(8, int(k_frac * n))
+    top = jax.lax.top_k(x, k + 1)[0]
+    top = jnp.maximum(top, jnp.finfo(jnp.float32).tiny)
+    logs = jnp.log(top)
+    alpha = k / jnp.sum(logs[:k] - logs[k])
+    return jnp.clip(alpha, 0.5, 4.0)
+
+
+def estimate_from_gradient_residual(g_clean: jax.Array, g_noisy: jax.Array
+                                    ) -> Tuple[jax.Array, jax.Array]:
+    """Estimate alpha from the residual of a known-clean reference gradient.
+
+    In deployments where a narrowband pilot round is possible, the server
+    can difference a digitally-verified gradient against the OTA one; the
+    residual is (approximately) the interference vector.
+    """
+    return log_moment_estimate((g_noisy - g_clean).reshape(-1))

@@ -1,0 +1,8 @@
+from repro.data.partition import dirichlet_partition, heterogeneity_index, iid_partition
+from repro.data.pipeline import FederatedBatcher
+from repro.data.synthetic import (ClassificationData, gaussian_mixture,
+                                  lm_batches, synthetic_images, token_stream)
+
+__all__ = ["dirichlet_partition", "heterogeneity_index", "iid_partition",
+           "FederatedBatcher", "ClassificationData", "gaussian_mixture",
+           "lm_batches", "synthetic_images", "token_stream"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the ADOTA-FL hot spots.
+
+adaptive_update -- fused Delta/v/w server update (one HBM pass)
+ota_channel     -- fused fading-reduction + CMS alpha-stable interference
+flash_attention -- blocked causal/sliding-window GQA attention
+
+Each has a pure-jnp oracle in ref.py and a jit wrapper in ops.py.
+Kernels target TPU (BlockSpec VMEM tiling); on CPU they run via
+interpret=True (tests) -- the model/dry-run paths use the jnp refs.
+"""
+
+from repro.kernels.adaptive_update import adaptive_update_slab
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ota_channel import ota_channel_slab
+
+__all__ = ["adaptive_update_slab", "flash_attention", "ota_channel_slab"]

@@ -1,0 +1,96 @@
+"""Fused ADOTA server-update Pallas kernel.
+
+The ADOTA update (Eq. 8-11) is elementwise over every parameter:
+
+    Delta <- b1*Delta + (1-b1)*g
+    v     <- v + |Delta|^a            (or EMA for Adam-OTA)
+    w     <- w - lr * Delta / (v+eps)^{1/a}
+
+Naively chained in jnp this is ~10 HBM round-trips over 4 model-sized
+arrays; the fractional |.|^a and (.)^{1/a} powers (exp/log on the VPU)
+make it strictly memory-bound. The kernel performs the whole update in
+ONE read-modify-write pass per block: each grid step streams a
+(block_rows, 128) tile of {g, Delta, v, w} HBM->VMEM, does all the math
+in VMEM/VREGs, and writes the three outputs back.
+
+TPU is the target (bf16/f32 tiles aligned to the 8x128 VPU lanes); on
+this CPU container the kernel body is validated with interpret=True
+against ``ref.adaptive_update_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_ROWS = 256     # (256, 128) f32 tile = 128 KiB per operand
+
+
+def _adaptive_update_kernel(g_ref, delta_ref, nu_ref, w_ref,
+                            delta_out, nu_out, w_out,
+                            *, lr: float, beta1: float, beta2: float,
+                            alpha: float, eps: float, adagrad: bool):
+    g = g_ref[...].astype(jnp.float32)
+    delta = beta1 * delta_ref[...] + (1.0 - beta1) * g
+    da = jnp.exp(alpha * jnp.log(jnp.maximum(jnp.abs(delta), 1e-30)))
+    da = jnp.where(delta == 0.0, 0.0, da)
+    if adagrad:
+        nu = nu_ref[...] + da
+    else:
+        nu = beta2 * nu_ref[...] + (1.0 - beta2) * da
+    denom = jnp.exp(jnp.log(nu + eps) / alpha)
+    w = w_ref[...].astype(jnp.float32) - lr * delta / denom
+    delta_out[...] = delta
+    nu_out[...] = nu
+    w_out[...] = w.astype(w_out.dtype)
+
+
+def adaptive_update_slab(g: jax.Array, delta: jax.Array, nu: jax.Array,
+                         w: jax.Array, *, lr: float, beta1: float,
+                         beta2: float, alpha: float, eps: float, mode: str,
+                         block_rows: int = DEFAULT_BLOCK_ROWS,
+                         interpret: bool = True
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused update on a 1-D parameter slab (any length; padded to lanes).
+
+    g/w may be bf16 or f32; delta/nu are f32 state. Returns (delta', nu', w').
+    """
+    n = g.shape[0]
+    rows = -(-n // LANE)
+    rows_pad = -(-rows // block_rows) * block_rows
+    total = rows_pad * LANE
+
+    def shape2d(x, dt=None):
+        x = jnp.pad(x, (0, total - n))
+        return x.reshape(rows_pad, LANE).astype(dt or x.dtype)
+
+    g2 = shape2d(g)
+    d2 = shape2d(delta, jnp.float32)
+    v2 = shape2d(nu, jnp.float32)
+    w2 = shape2d(w)
+
+    grid = (rows_pad // block_rows,)
+    blk = lambda dt: pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    kernel = functools.partial(
+        _adaptive_update_kernel, lr=lr, beta1=beta1, beta2=beta2,
+        alpha=alpha, eps=eps, adagrad=(mode == "adagrad"))
+    d_new, v_new, w_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk(None)] * 4,
+        out_specs=[blk(None)] * 3,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows_pad, LANE), w.dtype),
+        ],
+        interpret=interpret,
+    )(g2, d2, v2, w2)
+    unpad = lambda x2, dt: x2.reshape(-1)[:n].astype(dt)
+    return (unpad(d_new, jnp.float32), unpad(v_new, jnp.float32),
+            unpad(w_new, w.dtype))

@@ -1,0 +1,122 @@
+"""Blocked causal GQA flash-attention Pallas kernel (TPU target).
+
+Standard online-softmax tiling adapted to the TPU memory hierarchy:
+the grid is (batch, q_head, q_block, kv_block) with the kv_block axis
+innermost (sequential on TPU), so the running max / normaliser / output
+accumulator live in VMEM scratch across kv steps — the classic
+HBM-O(S) / VMEM-O(block^2) flash scheme. Q/K/V tiles are (bq, D) /
+(bk, D) with D the head dim (padded to the 128 MXU lane); GQA is
+expressed in the K/V BlockSpec index_map (query head h reads kv head
+h // group) so no K/V duplication ever hits VMEM.
+
+Supports causal masking and sliding-window masking (window w ->
+kv blocks outside [q - w, q] are masked; the mask math is in-register).
+Validated in interpret mode against ``ref.flash_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, bq: int, bk: int, n_kv_blocks: int, scale: float,
+                  causal: bool, window: Optional[int], seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)              # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = k_pos < seq_k
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0.
+    Returns (B, Sq, H, D) in q.dtype."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    assert h % kh == 0
+    group = h // kh
+    scale = 1.0 / math.sqrt(d)
+
+    sq_pad = -(-sq // bq) * bq
+    sk_pad = -(-sk // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+    # (B, H, S, D) layout for clean per-(b, h) tiles.
+    qp = qp.transpose(0, 2, 1, 3)
+    kp = kp.transpose(0, 2, 1, 3)
+    vp = vp.transpose(0, 2, 1, 3)
+
+    n_q, n_k = sq_pad // bq, sk_pad // bk
+    grid = (b, h, n_q, n_k)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_kv_blocks=n_k, scale=scale,
+        causal=causal, window=window, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.transpose(0, 2, 1, 3)[:, :sq]

@@ -1,0 +1,73 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``fused_server_update`` is the production entry point: it applies the
+fused ADOTA update kernel leaf-by-leaf over the parameter pytree (each
+leaf flattened to a slab), replacing the ~10-pass jnp expression chain
+of ``repro.core.adaptive`` with one read-modify-write HBM pass. The jnp
+reference implementations remain the default on non-TPU backends; the
+kernels run in interpret mode there (tests) and compiled on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import ServerOptState
+from repro.kernels.adaptive_update import adaptive_update_slab
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ota_channel import ota_channel_slab
+
+PyTree = Any
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "beta1", "beta2", "alpha",
+                                             "eps", "mode", "interpret"))
+def fused_server_update(g: PyTree, state: ServerOptState, params: PyTree, *,
+                        lr: float, beta1: float, beta2: float, alpha: float,
+                        eps: float, mode: str = "adam",
+                        interpret: bool = True
+                        ) -> Tuple[PyTree, ServerOptState]:
+    """Kernel-fused equivalent of adagrad_ota/adam_ota .update()."""
+
+    def leaf(gl, dl, vl, wl):
+        shape = wl.shape
+        dn, vn, wn = adaptive_update_slab(
+            gl.reshape(-1), dl.reshape(-1), vl.reshape(-1), wl.reshape(-1),
+            lr=lr, beta1=beta1, beta2=beta2, alpha=alpha, eps=eps,
+            mode=mode, interpret=interpret)
+        return dn.reshape(shape), vn.reshape(shape), wn.reshape(shape)
+
+    flat_g, treedef = jax.tree.flatten(g)
+    flat_d = treedef.flatten_up_to(state.delta)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_w = treedef.flatten_up_to(params)
+    outs = [leaf(*t) for t in zip(flat_g, flat_d, flat_v, flat_w)]
+    delta = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    nu = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_w = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return new_w, ServerOptState(state.step + 1, delta, nu)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "scale", "interpret"))
+def fused_ota_aggregate(grads: jax.Array, h: jax.Array, key: jax.Array, *,
+                        alpha: float, scale: float,
+                        interpret: bool = True) -> jax.Array:
+    """Kernel-fused OTA MAC on stacked client gradients (N, d)."""
+    import math
+    d = grads.shape[1]
+    ku, ke = jax.random.split(key)
+    u = jax.random.uniform(ku, (d,), jnp.float32,
+                           -math.pi / 2 + 1e-6, math.pi / 2 - 1e-6)
+    e = -jnp.log(jax.random.uniform(ke, (d,), jnp.float32,
+                                    minval=jnp.finfo(jnp.float32).tiny))
+    return ota_channel_slab(grads, h, u, e, alpha=alpha, scale=scale,
+                            interpret=interpret)
+
+
+causal_flash_attention = jax.jit(
+    functools.partial(flash_attention, causal=True),
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref`` side of the
+kernel allclose tests, and the fallback path on non-TPU backends)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adaptive_update_ref(g: jax.Array, delta: jax.Array, nu: jax.Array,
+                        w: jax.Array, *, lr: float, beta1: float,
+                        beta2: float, alpha: float, eps: float,
+                        mode: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One ADOTA server update on a flat parameter slab (paper Eq. 8-11).
+
+    mode: "adagrad" -> v += |Delta|^a ; "adam" -> v = b2 v + (1-b2)|Delta|^a.
+    All state in f32; w keeps its dtype.
+    """
+    gf = g.astype(jnp.float32)
+    delta = beta1 * delta + (1.0 - beta1) * gf
+    da = jnp.abs(delta) ** alpha
+    if mode == "adagrad":
+        nu = nu + da
+    elif mode == "adam":
+        nu = beta2 * nu + (1.0 - beta2) * da
+    else:
+        raise ValueError(mode)
+    denom = (nu + eps) ** (1.0 / alpha)
+    w_new = (w.astype(jnp.float32) - lr * delta / denom).astype(w.dtype)
+    return delta, nu, w_new
+
+
+def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
+                    e: jax.Array, *, alpha: float, scale: float
+                    ) -> jax.Array:
+    """Fused OTA MAC on a slab: (1/N) sum_n h_n grads[n] + xi, where xi is
+    the CMS transform of uniform angles u in (-pi/2, pi/2) and Exp(1)
+    draws e (both shape (d,)).
+
+    grads: (N, d); h: (N,). Returns (d,) float32.
+    """
+    n = grads.shape[0]
+    agg = jnp.einsum("n,nd->d", h.astype(jnp.float32),
+                     grads.astype(jnp.float32)) / n
+    a = alpha
+    xi = (jnp.sin(a * u) / jnp.cos(u) ** (1.0 / a)
+          * (jnp.cos((1.0 - a) * u) / jnp.maximum(e, 1e-7))
+          ** ((1.0 - a) / a))
+    return agg + scale * xi
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """Masked GQA attention oracle. q: (B,Sq,H,D); k,v: (B,Sk,K,D)."""
+    b, sq, hn, d = q.shape
+    kheads = k.shape[2]
+    g = hn // kheads
+    qg = q.reshape(b, sq, kheads, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / math.sqrt(d)
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    dpos = qpos[:, None] - kpos[None, :]
+    ok = jnp.ones_like(dpos, bool)
+    if causal:
+        ok &= dpos >= 0
+    if window is not None:
+        ok &= dpos < window
+    scores = jnp.where(ok[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hn, d).astype(q.dtype)

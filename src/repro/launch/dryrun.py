@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) program
+on the production mesh with 512 placeholder host devices, and record the
+roofline inputs (FLOPs, bytes, per-collective bytes, memory analysis).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single --out results/dryrun/x.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full matrix
+
+The XLA flag above MUST precede any jax import (jax locks the device
+count at first backend init) — which is why it is the first statement of
+this module and why nothing else in the package sets it.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import INPUT_SHAPES, shape_config
+from repro.launch.steps import RunConfig, build_step
+
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+          "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+          "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-op output bytes summed over the compiled module.
+
+    Lines look like:  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), ...
+    The RESULT type (before the '=') is the data moved; '-start' variants
+    are counted, '-done' skipped (same tensor).
+    """
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for c in _COLLECTIVES:
+            if (f" {c}(" in line or f" {c}-start(" in line):
+                parts = line.split(" = ", 1)
+                if len(parts) == 2:
+                    rhs = parts[1]
+                    # result TYPE is everything before the op token (handles
+                    # tuple-typed results like "(f32[8], f32[8]) all-to-all(")
+                    idx = rhs.find(f" {c}")
+                    type_str = rhs[:idx] if idx > 0 else rhs.split("(", 1)[0]
+                    out[c] += _shape_bytes(type_str)
+                break
+    return out
+
+
+def _depth_variant(cfg, units: int):
+    """Same arch at reduced depth with unrolled scans (for calibration)."""
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, n_layers=cfg.cross_attn_period * units,
+                                   scan_unroll=True)
+    if cfg.family == "encdec":
+        return dataclasses.replace(cfg, n_layers=units, n_enc_layers=units,
+                                   scan_unroll=True)
+    return dataclasses.replace(cfg, n_layers=units, scan_unroll=True)
+
+
+def _full_units(cfg) -> int:
+    if cfg.family == "vlm":
+        return cfg.n_layers // cfg.cross_attn_period
+    return cfg.n_layers
+
+
+def _measure(cfg, mesh, run: RunConfig, shape_name: str) -> Dict:
+    """Lower+compile one program; return cost/collective metrics."""
+    pieces = build_step(cfg, mesh, run, shape_name)
+    with mesh:   # ambient mesh: enables with_sharding_constraint in-model
+        jitted = jax.jit(pieces.step_fn, in_shardings=pieces.in_shardings,
+                         out_shardings=pieces.out_shardings,
+                         donate_argnums=pieces.donate_argnums)
+        lowered = jitted.lower(*pieces.args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out = dict(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collectives=colls,
+    )
+    if mem is not None:
+        out["memory"] = dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", -1)),
+            output_bytes=int(getattr(mem, "output_size_in_bytes", -1)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", -1)),
+            generated_code_bytes=int(
+                getattr(mem, "generated_code_size_in_bytes", -1)),
+        )
+    return out
+
+
+def calibrate(cfg, mesh, run: RunConfig, shape_name: str) -> Dict:
+    """Per-layer cost calibration: XLA cost analysis counts while (scan)
+    bodies ONCE, so the full-depth scanned program under-reports. We
+    compile depth-2 and depth-4 *unrolled* variants at full width and
+    extrapolate each metric linearly in depth:
+
+        metric(L) = fixed + per_layer * L
+
+    (exact for layer-homogeneous stacks; embed/unembed/xent/optimizer
+    tails land in `fixed`).
+    """
+    u2, u4 = 1, 2
+    if cfg.family not in ("vlm",):
+        u2, u4 = 2, 4
+    m2 = _measure(_depth_variant(cfg, u2), mesh, run, shape_name)
+    m4 = _measure(_depth_variant(cfg, u4), mesh, run, shape_name)
+    units = _full_units(cfg)
+
+    def extrap(a, b):
+        per = (b - a) / (u4 - u2)
+        fixed = a - per * u2
+        return max(fixed + per * units, 0.0)
+
+    out = dict(
+        flops=extrap(m2["flops"], m4["flops"]),
+        bytes_accessed=extrap(m2["bytes_accessed"], m4["bytes_accessed"]),
+        collectives={c: extrap(m2["collectives"][c], m4["collectives"][c])
+                     for c in m2["collectives"]},
+        calib_points={"u2": u2, "u4": u4, "m2": m2["flops"], "m4": m4["flops"]},
+    )
+    out["collective_bytes"] = float(sum(out["collectives"].values()))
+    return out
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            run: RunConfig, do_calibrate: bool = True,
+            overrides: Optional[Dict] = None) -> Dict:
+    rec: Dict = dict(arch=arch, shape=shape_name,
+                     mesh="multi" if multi_pod else "single",
+                     optimizer=run.adaptive.optimizer, fsdp=run.fsdp,
+                     shard_cache_seq=run.shard_cache_seq,
+                     state_dtype=run.state_dtype, ok=False,
+                     overrides=overrides or {})
+    t0 = time.time()
+    try:
+        base_cfg = get_config(arch)
+        if overrides:
+            base_cfg = dataclasses.replace(base_cfg, **overrides)
+        cfg = shape_config(base_cfg, shape_name)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        pieces = build_step(base_cfg, mesh, run, shape_name)
+        with mesh:   # ambient mesh for in-model sharding constraints
+            jitted = jax.jit(pieces.step_fn, in_shardings=pieces.in_shardings,
+                             out_shardings=pieces.out_shardings,
+                             donate_argnums=pieces.donate_argnums)
+            lowered = jitted.lower(*pieces.args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        cost = compiled.cost_analysis() or {}
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+        colls = collective_bytes(text)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            # NOTE: scanned-body costs counted once by XLA — see `calibrated`.
+            flops_per_device_scanned=float(cost.get("flops", -1.0)),
+            bytes_per_device_scanned=float(cost.get("bytes accessed", -1.0)),
+            collectives_scanned=colls,
+            n_params=cfg.n_params(),
+            n_active_params=cfg.n_active_params(),
+            window=cfg.window,
+        )
+        if mem is not None:
+            rec["memory"] = dict(
+                argument_bytes=int(getattr(mem, "argument_size_in_bytes", -1)),
+                output_bytes=int(getattr(mem, "output_size_in_bytes", -1)),
+                temp_bytes=int(getattr(mem, "temp_size_in_bytes", -1)),
+                generated_code_bytes=int(
+                    getattr(mem, "generated_code_size_in_bytes", -1)),
+            )
+        del compiled, lowered, text
+        if do_calibrate:
+            rec["calibrated"] = calibrate(cfg, mesh, run, shape_name)
+    except Exception as e:  # noqa: BLE001 — record and continue the matrix
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=10)
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full 10x4 matrix on --mesh")
+    ap.add_argument("--optimizer", default="adam_ota")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--shard-cache-seq", action="store_true")
+    ap.add_argument("--state-dtype", default="float32")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value (perf experiments)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.core.adaptive import AdaptiveConfig
+    run = RunConfig(
+        adaptive=AdaptiveConfig(optimizer=args.optimizer),
+        fsdp=args.fsdp, shard_cache_seq=args.shard_cache_seq,
+        state_dtype=args.state_dtype)
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = eval(v, {}, {})   # ints/floats/None/True
+        except Exception:
+            pass
+        overrides[k] = v
+
+    combos = ([(a, s) for a in ARCHS for s in INPUT_SHAPES] if args.all
+              else [(args.arch, args.shape)])
+    results = []
+    for arch, shape_name in combos:
+        rec = run_one(arch, shape_name, args.mesh == "multi", run,
+                      do_calibrate=not args.no_calibrate,
+                      overrides=overrides or None)
+        status = "OK " if rec["ok"] else "FAIL"
+        cal = rec.get("calibrated", {})
+        print(f"[{status}] {arch:24s} {shape_name:12s} {args.mesh:6s} "
+              f"{rec.get('total_s', 0):7.1f}s "
+              f"flops/dev={cal.get('flops', rec.get('flops_per_device_scanned', 0)):.3e} "
+              f"coll={cal.get('collective_bytes', 0):.3e}B"
+              + ("" if rec["ok"] else f"  {rec.get('error', '')[:120]}"),
+              flush=True)
+        results.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results if args.all or len(results) > 1 else results[0],
+                      f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module touches no jax device state — jax locks the device count at first
+backend init, and only ``dryrun.py`` sets the 512-host-device XLA flag.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one 256-chip v5e pod) or 2x16x16 (two pods).
+
+    Axes: "data" carries the FL clients (one client group per data
+    shard), "model" carries tensor/expert parallelism, "pod" is the
+    cross-pod data/FSDP axis in the multi-pod deployment.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """The client-carrying axes of a mesh (everything except "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_clients_of(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a batch of prompts, then decode
+autoregressively with the per-family cache (ring KV / MLA latent /
+recurrent state).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b \
+        --preset tiny --batch 4 --prompt-len 64 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.launch.train import preset_config
+from repro.models.model import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen3-14b")
+    ap.add_argument("--preset", choices=["tiny", "100m", "full"],
+                    default="tiny")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = preset_config(args.arch, args.preset)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    b, s = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (b, s), 0,
+                                          cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["audio_embed"] = jax.random.normal(
+            jax.random.key(2), (b, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.random.normal(
+            jax.random.key(2), (b, cfg.n_img_tokens, cfg.d_model),
+            jnp.bfloat16)
+
+    total = s + args.gen + cfg.n_meta_tokens
+    length = min(total, cfg.window) if cfg.window else total
+
+    t0 = time.time()
+    logits, cache = model.prefill(params, batch, length=length)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok, jnp.asarray(s + i))
+        if args.temperature > 0:
+            key = jax.random.fold_in(jax.random.key(args.seed + 2), i)
+            tok = jax.random.categorical(
+                key, logits[:, -1] / args.temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={cfg.arch} prefill {s} toks x{b}: {t_prefill*1e3:.1f} ms; "
+          f"decode {args.gen} toks: {t_decode*1e3:.1f} ms "
+          f"({t_decode/max(args.gen-1,1)*1e3:.2f} ms/tok)")
+    print("generated ids[0,:16]:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Input ShapeDtypeStructs + PartitionSpecs for every (arch x shape).
+
+The four assigned input shapes (see DESIGN.md §5):
+
+    train_4k     seq 4096,   global batch 256   -> train_step
+    prefill_32k  seq 32768,  global batch 32    -> prefill
+    decode_32k   seq 32768,  global batch 128   -> decode_step (1 token)
+    long_500k    seq 524288, global batch 1     -> decode_step, sub-quadratic
+
+No arrays are allocated here — everything is ShapeDtypeStruct, matching
+the dry-run contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig
+
+PyTree = Any
+
+INPUT_SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+LONG_CONTEXT_WINDOW = 4096   # beyond-paper sliding window for dense archs
+
+
+def shape_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Arch config adjusted for an input shape.
+
+    long_500k requires sub-quadratic attention: SSM/RWKV archs are
+    natively O(1)-state; dense/MoE/encdec archs get the sliding-window
+    variant (window=4096) if they don't already have a native window.
+    """
+    if shape_name == "long_500k" and cfg.family not in ("rwkv",):
+        if cfg.window is None:
+            cfg = dataclasses.replace(cfg, window=LONG_CONTEXT_WINDOW,
+                                      notes=cfg.notes + " +window4k(long)")
+    return cfg
+
+
+def _dp(mesh, batch: int) -> Optional[Tuple[str, ...]]:
+    """Data axes usable for this batch size (None if not divisible)."""
+    axes = tuple(a for a in mesh.axis_names if a != "model")
+    total = math.prod(mesh.shape[a] for a in axes)
+    return axes if batch % total == 0 else None
+
+
+def cache_length(cfg: ModelConfig, seq: int) -> int:
+    return min(seq, cfg.window) if cfg.window else seq
+
+
+def batch_struct(cfg: ModelConfig, shape_name: str, mesh
+                 ) -> Tuple[PyTree, PyTree]:
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for the data batch."""
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    dp = _dp(mesh, b)
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    specs = {"tokens": P(dp, None)}
+    if cfg.family == "encdec":
+        batch["audio_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq, cfg.d_model), jnp.float32)
+        specs["audio_embed"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        specs["image_embed"] = P(dp, None, None)
+    return batch, specs
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def cache_partition_spec(cache_shapes: PyTree, mesh, batch: int,
+                         model_divides, shard_cache_seq: bool = False
+                         ) -> PyTree:
+    """Assign PartitionSpecs to decode-cache leaves by name + trailing
+    dims. Leading stacked layer/group axes are replicated.
+
+    shard_cache_seq: additionally shard the KV-cache sequence dim over
+    "model" (flash-decoding-style split-KV — a §Perf lever for the
+    decode shapes; GSPMD inserts the partial-softmax collectives).
+    """
+    dp = _dp(mesh, batch)
+    m = "model"
+
+    def assign(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        sp = [None] * nd
+
+        def set_at(i, ax, dim):
+            if ax and dim % (math.prod(mesh.shape[a] for a in
+                                       ((ax,) if isinstance(ax, str) else ax))
+                             ) == 0:
+                sp[i] = ax
+
+        if name in ("k", "v"):                     # (..., B, S, K, D)
+            set_at(nd - 4, dp, leaf.shape[nd - 4])
+            if shard_cache_seq and model_divides(leaf.shape[nd - 3]):
+                sp[nd - 3] = m
+        elif name in ("c_kv", "k_pe"):             # (..., B, S, r)
+            set_at(nd - 3, dp, leaf.shape[nd - 3])
+            if shard_cache_seq and model_divides(leaf.shape[nd - 2]):
+                sp[nd - 2] = m
+        elif name == "state":                      # (..., B, H, D, D)
+            set_at(nd - 4, dp, leaf.shape[nd - 4])
+            if model_divides(leaf.shape[nd - 3]):
+                sp[nd - 3] = m
+        elif name in ("x_tm", "x_cm"):             # (..., B, d)
+            set_at(nd - 2, dp, leaf.shape[nd - 2])
+            if model_divides(leaf.shape[nd - 1]):
+                sp[nd - 1] = m
+        elif name == "h":                          # (..., B, C, N)
+            set_at(nd - 3, dp, leaf.shape[nd - 3])
+            if model_divides(leaf.shape[nd - 2]):
+                sp[nd - 2] = m
+        elif name == "conv":                       # (..., B, K, C)
+            set_at(nd - 3, dp, leaf.shape[nd - 3])
+            if model_divides(leaf.shape[nd - 1]):
+                sp[nd - 1] = m
+        elif name in ("enc_out", "image_embed"):   # (B, S, d)
+            set_at(0, dp, leaf.shape[0])
+        # "pos" and anything else: replicated.
+        return P(*sp)
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shapes)
+
+
+def named(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,192 @@
+"""Step builders: the four lowered programs of the dry-run matrix, with
+their in/out shardings, assembled for ``jax.jit`` under a production mesh.
+
+The training step IS the paper's Algorithm 1 mapped onto the mesh:
+every (pod, data) shard group is one FL client; per-client Rayleigh
+fading enters as per-example loss weights (exactly equivalent to scaling
+each client's gradient — fading is linear); the gradient all-reduce that
+GSPMD inserts across the data axes realises the over-the-air
+superposition; the shared-seed alpha-stable interference is added to the
+aggregated gradient; then the ADOTA adaptive update runs on the (model-
+sharded) server state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.adaptive import AdaptiveConfig, make_server_optimizer
+from repro.core.channel import OTAChannelConfig
+from repro.core.ota import add_interference, faded_loss_weights
+from repro.launch import specs as S
+from repro.launch.mesh import data_axes, n_clients_of
+from repro.models.model import ModelConfig, build_model, partition_spec
+from repro.models.moe import set_moe_sharding
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Distribution & optimizer knobs for a launch."""
+    channel: OTAChannelConfig = OTAChannelConfig()
+    adaptive: AdaptiveConfig = AdaptiveConfig(optimizer="adam_ota")
+    fsdp: bool = False               # additionally shard params over data
+    shard_cache_seq: bool = False    # split-KV decode (perf lever)
+    state_dtype: str = "float32"     # ADOTA Delta/nu dtype (bf16 = mem lever)
+
+
+class LoweredPieces(NamedTuple):
+    step_fn: Any
+    args: tuple            # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _param_shardings(cfg: ModelConfig, mesh, model, fsdp: bool,
+                     decode: bool = False):
+    pshape = jax.eval_shape(model.init, jax.random.key(0))
+    msize = mesh.shape["model"]
+    daxes = data_axes(mesh)
+    fsdp_axis = daxes if fsdp else None
+    fsdp_size = math.prod(mesh.shape[a] for a in daxes) if fsdp else 1
+    pspec = partition_spec(cfg, pshape, "model", msize,
+                           fsdp_axis=fsdp_axis, fsdp_size=fsdp_size,
+                           ctr_heads=decode)
+    return pshape, pspec
+
+
+def _opt_state_struct(opt, pshape, pspec, state_dtype):
+    """eval_shape of opt.init over params + matching shardings."""
+    sshape = jax.eval_shape(opt.init, pshape)
+
+    def respec(leaf):
+        # scalar state entries replicate; tensors mirror the param spec.
+        return leaf
+    # delta/nu mirror the params tree when non-scalar.
+    def spec_like(sub):
+        if hasattr(sub, "shape") and sub.shape == ():
+            return P()
+        return None
+    # Build spec tree with same structure as sshape.
+    def build(shape_leaf, path_spec):
+        return path_spec
+    # delta & nu either mirror params or are scalars (fedavg variants).
+    import jax.tree_util as jtu
+    delta_spec = (pspec if jtu.tree_structure(sshape.delta)
+                  == jtu.tree_structure(pshape) else P())
+    nu_spec = (pspec if jtu.tree_structure(sshape.nu)
+               == jtu.tree_structure(pshape) else P())
+    from repro.core.adaptive import ServerOptState
+    sspec = ServerOptState(step=P(), delta=delta_spec, nu=nu_spec)
+    if state_dtype != "float32":
+        dt = jnp.dtype(state_dtype)
+        sshape = ServerOptState(
+            step=sshape.step,
+            delta=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dt),
+                               sshape.delta),
+            nu=jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, dt),
+                            sshape.nu))
+    return sshape, sspec
+
+
+def build_train_step(cfg: ModelConfig, mesh, run: RunConfig) -> LoweredPieces:
+    model = build_model(cfg)
+    opt = make_server_optimizer(run.adaptive)
+    n_clients = n_clients_of(mesh)
+    batch_shape, batch_spec = S.batch_struct(cfg, "train_4k", mesh)
+    b = batch_shape["tokens"].shape[0]
+    # batch row -> client id (contiguous blocks, matching how the data
+    # pipeline shards client batches onto data shards).
+    client_ids = jnp.arange(b, dtype=jnp.int32) * n_clients // b
+
+    def train_step(params, opt_state, key, batch):
+        k_fade, k_noise = jax.random.split(key)
+
+        def loss_fn(p):
+            w, _ = faded_loss_weights(k_fade, run.channel, client_ids,
+                                      n_clients)
+            return model.loss_fn(p, batch, weights=w)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        g_t = add_interference(k_noise, run.channel, grads)   # Eq. (7)
+        new_params, new_state = opt.update(g_t, opt_state, params)
+        return new_params, new_state, loss
+
+    pshape, pspec = _param_shardings(cfg, mesh, model, run.fsdp)
+    sshape, sspec = _opt_state_struct(opt, pshape, pspec, run.state_dtype)
+    key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    args = (pshape, sshape, key_s, batch_shape)
+    in_sh = (S.named(mesh, pspec), S.named(mesh, sspec),
+             NamedSharding(mesh, P()), S.named(mesh, batch_spec))
+    out_sh = (S.named(mesh, pspec), S.named(mesh, sspec),
+              NamedSharding(mesh, P()))
+    return LoweredPieces(train_step, args, in_sh, out_sh)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, run: RunConfig) -> LoweredPieces:
+    model = build_model(cfg)
+    batch_shape, batch_spec = S.batch_struct(cfg, "prefill_32k", mesh)
+    b, s = batch_shape["tokens"].shape
+    length = S.cache_length(cfg, s)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, length=length)
+
+    pshape, pspec = _param_shardings(cfg, mesh, model, run.fsdp)
+    args = (pshape, batch_shape)
+    in_sh = (S.named(mesh, pspec), S.named(mesh, batch_spec))
+    # Output: (logits, cache) — let the compiler choose (UNSPECIFIED).
+    return LoweredPieces(prefill_step, args, in_sh, None)
+
+
+def build_decode_step(cfg: ModelConfig, mesh, run: RunConfig,
+                      shape_name: str) -> LoweredPieces:
+    model = build_model(cfg)
+    sh = S.INPUT_SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    length = S.cache_length(cfg, s) + (cfg.n_meta_tokens or 0)
+
+    cache_shape = jax.eval_shape(
+        functools.partial(model.init_cache, b, length))
+    msize = mesh.shape["model"]
+    cache_spec = S.cache_partition_spec(
+        cache_shape, mesh, b, lambda n: n % msize == 0,
+        shard_cache_seq=run.shard_cache_seq)
+
+    def decode_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    pshape, pspec = _param_shardings(cfg, mesh, model, run.fsdp, decode=True)
+    dp = S._dp(mesh, b)
+    token_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (pshape, cache_shape, token_s, pos_s)
+    in_sh = (S.named(mesh, pspec), S.named(mesh, cache_spec),
+             NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(dp, None, None)),
+              S.named(mesh, cache_spec))
+    # Donate the cache: the decode step updates it in place (no copy of
+    # the multi-GB KV buffer per token).
+    return LoweredPieces(decode_step, args, in_sh, out_sh,
+                         donate_argnums=(1,))
+
+
+def build_step(cfg: ModelConfig, mesh, run: RunConfig, shape_name: str
+               ) -> LoweredPieces:
+    cfg = S.shape_config(cfg, shape_name)
+    set_moe_sharding(mesh, data_axes(mesh), "model")
+    kind = S.INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return build_train_step(cfg, mesh, run)
+    if kind == "prefill":
+        return build_prefill_step(cfg, mesh, run)
+    return build_decode_step(cfg, mesh, run, shape_name)

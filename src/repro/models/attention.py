@@ -1,0 +1,313 @@
+"""Attention: MHA/GQA, causal + sliding-window masking, KV-cache decode,
+cross-attention, and a chunked online-softmax path (pure-JAX flash) that
+bounds the score-matrix working set — the memory-roofline lever used in
+§Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_rope, dense, dense_init, rmsnorm,
+                                 rmsnorm_init)
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window size; None = full
+    causal: bool = True
+    kv_chunk: Optional[int] = None        # online-softmax KV chunk (perf lever)
+    window_block: bool = False            # block-local windowed attention:
+                                          # Q in window-sized blocks, keys =
+                                          # {prev, self} blocks only. O(S*W)
+                                          # scores instead of O(S^2) or
+                                          # O(S*chunk)*n_chunks (perf lever)
+
+
+def attn_init(key, cfg: AttentionConfig, dtype=jnp.bfloat16) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, (cfg.n_heads, cfg.head_dim), dtype,
+                         use_bias=cfg.qkv_bias),
+        "wk": dense_init(kk, cfg.d_model, (cfg.n_kv_heads, cfg.head_dim), dtype,
+                         use_bias=cfg.qkv_bias),
+        "wv": dense_init(kv, cfg.d_model, (cfg.n_kv_heads, cfg.head_dim), dtype,
+                         use_bias=cfg.qkv_bias),
+        "wo": dense_init(ko, cfg.n_heads * cfg.head_dim, (cfg.d_model,), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim)
+    return p
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int], k_valid: Optional[jax.Array] = None
+               ) -> jax.Array:
+    """Additive mask bias (..., S_q, S_k) from query/key absolute positions."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float) -> jax.Array:
+    """q: (B,Sq,H,D), k: (B,Sk,K,D) -> scores (B,K,G,Sq,Sk) with H = K*G."""
+    b, sq, h, d = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, sq, kheads, g, d)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                      k.astype(jnp.float32),
+                      preferred_element_type=jnp.float32) * scale
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, out_dtype) -> jax.Array:
+    """probs: (B,K,G,Sq,Sk), v: (B,Sk,K,D) -> (B,Sq,H,D)."""
+    b, kheads, g, sq, _ = probs.shape
+    o = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return o.reshape(b, sq, kheads * g, v.shape[-1]).astype(out_dtype)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, q_pos: jax.Array,
+           k_pos: jax.Array, causal: bool, window: Optional[int],
+           k_valid: Optional[jax.Array] = None,
+           kv_chunk: Optional[int] = None,
+           window_block: bool = False) -> jax.Array:
+    """Masked GQA attention. Shapes: q (B,Sq,H,D); k,v (B,Sk,K,D);
+    q_pos (B,Sq) or (Sq,); k_pos (B,Sk) or (Sk,); k_valid optional (B,Sk).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if (window_block and window is not None and causal
+            and q.shape[1] == k.shape[1] and q.shape[1] > 2 * window
+            and k_valid is None):
+        return _attend_window_blocked(q, k, v, window, scale)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None, :]
+    if kv_chunk is not None and k.shape[1] > kv_chunk:
+        # chunked layout requires per-batch position rows
+        k_pos_b = jnp.broadcast_to(k_pos, (k.shape[0], k.shape[1]))
+        return _attend_chunked(q, k, v, q_pos, k_pos_b, causal, window,
+                               k_valid, kv_chunk, scale)
+    bias = _mask_bias(q_pos, k_pos, causal, window, k_valid)  # (B,Sq,Sk)
+    scores = _gqa_scores(q, k, scale) + bias[:, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, q.dtype)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, causal, window, k_valid,
+                    chunk: int, scale: float) -> jax.Array:
+    """Online-softmax over KV chunks: working set O(Sq * chunk) instead of
+    O(Sq * Sk). Equivalent to flash attention's outer loop, in pure JAX."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        valid_pad = jnp.arange(n_chunks * chunk) < sk
+        k_valid = (valid_pad[None, :] if k_valid is None
+                   else jnp.pad(k_valid, ((0, 0), (0, pad))) & valid_pad[None, :])
+        k_valid = jnp.broadcast_to(k_valid, (b, n_chunks * chunk))
+    kheads = k.shape[2]
+    g = h // kheads
+    kc = k.reshape(b, n_chunks, chunk, kheads, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kheads, d).transpose(1, 0, 2, 3, 4)
+    pc = k_pos.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    valc = (None if k_valid is None
+            else k_valid.reshape(b, n_chunks, chunk).transpose(1, 0, 2))
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        if valc is None:
+            kj, vj, pj = xs
+            vj_valid = None
+        else:
+            kj, vj, pj, vj_valid = xs
+        bias = _mask_bias(q_pos, pj, causal, window, vj_valid)   # (B,Sq,chunk)
+        s = _gqa_scores(q, kj, scale) + bias[:, None, None]       # (B,K,G,Sq,c)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+        acc = acc * corr[..., None] + o
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kheads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kheads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kheads, g, sq, d), jnp.float32)
+    xs = (kc, vc, pc) if valc is None else (kc, vc, pc, valc)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                  # (B,K,G,Sq,D)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _attend_window_blocked(q, k, v, window: int, scale: float) -> jax.Array:
+    """Causal sliding-window attention in window-sized Q blocks.
+
+    Q block i attends to K/V blocks {i-1, i}; with block size == window,
+    every in-window key is covered and the position mask inside the
+    2W-wide stripe enforces exactness. Working set per scan step is
+    O(W * 2W) scores — independent of S (the §Perf memory lever for the
+    windowed architectures at 32k/500k sequence lengths).
+    Assumes self-attention with aligned positions 0..S-1.
+    """
+    b, s, h, d = q.shape
+    kheads = k.shape[2]
+    w = window
+    n = -(-s // w)
+    pad = n * w - s
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    qc = q.reshape(b, n, w, h, d).transpose(1, 0, 2, 3, 4)       # (n,B,W,H,D)
+    kc = k.reshape(b, n, w, kheads, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, w, kheads, d).transpose(1, 0, 2, 3, 4)
+    zero = jnp.zeros_like(kc[:1])
+    k2 = jnp.concatenate([jnp.concatenate([zero, kc[:-1]], 0), kc], axis=2)
+    v2 = jnp.concatenate([jnp.concatenate([zero, vc[:-1]], 0), vc], axis=2)
+    idx = jnp.arange(n)
+
+    def step(_, xs):
+        i, qj, kj, vj = xs
+        q_pos = i * w + jnp.arange(w)
+        k_pos = (i - 1) * w + jnp.arange(2 * w)
+        dpos = q_pos[:, None] - k_pos[None, :]
+        ok = (dpos >= 0) & (dpos < w) & (k_pos >= 0)[None, :] \
+            & (q_pos < s)[:, None] & (k_pos < s)[None, :]
+        bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+        sc = _gqa_scores(qj, kj, scale) + bias[None, None, None]
+        pr = jax.nn.softmax(sc, axis=-1)
+        return None, _gqa_out(pr, vj, q.dtype)
+
+    _, out = jax.lax.scan(step, None, (idx, qc, k2, v2))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, n * w, h, d)[:, :s]
+
+
+def _project_qkv(p: dict, cfg: AttentionConfig, xq: jax.Array, xkv: jax.Array,
+                 q_pos: Optional[jax.Array], k_pos: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = dense(p["wq"], xq)
+    k = dense(p["wk"], xkv)
+    v = dense(p["wv"], xkv)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if cfg.rope and q_pos is not None:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(p: dict, cfg: AttentionConfig, x: jax.Array,
+                   positions: jax.Array) -> jax.Array:
+    """Training/prefill self-attention over the whole sequence."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
+    o = attend(q, k, v, positions, positions, cfg.causal, cfg.window,
+               kv_chunk=cfg.kv_chunk, window_block=cfg.window_block)
+    return dense(p["wo"], o.reshape(*o.shape[:-2], -1))
+
+
+def cross_attention(p: dict, cfg: AttentionConfig, x: jax.Array,
+                    kv_source: jax.Array) -> jax.Array:
+    """Cross-attention (no mask, no rope on keys by convention here)."""
+    q = dense(p["wq"], x)
+    k = dense(p["wk"], kv_source)
+    v = dense(p["wv"], kv_source)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    sq = jnp.arange(x.shape[1])
+    sk = jnp.arange(kv_source.shape[1])
+    o = attend(q, k, v, sq, sk, causal=False, window=None,
+               kv_chunk=cfg.kv_chunk)
+    return dense(p["wo"], o.reshape(*o.shape[:-2], -1))
+
+
+# --------------------------------------------------------------------------
+# KV cache (full-length and ring-buffer for sliding window).
+# --------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, length: int, cfg: AttentionConfig,
+                  dtype=jnp.bfloat16) -> dict:
+    """length = S_max for full attention; = window for ring (windowed) cache."""
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),   # absolute slot positions
+    }
+
+
+def decode_self_attention(p: dict, cfg: AttentionConfig, x: jax.Array,
+                          cache: dict, pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """One-token decode. x: (B, 1, d_model); pos: scalar absolute position.
+
+    Full attention uses slot = pos; sliding window uses a ring buffer with
+    slot = pos % window, so cache memory is O(window), not O(S).
+    """
+    length = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, cfg, x, x, jnp.full((1,), pos), jnp.full((1,), pos))
+    slot = pos % length if cfg.window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        jnp.full((1,), pos, jnp.int32), (slot,))
+    k_valid = (cpos >= 0)[None, :]
+    o = attend(q, ck, cv, jnp.full((1,), pos), cpos[None, :].astype(jnp.int32),
+               cfg.causal, cfg.window, k_valid=k_valid, kv_chunk=cfg.kv_chunk)
+    y = dense(p["wo"], o.reshape(*o.shape[:-2], -1))
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+def prefill_kv_cache(p: dict, cfg: AttentionConfig, x: jax.Array,
+                     positions: jax.Array, length: int) -> Tuple[jax.Array, dict]:
+    """Run prefill self-attention AND build the decode cache in one pass."""
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
+    o = attend(q, k, v, positions, positions, cfg.causal, cfg.window,
+               kv_chunk=cfg.kv_chunk, window_block=cfg.window_block)
+    y = dense(p["wo"], o.reshape(*o.shape[:-2], -1))
+    s = x.shape[1]
+    cache = init_kv_cache(x.shape[0], length, cfg, dtype=k.dtype)
+    if cfg.window is not None and s > length:
+        # Keep only the last `window` tokens, ring-aligned.
+        keep = length
+        ks, vs = k[:, -keep:], v[:, -keep:]
+        ps = jnp.arange(s - keep, s, dtype=jnp.int32)
+        order = jnp.argsort(ps % length)
+        cache = {"k": ks[:, order], "v": vs[:, order], "pos": ps[order]}
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+        cache["pos"] = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.arange(s, dtype=jnp.int32), (0,))
+    return y, cache

@@ -1,0 +1,173 @@
+"""Shared neural-net primitives (pure JAX, functional params-as-pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take an explicit key;
+  * compute dtype defaults to bf16, params stored in ``param_dtype``;
+  * all matmuls go through ``dense`` so dtype promotion is uniform.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> jax.Array:
+    """He/depth-scaled truncated normal initialiser."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    std = scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def dense_init(key, in_dim: int, out_shape: Sequence[int], dtype=jnp.bfloat16,
+               use_bias: bool = False, scale: float = 1.0) -> dict:
+    shape = (in_dim, *out_shape)
+    p = {"kernel": truncated_normal_init(key, shape, scale, dtype)}
+    if use_bias:
+        p["bias"] = jnp.zeros(tuple(out_shape), dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array, compute_dtype=None) -> jax.Array:
+    """x: (..., in_dim) @ kernel (in_dim, *out) -> (..., *out).
+    Compute dtype follows the kernel's storage dtype unless overridden."""
+    compute_dtype = compute_dtype or p["kernel"].dtype
+    k = p["kernel"].astype(compute_dtype)
+    y = jax.lax.dot_general(x.astype(compute_dtype), k,
+                            (((x.ndim - 1,), (0,)), ((), ())))
+    if "bias" in p:
+        y = y + p["bias"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, dim), jnp.float32)
+                      * (1.0 / math.sqrt(dim))).astype(dtype)}
+
+
+def embed(p: dict, ids: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0).astype(compute_dtype)
+
+
+def sinusoidal_embed(positions: jax.Array, dim: int,
+                     max_timescale: float = 10000.0) -> jax.Array:
+    """Transformer sin/cos position embeddings. positions: (...,) int."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_timescale)
+                    * jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                       # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """Rotate pairs. x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                      # (D/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs.
+# --------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, (d_ff,), dtype),
+        "up": dense_init(k2, d_model, (d_ff,), dtype),
+        "down": dense_init(k3, d_ff, (d_model,), dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(dense(p["gate"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], g * dense(p["up"], x))
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16,
+                  use_bias: bool = True) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d_model, (d_ff,), dtype, use_bias=use_bias),
+        "down": dense_init(k2, d_ff, (d_model,), dtype, use_bias=use_bias),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(dense(p["up"], x).astype(jnp.float32)).astype(x.dtype)
+    return dense(p["down"], h)
+
+
+# --------------------------------------------------------------------------
+# Losses.
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 weights: Optional[jax.Array] = None,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Weighted-mean token cross-entropy.
+
+    logits: (..., V) float; labels: (...) int32;
+    weights: per-*example* weights broadcastable to labels' shape (used by
+    the OTA faded-loss formulation); mask: 0/1 validity per token.
+
+    Normalisation uses the *unweighted* token count so that with fading
+    weights h the result is exactly mean_i h_i * nll_i (the faded OTA
+    average of Eq. 7), not a self-normalised ratio.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    m = jnp.ones_like(nll) if mask is None else mask.astype(jnp.float32)
+    wn = nll * m
+    if weights is not None:
+        wn = wn * jnp.broadcast_to(
+            weights.reshape(weights.shape + (1,) * (nll.ndim - weights.ndim)),
+            nll.shape).astype(jnp.float32)
+    return jnp.sum(wn) / jnp.maximum(jnp.sum(m), 1.0)

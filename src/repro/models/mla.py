@@ -1,0 +1,149 @@
+"""Multi-head Latent Attention (MLA) — MiniCPM3 / DeepSeek-V2 family.
+
+Queries and keys/values are produced through low-rank latents; the decode
+KV cache stores ONLY the compressed latent ``c_kv`` (kv_lora_rank) plus
+the shared rotary key ``k_pe`` (qk_rope_head_dim) per token — the point
+of MLA. Decode uses the *absorbed* formulation: the up-projections
+``W_uk`` / ``W_uv`` are folded into the query / output sides, so scores
+and weighted sums are computed directly in latent space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+    rope_theta: float = 10000.0
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def mla_init(key, cfg: MLAConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq_a": dense_init(k1, cfg.d_model, (cfg.q_lora_rank,), dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "wq_b": dense_init(k2, cfg.q_lora_rank,
+                           (cfg.n_heads, cfg.qk_head_dim), dtype),
+        "wkv_a": dense_init(k3, cfg.d_model,
+                            (cfg.kv_lora_rank + cfg.qk_rope_head_dim,), dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wkv_b": dense_init(k4, cfg.kv_lora_rank,
+                            (cfg.n_heads, cfg.qk_nope_head_dim + cfg.v_head_dim),
+                            dtype),
+        "wo": dense_init(k5, cfg.n_heads * cfg.v_head_dim, (cfg.d_model,), dtype),
+    }
+
+
+def _queries(p, cfg: MLAConfig, x, positions):
+    q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x)))
+    q_nope = q[..., :cfg.qk_nope_head_dim]
+    q_pe = apply_rope(q[..., cfg.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_pe                         # (B,S,H,nope), (B,S,H,rope)
+
+
+def _latents(p, cfg: MLAConfig, x, positions):
+    kv = dense(p["wkv_a"], x)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :cfg.kv_lora_rank])
+    k_pe = apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                      cfg.rope_theta)[:, :, 0]  # (B,S,rope) shared across heads
+    return c_kv, k_pe
+
+
+def mla_self_attention(p: dict, cfg: MLAConfig, x: jax.Array,
+                       positions: jax.Array) -> jax.Array:
+    """Training/prefill path: decompress K/V and run standard causal MHA."""
+    b, s, _ = x.shape
+    q_nope, q_pe = _queries(p, cfg, x, positions)
+    c_kv, k_pe = _latents(p, cfg, x, positions)
+    kv = dense(p["wkv_b"], c_kv)                       # (B,S,H,nope+v)
+    k_nope = kv[..., :cfg.qk_nope_head_dim]
+    v = kv[..., cfg.qk_nope_head_dim:]
+    scale = 1.0 / math.sqrt(cfg.qk_head_dim)
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhr,bkr->bhqk", q_pe.astype(jnp.float32),
+                           k_pe.astype(jnp.float32))) * scale
+    pos = positions if positions.ndim == 2 else positions[None, :]
+    causal = (pos[:, None, :, None] >= pos[:, None, None, :])
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return dense(p["wo"], o.reshape(b, s, -1).astype(x.dtype))
+
+
+def init_mla_cache(batch: int, length: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+def mla_prefill(p: dict, cfg: MLAConfig, x: jax.Array, positions: jax.Array,
+                length: int) -> Tuple[jax.Array, dict]:
+    y = mla_self_attention(p, cfg, x, positions)
+    c_kv, k_pe = _latents(p, cfg, x, positions)
+    s = x.shape[1]
+    cache = init_mla_cache(x.shape[0], length, cfg, dtype=c_kv.dtype)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, 0, 0))
+    cache["k_pe"] = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe, (0, 0, 0))
+    cache["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.arange(s, dtype=jnp.int32), (0,))
+    return y, cache
+
+
+def mla_decode_step(p: dict, cfg: MLAConfig, x: jax.Array, cache: dict,
+                    pos: jax.Array) -> Tuple[jax.Array, dict]:
+    """Absorbed one-token decode against the latent cache.
+
+    score_h(s) = q_nope_h^T W_uk_h c_s + q_pe_h^T k_pe_s
+    out_h      = (sum_s p_s c_s)^T W_uv_h
+    """
+    b = x.shape[0]
+    posv = jnp.full((1,), pos)
+    q_nope, q_pe = _queries(p, cfg, x, posv)            # (B,1,H,*)
+    c_new, k_pe_new = _latents(p, cfg, x, posv)
+    ck = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                      c_new.astype(cache["c_kv"].dtype),
+                                      (0, pos, 0))
+    kp = jax.lax.dynamic_update_slice(cache["k_pe"],
+                                      k_pe_new.astype(cache["k_pe"].dtype),
+                                      (0, pos, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        jnp.full((1,), pos, jnp.int32), (pos,))
+    w_uk = p["wkv_b"]["kernel"][..., :cfg.qk_nope_head_dim]   # (r,H,nope)
+    w_uv = p["wkv_b"]["kernel"][..., cfg.qk_nope_head_dim:]   # (r,H,v)
+    # Absorb W_uk into the query: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(cfg.qk_head_dim)
+    scores = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ck.astype(jnp.float32))
+              + jnp.einsum("bqhr,bsr->bhqs", q_pe.astype(jnp.float32),
+                           kp.astype(jnp.float32))) * scale
+    valid = (cpos >= 0) & (cpos <= pos)
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ck.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv.astype(jnp.float32))
+    y = dense(p["wo"], o.reshape(b, 1, -1).astype(x.dtype))
+    return y, {"c_kv": ck, "k_pe": kp, "pos": cpos}

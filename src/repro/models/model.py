@@ -1,0 +1,499 @@
+"""Model configuration, end-to-end assembly, and sharding rules.
+
+``build_model(cfg)`` returns a ``Model`` whose members cover all four
+lowered programs of the dry-run matrix:
+
+    loss_fn(params, batch, weights)  — training loss (OTA-faded weights)
+    forward(params, batch)           — full-sequence logits
+    prefill(params, batch)           — logits + decode caches
+    decode_step(params, cache, token, pos) — one-token serve step
+
+Params are nested dicts; repeated layers are stacked on a leading axis
+and scanned. ``partition_spec(cfg, params, mesh_axes)`` assigns
+PartitionSpecs by parameter name + shape (Megatron-style tensor
+parallelism over the "model" axis, optional FSDP over "data").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.attention import AttentionConfig
+from repro.models.layers import (dense, dense_init, embed, embed_init,
+                                 sinusoidal_embed, softmax_xent)
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig
+from repro.models.rwkv import RWKVConfig
+from repro.models.ssm import SSMConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                     # dense | mla | moe | rwkv | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    norm: str = "rmsnorm"
+    mlp: str = "swiglu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None    # sliding-window attention (ring cache)
+    kv_chunk: Optional[int] = None  # online-softmax KV chunking (perf lever)
+    window_block: bool = False      # block-local window attention (perf)
+    remat: bool = True
+    scan_unroll: bool = False       # unroll layer scans (cost calibration)
+    param_dtype: str = "bfloat16"
+    # MLA
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_sharded: bool = False       # shard_map expert-parallel path (perf)
+    # SSM / hybrid
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    ssm_chunk: int = 0
+    # RWKV
+    rwkv_lora_rank: int = 64
+    rwkv_chunk: int = 64
+    # enc-dec (audio) / vlm stubs
+    n_enc_layers: int = 0
+    enc_seq: int = 1500             # whisper frame embeddings (stub input)
+    cross_attn_period: int = 0      # vlm: 1 cross layer every k layers
+    n_img_tokens: int = 1601        # vlm patch embeddings (stub input)
+    n_meta_tokens: int = 0          # hymba learnable meta tokens
+    notes: str = ""
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def attn_config(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta, window=self.window,
+            kv_chunk=self.kv_chunk, window_block=self.window_block)
+
+    def mla_config(self) -> MLAConfig:
+        return MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            q_lora_rank=self.q_lora_rank, kv_lora_rank=self.kv_lora_rank,
+            qk_nope_head_dim=self.qk_nope_head_dim,
+            qk_rope_head_dim=self.qk_rope_head_dim,
+            v_head_dim=self.v_head_dim, rope_theta=self.rope_theta)
+
+    def moe_config(self) -> MoEConfig:
+        return MoEConfig(
+            d_model=self.d_model, n_experts=self.n_experts, top_k=self.top_k,
+            d_ff=self.d_ff, n_shared_experts=self.n_shared_experts,
+            capacity_factor=self.capacity_factor, sharded=self.moe_sharded)
+
+    def ssm_config(self) -> SSMConfig:
+        return SSMConfig(d_model=self.d_model,
+                         d_inner=self.ssm_expand * self.d_model,
+                         d_state=self.ssm_state, chunk=self.ssm_chunk)
+
+    def rwkv_config(self) -> RWKVConfig:
+        return RWKVConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          d_ff=self.d_ff, lora_rank=self.rwkv_lora_rank,
+                          chunk=self.rwkv_chunk)
+
+    def n_params(self) -> int:
+        """Exact parameter count by eval_shape (no allocation)."""
+        import math
+        model = build_model(self)
+        shapes = jax.eval_shape(model.init, jax.random.key(0))
+        return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared of n_experts)."""
+        if not self.n_experts:
+            return self.n_params()
+        total = self.n_params()
+        expert_block = 3 * self.d_model * self.d_ff   # gate/up/down per expert
+        moe_total = self.n_layers * self.n_experts * expert_block
+        moe_active = self.n_layers * self.top_k * expert_block
+        return total - moe_total + moe_active
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _block_fns(cfg: ModelConfig):
+    if cfg.family in ("dense",):
+        return tfm.dense_block(cfg)
+    if cfg.family == "mla":
+        return tfm.mla_block(cfg)
+    if cfg.family == "moe":
+        return tfm.moe_block(cfg)
+    if cfg.family == "rwkv":
+        return tfm.rwkv_block(cfg)
+    if cfg.family == "hybrid":
+        return tfm.hybrid_block(cfg)
+    if cfg.family == "vlm":
+        return tfm.vlm_group(cfg)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    b_init, b_fwd, b_decode, b_cache, b_pfl = _block_fns(cfg)
+    n_stack = (cfg.n_layers // cfg.cross_attn_period
+               if cfg.family == "vlm" else cfg.n_layers)
+    needs_img = cfg.family == "vlm"
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model, cfg.dtype),
+            "blocks": tfm.stack_init(b_init, k2, n_stack),
+            "final_norm": tfm._norm_init(cfg.norm, cfg.d_model),
+            "unembed": dense_init(k3, cfg.d_model, (cfg.vocab,), cfg.dtype),
+        }
+        if cfg.n_meta_tokens:
+            p["meta_tokens"] = (jax.random.normal(
+                k4, (cfg.n_meta_tokens, cfg.d_model), jnp.float32)
+                * 0.02).astype(cfg.dtype)
+        return p
+
+    def _backbone(params, x, img=None):
+        aux0 = jnp.zeros((), jnp.float32)
+        if needs_img:
+            fwd = lambda lp, h: b_fwd(lp, h, img)
+        else:
+            fwd = b_fwd
+        x, aux = tfm.stack_apply(fwd, params["blocks"], x, aux0,
+                                 remat=cfg.remat, unroll=cfg.scan_unroll)
+        return tfm._norm(cfg.norm, params["final_norm"], x), aux
+
+    def forward(params, batch):
+        x = embed(params["embed"], batch["tokens"], cfg.dtype)
+        if cfg.n_meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta_tokens"][None],
+                (x.shape[0],) + params["meta_tokens"].shape).astype(x.dtype)
+            x = jnp.concatenate([meta, x], axis=1)
+        img = batch.get("image_embed") if needs_img else None
+        x, aux = _backbone(params, x, img)
+        if cfg.n_meta_tokens:
+            x = x[:, cfg.n_meta_tokens:]
+        logits = dense(params["unembed"], x)
+        return logits, aux
+
+    def loss_fn(params, batch, weights=None):
+        logits, aux = forward(params, batch)
+        loss = softmax_xent(logits[:, :-1], batch["tokens"][:, 1:], weights,
+                            batch.get("mask"))
+        return loss + aux
+
+    def init_cache(batch_size, length):
+        one = b_cache(batch_size, length)
+        cache = {"layers": jax.tree.map(lambda a: jnp.stack([a] * n_stack),
+                                        one)}
+        if needs_img:
+            cache["image_embed"] = jnp.zeros(
+                (batch_size, cfg.n_img_tokens, cfg.d_model), cfg.dtype)
+        return cache
+
+    def prefill(params, batch, length=None):
+        """Forward over the prompt, collecting per-layer decode caches via
+        the scan's per-layer outputs. Returns (logits, cache)."""
+        tokens = batch["tokens"]
+        length = length or tokens.shape[1]
+        x = embed(params["embed"], tokens, cfg.dtype)
+        if cfg.n_meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta_tokens"][None],
+                (x.shape[0],) + params["meta_tokens"].shape).astype(x.dtype)
+            x = jnp.concatenate([meta, x], axis=1)
+        img = batch.get("image_embed") if needs_img else None
+        if needs_img:
+            fn = lambda lp, xx: b_pfl(lp, xx, length, img)
+        else:
+            fn = lambda lp, xx: b_pfl(lp, xx, length)
+        x, layers = tfm.stack_prefill(fn, params["blocks"], x,
+                                      unroll=cfg.scan_unroll)
+        if cfg.n_meta_tokens:
+            x = x[:, cfg.n_meta_tokens:]
+        x = tfm._norm(cfg.norm, params["final_norm"], x)
+        logits = dense(params["unembed"], x[:, -1:])
+        cache = {"layers": layers}
+        if needs_img:
+            cache["image_embed"] = (img if img is not None else
+                                    jnp.zeros((tokens.shape[0],
+                                               cfg.n_img_tokens,
+                                               cfg.d_model), cfg.dtype))
+        return logits, cache
+
+    def decode_step(params, cache, token, pos):
+        """token: (B, 1) int32; pos: scalar int32 absolute TEXT position
+        (meta-token offset, if any, is applied internally)."""
+        x = embed(params["embed"], token, cfg.dtype)
+        img = cache.get("image_embed") if needs_img else None
+        if cfg.n_meta_tokens:
+            pos = pos + cfg.n_meta_tokens
+        if needs_img:
+            fn = lambda lp, ch, xx: b_decode(lp, ch, xx, pos, img)
+        else:
+            fn = lambda lp, ch, xx: b_decode(lp, ch, xx, pos)
+        x, new_layers = tfm.stack_decode(fn, params["blocks"],
+                                         cache["layers"], x,
+                                         unroll=cfg.scan_unroll)
+        x = tfm._norm(cfg.norm, params["final_norm"], x)
+        logits = dense(params["unembed"], x)
+        new_cache = {**cache, "layers": new_layers}
+        return logits, new_cache
+
+    return Model(cfg, init, forward, loss_fn, prefill, decode_step, init_cache)
+
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    ((e_init, e_fwd),
+     (d_init, d_fwd, d_decode, d_cache, d_pfl)) = tfm.encdec_blocks(cfg)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+
+    def init(key):
+        # Positions are sinusoidal (computed on the fly): Whisper's learned
+        # decoder table caps at 448 tokens; the 32k/500k serving shapes need
+        # unbounded positions, so we substitute the standard sin/cos
+        # embedding (documented in DESIGN.md §8).
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {
+            "embed": embed_init(k1, cfg.vocab, cfg.d_model, cfg.dtype),
+            "enc_blocks": tfm.stack_init(e_init, k2, n_enc),
+            "enc_norm": tfm._norm_init(cfg.norm, cfg.d_model),
+            "dec_blocks": tfm.stack_init(d_init, k3, cfg.n_layers),
+            "final_norm": tfm._norm_init(cfg.norm, cfg.d_model),
+            "unembed": dense_init(k4, cfg.d_model, (cfg.vocab,), cfg.dtype),
+        }
+
+    def encode(params, audio_embed):
+        x, _ = tfm.stack_apply(e_fwd, params["enc_blocks"],
+                               audio_embed.astype(cfg.dtype),
+                               jnp.zeros((), jnp.float32), remat=cfg.remat,
+                               unroll=cfg.scan_unroll)
+        return tfm._norm(cfg.norm, params["enc_norm"], x)
+
+    def forward(params, batch):
+        enc = encode(params, batch["audio_embed"])
+        tok = batch["tokens"]
+        pe = sinusoidal_embed(jnp.arange(tok.shape[1]), cfg.d_model)
+        x = embed(params["embed"], tok, cfg.dtype) + pe[None].astype(cfg.dtype)
+        fwd = lambda lp, h: d_fwd(lp, h, enc)
+        x, aux = tfm.stack_apply(fwd, params["dec_blocks"], x,
+                                 jnp.zeros((), jnp.float32), remat=cfg.remat,
+                                 unroll=cfg.scan_unroll)
+        x = tfm._norm(cfg.norm, params["final_norm"], x)
+        return dense(params["unembed"], x), aux
+
+    def loss_fn(params, batch, weights=None):
+        logits, aux = forward(params, batch)
+        loss = softmax_xent(logits[:, :-1], batch["tokens"][:, 1:], weights,
+                            batch.get("mask"))
+        return loss + aux
+
+    def init_cache(batch_size, length):
+        one = d_cache(batch_size, length)
+        return {
+            "layers": jax.tree.map(lambda a: jnp.stack([a] * cfg.n_layers), one),
+            "enc_out": jnp.zeros((batch_size, cfg.enc_seq, cfg.d_model),
+                                 cfg.dtype),
+        }
+
+    def decode_step(params, cache, token, pos):
+        pe = sinusoidal_embed(jnp.asarray(pos)[None], cfg.d_model)
+        x = embed(params["embed"], token, cfg.dtype) + pe[None].astype(cfg.dtype)
+        enc = cache["enc_out"]
+        fn = lambda lp, ch, xx: d_decode(lp, ch, xx, pos, enc)
+        x, new_layers = tfm.stack_decode(fn, params["dec_blocks"],
+                                         cache["layers"], x,
+                                         unroll=cfg.scan_unroll)
+        x = tfm._norm(cfg.norm, params["final_norm"], x)
+        logits = dense(params["unembed"], x)
+        return logits, {**cache, "layers": new_layers}
+
+    def prefill(params, batch, length=None):
+        enc = encode(params, batch["audio_embed"])
+        tok = batch["tokens"]
+        length = length or tok.shape[1]
+        pe = sinusoidal_embed(jnp.arange(tok.shape[1]), cfg.d_model)
+        x = embed(params["embed"], tok, cfg.dtype) + pe[None].astype(cfg.dtype)
+        fn = lambda lp, xx: d_pfl(lp, xx, length, enc)
+        x, layers = tfm.stack_prefill(fn, params["dec_blocks"], x,
+                                      unroll=cfg.scan_unroll)
+        x = tfm._norm(cfg.norm, params["final_norm"], x)
+        logits = dense(params["unembed"], x[:, -1:])
+        return logits, {"layers": layers, "enc_out": enc}
+
+    return Model(cfg, init, forward, loss_fn, prefill, decode_step, init_cache)
+
+
+# --------------------------------------------------------------------------
+# Sharding rules.
+# --------------------------------------------------------------------------
+
+# (name-fragment, callable(shape, axes) -> PartitionSpec). First match wins.
+# Shapes are WITHOUT the stacked layer axis (it is stripped/prepended).
+def _spec_rules(model_axis: str, msize: int, ctr_heads: bool = False):
+    def headsharded(shape):
+        # (d, H, hd) or (lora, H, hd): shard H if divisible. Otherwise:
+        # for DECODE (ctr_heads=True) shard the contraction (d_model)
+        # dim — the resulting activation all-reduce is a single token,
+        # vastly cheaper than replicating the projection weights
+        # (e.g. qwen2.5: 40 heads % 16 != 0). For TRAIN the all-reduce
+        # would be (B, S, H, hd) per layer, so weights stay replicated.
+        if len(shape) >= 2 and shape[-2] % msize == 0:
+            return P(*([None] * (len(shape) - 2)), model_axis, None)
+        if ctr_heads and shape[0] % msize == 0:
+            return P(model_axis, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    def last_dim(shape):
+        if shape[-1] % msize == 0:
+            return P(*([None] * (len(shape) - 1)), model_axis)
+        return P(*([None] * len(shape)))
+
+    def first_dim(shape):
+        if shape[0] % msize == 0:
+            return P(model_axis, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+
+    def replicated(shape):
+        return P(*([None] * len(shape)))
+
+    return [
+        # embeddings / unembed: shard the d_model / vocab column dim.
+        ("embed/table", last_dim),
+        ("unembed/kernel", last_dim),
+        ("meta_tokens", replicated),
+        ("pos_embed", replicated),
+        # attention
+        ("wq/kernel", headsharded),
+        ("wk/kernel", headsharded),
+        ("wv/kernel", headsharded),
+        ("wq/bias", lambda s: P(model_axis, None) if s[0] % msize == 0
+         else P(*[None] * len(s))),
+        ("wk/bias", lambda s: P(model_axis, None) if s[0] % msize == 0
+         else P(*[None] * len(s))),
+        ("wv/bias", lambda s: P(model_axis, None) if s[0] % msize == 0
+         else P(*[None] * len(s))),
+        ("wo/kernel", first_dim),
+        # MLA
+        ("wq_a/kernel", replicated),
+        ("wq_b/kernel", headsharded),
+        ("wkv_a/kernel", replicated),
+        ("wkv_b/kernel", headsharded),
+        # MoE experts: (E, d, f) / (E, f, d) — expert parallel on E.
+        ("moe/gate", first_dim),
+        ("moe/up", first_dim),
+        ("moe/down", first_dim),
+        ("router/kernel", replicated),
+        # dense MLPs (also MoE shared expert / vlm x_mlp)
+        ("gate/kernel", last_dim),
+        ("up/kernel", last_dim),
+        ("down/kernel", first_dim),
+        # SSM
+        ("in_proj/kernel", last_dim),
+        ("x_proj/kernel", first_dim),
+        ("dt_proj/kernel", last_dim),
+        ("dt_bias", lambda s: P(model_axis) if s[0] % msize == 0 else P(None)),
+        ("a_log", first_dim),
+        ("d_skip", lambda s: P(model_axis) if s[0] % msize == 0 else P(None)),
+        ("conv_bias", lambda s: P(model_axis) if s[0] % msize == 0 else P(None)),
+        ("conv", last_dim),
+        ("out_proj/kernel", first_dim),
+        # RWKV
+        ("tmix/wr/kernel", last_dim), ("tmix/wk/kernel", last_dim),
+        ("tmix/wv/kernel", last_dim), ("tmix/wg/kernel", last_dim),
+        ("tmix/wo/kernel", first_dim),
+        ("cmix/wk/kernel", last_dim), ("cmix/wv/kernel", first_dim),
+        ("cmix/wr/kernel", replicated),
+        ("u", first_dim),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def partition_spec(cfg: ModelConfig, params_shape: PyTree,
+                   model_axis: str = "model", model_axis_size: int = 1,
+                   fsdp_axis: Optional[str] = None, fsdp_size: int = 1,
+                   fsdp_min_size: int = 2**16,
+                   ctr_heads: bool = False) -> PyTree:
+    """PartitionSpec pytree matching ``params_shape`` (from eval_shape).
+
+    Stacked layer axes are detected by path ("blocks"/"selfs") and get a
+    leading None. With ``fsdp_axis``, the largest still-unsharded dim of
+    big tensors is additionally sharded over it (ZeRO-ish weight
+    sharding, a §Perf memory lever).
+    """
+    rules = _spec_rules(model_axis, model_axis_size, ctr_heads)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        comps = ps.split("/")
+        stacked = sum(("blocks" in comps, "selfs" in comps))
+        shape = leaf.shape[stacked:]
+        spec = None
+        for frag, fn in rules:
+            fc = frag.split("/")
+            if any(comps[i:i + len(fc)] == fc
+                   for i in range(len(comps) - len(fc) + 1)):
+                spec = fn(shape)
+                break
+        if spec is None:
+            spec = P(*([None] * len(shape)))
+        parts = list(spec)
+        if fsdp_axis and leaf.size >= fsdp_min_size:
+            # shard the largest unsharded dim over the fsdp axis.
+            cand = [(shape[i], i) for i in range(len(shape))
+                    if parts[i] is None and shape[i] % fsdp_size == 0]
+            if cand:
+                _, i = max(cand)
+                parts[i] = fsdp_axis
+        return P(*([None] * stacked), *parts)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)

@@ -1,0 +1,266 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded sort-based
+dispatch (no (T, E, C) one-hots — scatter/gather through an (E, C, d)
+buffer), batched expert SwiGLU, Switch-style load-balance auxiliary loss,
+optional always-on shared expert (Kimi-K2 style).
+
+Sharding intent: the expert dimension E of all expert weights and of the
+dispatch buffer is sharded over the "model" mesh axis (expert
+parallelism); tokens arrive sharded over "data". The token->expert
+scatter is the all-to-all boundary — GSPMD inserts the collective from
+the sharding constraints (baseline), and §Perf iterates on it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, swiglu, swiglu_init
+
+# Expert-parallel shard_map context, installed by the launcher (the model
+# code itself stays mesh-agnostic). When set AND cfg.sharded, moe_apply
+# dispatches tokens locally on each (data, model) shard and psums the
+# partial outputs over the model axis — replacing GSPMD's conservative
+# (replicating) partition of the scatter/gather dispatch.
+_SHARD_CTX = {"mesh": None, "data_axes": None, "model_axis": None}
+
+
+def set_moe_sharding(mesh, data_axes, model_axis="model") -> None:
+    _SHARD_CTX.update(mesh=mesh, data_axes=tuple(data_axes),
+                      model_axis=model_axis)
+
+
+def clear_moe_sharding() -> None:
+    _SHARD_CTX.update(mesh=None, data_axes=None, model_axis=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    n_shared_experts: int = 0      # always-on experts (Kimi-K2 has 1)
+    capacity_factor: float = 1.25
+    normalize_topk: bool = True    # renormalise the k gates to sum to 1
+    aux_loss_weight: float = 0.01
+    sharded: bool = False          # use the shard_map expert-parallel path
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    import math
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(kr, d, (e,), jnp.float32),
+        "gate": (jax.random.truncated_normal(kg, -2, 2, (e, d, f), jnp.float32)
+                 * std).astype(dtype),
+        "up": (jax.random.truncated_normal(ku, -2, 2, (e, d, f), jnp.float32)
+               * std).astype(dtype),
+        "down": (jax.random.truncated_normal(kd, -2, 2, (e, f, d), jnp.float32)
+                 * (1.0 / math.sqrt(f))).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks, d, cfg.d_ff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _positions_in_expert(expert_ids: jax.Array, n_experts: int) -> jax.Array:
+    """For each flat slot, its arrival rank within its expert (sort-based,
+    O(n log n) and O(n) memory — no (n, E) one-hot)."""
+    n = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_e = expert_ids[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_e[1:] != sorted_e[:-1]])
+    seg_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    pos_sorted = idx - seg_start
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    return inv
+
+
+def moe_apply(p: dict, cfg: MoEConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    mesh = _SHARD_CTX["mesh"]
+    if (cfg.sharded and mesh is not None
+            and cfg.n_experts % mesh.shape[_SHARD_CTX["model_axis"]] == 0
+            and x.shape[0] % __import__("math").prod(
+                mesh.shape[a] for a in _SHARD_CTX["data_axes"]) == 0):
+        return _moe_apply_sharded(p, cfg, x, mesh,
+                                  _SHARD_CTX["data_axes"],
+                                  _SHARD_CTX["model_axis"])
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"]["kernel"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)      # (T, k)
+    if cfg.normalize_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    k = cfg.top_k
+    e_flat = expert_idx.reshape(t * k).astype(jnp.int32)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    pos = _positions_in_expert(e_flat, cfg.n_experts)
+    capacity = max(1, int(t * k * cfg.capacity_factor / cfg.n_experts))
+    keep = pos < capacity
+    pos_c = jnp.minimum(pos, capacity - 1)
+
+    # Dispatch: (E, C, d) buffer; dropped slots contribute zero.
+    buf = jnp.zeros((cfg.n_experts, capacity, d), x.dtype)
+    vals = xt[tok_flat] * keep[:, None].astype(x.dtype)
+    buf = buf.at[e_flat, pos_c].add(vals)
+
+    # Expert SwiGLU, batched over E.
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"],
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["up"],
+                   preferred_element_type=jnp.float32)
+    h = (g * u).astype(x.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"],
+                         preferred_element_type=jnp.float32)     # (E, C, d) f32
+
+    # Combine: gather each slot's result, weight by its gate, sum over k.
+    slot_out = out_buf[e_flat, pos_c] * keep[:, None]            # (T*k, d) f32
+    w = gate_vals.reshape(t * k, 1)
+    y = jnp.zeros((t, d), jnp.float32).at[tok_flat].add(slot_out * w)
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    if cfg.n_shared_experts:
+        y = y + swiglu(p["shared"], x)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e.
+    f_e = jnp.zeros((cfg.n_experts,), jnp.float32).at[e_flat].add(
+        keep.astype(jnp.float32)) / jnp.maximum(t * k, 1)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * cfg.n_experts * jnp.sum(f_e * p_e)
+    return y, aux
+
+
+def moe_reference_dense(p: dict, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """Oracle: route every token through ALL experts densely and mix by the
+    (renormalised) top-k gates. O(E/k) more FLOPs; used only in tests to
+    validate the dispatch path (capacity_factor must be large enough that
+    nothing is dropped)."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"]["kernel"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.normalize_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    full_gates = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], expert_idx].set(gate_vals)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", xt, p["gate"],
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("td,edf->tef", xt, p["up"],
+                   preferred_element_type=jnp.float32)
+    h = (g * u).astype(x.dtype)
+    o = jnp.einsum("tef,efd->ted", h, p["down"],
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("ted,te->td", o, full_gates).astype(x.dtype)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + swiglu(p["shared"], x)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Explicit expert-parallel path (shard_map).
+# ---------------------------------------------------------------------------
+
+def _dispatch_local(cfg: MoEConfig, router_k, gate_w, up_w, down_w, xl,
+                    model_axis: str):
+    """Per-shard MoE: tokens local to this data shard, experts local to
+    this model shard; contributions from remote experts arrive via the
+    psum over the model axis (token activations are replicated there)."""
+    import math as _math
+    b, s, d = xl.shape
+    t = b * s
+    xt = xl.reshape(t, d)
+    e_loc = gate_w.shape[0]
+    msize = cfg.n_experts // e_loc
+    j = jax.lax.axis_index(model_axis)
+    base = j * e_loc
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router_k.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.normalize_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    k = cfg.top_k
+    e_flat = expert_idx.reshape(t * k).astype(jnp.int32)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    owned = (e_flat >= base) & (e_flat < base + e_loc)
+    # local expert id; non-owned slots go to a dump row e_loc.
+    e_local = jnp.where(owned, e_flat - base, e_loc)
+    pos = _positions_in_expert(e_local, e_loc + 1)
+    capacity = max(1, int(t * k * cfg.capacity_factor / cfg.n_experts))
+    keep = owned & (pos < capacity)
+    pos_c = jnp.minimum(pos, capacity - 1)
+    e_c = jnp.minimum(e_local, e_loc - 1)
+
+    buf = jnp.zeros((e_loc, capacity, d), xl.dtype)
+    vals = xt[tok_flat] * keep[:, None].astype(xl.dtype)
+    buf = buf.at[e_c, pos_c].add(vals)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, gate_w,
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf, up_w,
+                   preferred_element_type=jnp.float32)
+    h = (g * u).astype(xl.dtype)
+    # Keep the combine-side gather in bf16: halves the largest HBM stream
+    # of the layer (T*k x d slot gather); the per-token sum over k and the
+    # cross-shard psum still accumulate in f32.
+    out_buf = jnp.einsum("ecf,efd->ecd", h, down_w,
+                         preferred_element_type=jnp.float32).astype(xl.dtype)
+
+    slot_out = out_buf[e_c, pos_c] * keep[:, None].astype(xl.dtype)
+    w = gate_vals.reshape(t * k, 1)
+    y = jnp.zeros((t, d), jnp.float32).at[tok_flat].add(
+        slot_out.astype(jnp.float32) * w)
+    y = jax.lax.psum(y, model_axis)
+    y = y.astype(xl.dtype).reshape(b, s, d)
+
+    f_e_local = jnp.zeros((cfg.n_experts,), jnp.float32).at[e_flat].add(
+        keep.astype(jnp.float32)) / jnp.maximum(t * k, 1)
+    f_e = jax.lax.psum(f_e_local, model_axis)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_weight * cfg.n_experts * jnp.sum(f_e * p_e)
+    return y, aux
+
+
+def _moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
+                       data_axes, model_axis) -> Tuple[jax.Array, jax.Array]:
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(data_axes)
+
+    def body(router_k, gate_w, up_w, down_w, xl):
+        y, aux = _dispatch_local(cfg, router_k, gate_w, up_w, down_w, xl,
+                                 model_axis)
+        aux = jax.lax.pmean(aux, dp)
+        return y, aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, None), P(model_axis, None, None),
+                  P(model_axis, None, None), P(model_axis, None, None),
+                  P(dp, None, None)),
+        out_specs=(P(dp, None, None), P()),
+        check_vma=False,
+    )(p["router"]["kernel"], p["gate"], p["up"], p["down"], x)
+    if cfg.n_shared_experts:
+        y = y + swiglu(p["shared"], x)
+    return y, aux

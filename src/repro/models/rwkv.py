@@ -1,0 +1,222 @@
+"""RWKV-6 "Finch" — attention-free token mixing with data-dependent decay.
+
+Per head (key dim D = value dim D):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (state, D x D)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with per-channel, per-token decay w_t = exp(-exp(wlog_t)) produced from
+the input (the "data-dependent decay" that distinguishes Finch/RWKV-6
+from RWKV-5), and token-shift ddlerp input mixing.
+
+Sequence processing uses the *chunked* form (production linear-attention
+scheme): within a chunk of length L the contributions are an L x L
+matmul with decay ratios; across chunks only the D x D state is carried
+by ``lax.scan``. Decode carries S directly — O(1) per token, no KV
+cache — so rwkv6 takes the long_500k shape natively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init, layernorm, layernorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    d_model: int
+    n_heads: int               # head_dim = d_model // n_heads
+    d_ff: int
+    lora_rank: int = 64        # decay/mix LoRA rank
+    chunk: int = 64            # chunked-scan block length
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def time_mix_init(key, cfg: RWKVConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 10)
+    d, r = cfg.d_model, cfg.lora_rank
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        # ddlerp token-shift mixing: 5 targets (r, k, v, w, g).
+        "mix_base": jnp.zeros((5, d), jnp.float32),
+        "mix_w1": dense_init(ks[0], d, (5 * r,), dtype),
+        "mix_w2": (jax.random.normal(ks[1], (5, r, d), jnp.float32)
+                   * 0.01).astype(dtype),
+        "wr": dense_init(ks[2], d, (d,), dtype),
+        "wk": dense_init(ks[3], d, (d,), dtype),
+        "wv": dense_init(ks[4], d, (d,), dtype),
+        "wg": dense_init(ks[5], d, (d,), dtype),
+        "wo": dense_init(ks[6], d, (d,), dtype),
+        # data-dependent decay: w = exp(-exp(w0 + lora(x_w)))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[7], d, (r,), dtype),
+        "w_lora_b": (jax.random.normal(ks[8], (r, d), jnp.float32)
+                     * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[9], (h, hd), jnp.float32) * 0.1),
+        "ln_x": layernorm_init(d),   # per-head group-norm approximated by LN
+    }
+
+
+def channel_mix_init(key, cfg: RWKVConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mix_r": jnp.zeros((cfg.d_model,), jnp.float32),
+        "wk": dense_init(k1, cfg.d_model, (cfg.d_ff,), dtype),
+        "wr": dense_init(k2, cfg.d_model, (cfg.d_model,), dtype),
+        "wv": dense_init(k3, cfg.d_ff, (cfg.d_model,), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Return x_{t-1} (with supplied state for t == 0). x: (B,S,d)."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, xx: jax.Array) -> jax.Array:
+    """Data-dependent lerp producing the 5 mixed inputs (5, B, S, d)."""
+    base = x[None] + xx[None] * p["mix_base"][:, None, None]
+    lo = jnp.tanh(dense(p["mix_w1"], x + xx * 0.5))
+    lo = jnp.moveaxis(lo.reshape(*lo.shape[:-1], 5, -1), -2, 0)  # (5,B,S,r)
+    delta = jnp.einsum("fbsr,frd->fbsd", lo.astype(jnp.float32),
+                       p["mix_w2"].astype(jnp.float32))
+    return base + xx[None] * delta.astype(x.dtype)
+
+
+def _rkvwg(p: dict, cfg: RWKVConfig, x: jax.Array, x_prev: jax.Array):
+    xx = _token_shift(x, x_prev) - x
+    m = _ddlerp(p, x, xx)
+    r = dense(p["wr"], m[0])
+    k = dense(p["wk"], m[1])
+    v = dense(p["wv"], m[2])
+    lora = jnp.tanh(dense(p["w_lora_a"], m[3]))
+    wlog = (p["w0"][None, None]
+            + jnp.einsum("bsr,rd->bsd", lora.astype(jnp.float32),
+                         p["w_lora_b"].astype(jnp.float32)))
+    w = jnp.exp(-jnp.exp(jnp.clip(wlog, -10.0, 2.0)))    # decay in (0,1)
+    g = jax.nn.silu(dense(p["wg"], m[4]).astype(jnp.float32)).astype(x.dtype)
+    hshape = x.shape[:-1] + (cfg.n_heads, cfg.head_dim)
+    return (r.reshape(hshape), k.reshape(hshape), v.reshape(hshape),
+            w.reshape(hshape), g)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int):
+    """Chunked WKV recurrence. r,k,v,w: (B,S,H,D) (w in f32, decay in (0,1));
+    u: (H,D). Returns y (B,S,H,D) f32."""
+    b, s, h, d = r.shape
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, padw)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        w = jnp.pad(w, padw, constant_values=1.0)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+    # (n, B, H, L, D) chunked layout.
+    def chunked(t):
+        return t.reshape(b, n, chunk, h, d).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = map(chunked, (rf, kf, vf, wf))
+    a_ex = jnp.cumprod(wc, axis=-2) / wc          # exclusive cumprod A_t
+    a_in = jnp.cumprod(wc, axis=-2)               # inclusive cumprod
+    tot = a_in[..., -1:, :]                       # whole-chunk decay
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def step(s_state, xs):
+        rj, kj, vj, aex, ain, totj, wj = xs
+        r_dec = rj * aex                                  # (B,H,L,D)
+        k_inc = kj / jnp.maximum(ain, 1e-30)
+        scores = jnp.einsum("bhld,bhmd->bhlm", r_dec, k_inc)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        diag = jnp.einsum("bhld,bhld->bhl", rj * u[None, :, None, :], kj)
+        y = (jnp.einsum("bhlm,bhmd->bhld", scores, vj)
+             + diag[..., None] * vj
+             + jnp.einsum("bhld,bhde->bhle", r_dec, s_state))
+        carry_k = kj * (totj / jnp.maximum(ain, 1e-30))   # decay to chunk end
+        # S_new[d, e] = tot[d] * S[d, e] + sum_l carry_k[l, d] v[l, e]
+        s_new = (s_state * totj[..., 0, :][..., :, None]
+                 + jnp.einsum("bhld,bhle->bhde", carry_k, vj))
+        return s_new, y
+
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (rc, kc, vc, a_ex, a_in, tot, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, n * chunk, h, d)
+    return y[:, :s], s_fin
+
+
+def time_mix_forward(p: dict, cfg: RWKVConfig, x: jax.Array,
+                     x_prev=None, return_state: bool = False):
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, 0])
+    r, k, v, w, g = _rkvwg(p, cfg, x, x_prev)
+    y, s_fin = _wkv_chunked(r, k, v, w, p["u"], cfg.chunk)
+    y = y.reshape(*x.shape).astype(x.dtype)
+    y = layernorm(p["ln_x"], y)
+    out = dense(p["wo"], y * g)
+    if return_state:
+        return out, s_fin, x[:, -1]
+    return out
+
+
+def channel_mix_forward(p: dict, cfg: RWKVConfig, x: jax.Array,
+                        x_prev=None) -> jax.Array:
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, 0])
+    xx = _token_shift(x, x_prev) - x
+    xk = x + xx * p["mix_k"].astype(x.dtype)
+    xr = x + xx * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk).astype(jnp.float32)))
+    rr = jax.nn.sigmoid(dense(p["wr"], xr).astype(jnp.float32))
+    return (rr * dense(p["wv"], kk.astype(x.dtype)).astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# O(1) decode.
+# --------------------------------------------------------------------------
+
+def init_rwkv_cache(batch: int, cfg: RWKVConfig, dtype=jnp.bfloat16) -> dict:
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), dtype),   # time-mix shift
+        "x_cm": jnp.zeros((batch, cfg.d_model), dtype),   # channel-mix shift
+    }
+
+
+def time_mix_decode(p: dict, cfg: RWKVConfig, x: jax.Array, cache: dict
+                    ) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d). S_t update + output in O(D^2) per head."""
+    r, k, v, w, g = _rkvwg(p, cfg, x, cache["x_tm"])
+    rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))  # (B,H,D)
+    wf = w.astype(jnp.float32)[:, 0]
+    s = cache["state"]
+    kv = jnp.einsum("bhd,bhe->bhde", kf, vf)
+    y = jnp.einsum("bhd,bhde->bhe", rf, s + p["u"][None, ..., None] * kv)
+    s_new = s * wf[..., None] + kv
+    y = y.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    y = layernorm(p["ln_x"], y)
+    out = dense(p["wo"], y * g)
+    return out, {**cache, "state": s_new, "x_tm": x[:, 0]}
+
+
+def channel_mix_decode(p: dict, cfg: RWKVConfig, x: jax.Array, cache: dict
+                       ) -> Tuple[jax.Array, dict]:
+    prev = cache["x_cm"]
+    xx = prev[:, None] - x
+    xk = x + xx * p["mix_k"].astype(x.dtype)
+    xr = x + xx * p["mix_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(dense(p["wk"], xk).astype(jnp.float32)))
+    rr = jax.nn.sigmoid(dense(p["wr"], xr).astype(jnp.float32))
+    out = (rr * dense(p["wv"], kk.astype(x.dtype)).astype(jnp.float32)
+           ).astype(x.dtype)
+    return out, {**cache, "x_cm": x[:, 0]}

@@ -1,0 +1,181 @@
+"""Selective state-space (Mamba-style) branch used by Hymba's hybrid heads.
+
+Recurrence (per channel c, state n):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+with input-dependent dt/B/C ("selective"). Sequence form uses
+``jax.lax.associative_scan`` (parallel prefix, O(log S) depth); decode is
+a single O(1) state update — which is why the hybrid/SSM architectures
+take the long_500k shape natively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int              # expanded channels (Hymba: ~2x d_model)
+    d_state: int = 16
+    d_conv: int = 4           # depthwise causal conv width
+    dt_rank: int = 0          # 0 -> ceil(d_model / 16)
+    chunk: int = 0            # 0 = one associative scan over S; >0 =
+                              # sequential scan over S/chunk blocks with an
+                              # associative scan inside each (bounds the
+                              # (B, S, C, N) f32 working set — §Perf lever)
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def ssm_init(key, cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # S4D-real initialisation for A.
+    a = jnp.tile(jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32)[None, :],
+                 (cfg.d_inner, 1))
+    dt_init = jax.random.uniform(k5, (cfg.d_inner,), jnp.float32,
+                                 math.log(1e-3), math.log(1e-1))
+    return {
+        "in_proj": dense_init(k1, cfg.d_model, (2 * cfg.d_inner,), dtype),
+        "conv": (jax.random.normal(k2, (cfg.d_conv, cfg.d_inner), jnp.float32)
+                 * (1.0 / math.sqrt(cfg.d_conv))).astype(dtype),
+        "conv_bias": jnp.zeros((cfg.d_inner,), dtype),
+        "x_proj": dense_init(k3, cfg.d_inner,
+                             (cfg.rank + 2 * cfg.d_state,), dtype),
+        "dt_proj": dense_init(k4, cfg.rank, (cfg.d_inner,), dtype, use_bias=True),
+        "dt_bias": dt_init,                       # softplus^-1-ish floor
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((cfg.d_inner,), jnp.float32),
+        "out_proj": dense_init(k6, cfg.d_inner, (cfg.d_model,), dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array
+                           ) -> jax.Array:
+    """x: (B, S, C), w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    segs = [xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k)]
+    return sum(segs) + b[None, None, :]
+
+
+def _selective_terms(p: dict, cfg: SSMConfig, xc: jax.Array):
+    """From conv output xc (..., S, C) derive dt (.., S, C), B/C (.., S, N)."""
+    proj = dense(p["x_proj"], xc).astype(jnp.float32)
+    dt_lo = proj[..., :cfg.rank]
+    b_t = proj[..., cfg.rank:cfg.rank + cfg.d_state]
+    c_t = proj[..., cfg.rank + cfg.d_state:]
+    dt = jax.nn.softplus(
+        dense(p["dt_proj"], dt_lo.astype(xc.dtype)).astype(jnp.float32)
+        + p["dt_bias"][None, None, :])
+    return dt, b_t, c_t
+
+
+def ssm_forward(p: dict, cfg: SSMConfig, x: jax.Array,
+                return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model), parallel associative scan.
+    With ``return_state`` also returns the decode cache after the last
+    token (h state + conv window)."""
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(
+        _causal_depthwise_conv(xi, p["conv"], p["conv_bias"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    dt, b_t, c_t = _selective_terms(p, cfg, xc)
+    a = -jnp.exp(p["a_log"])                                     # (C, N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if cfg.chunk and x.shape[1] > cfg.chunk:
+        # Discretise PER CHUNK inside the scan so the (B, chunk, C, N)
+        # f32 tensors never materialise over the full sequence — this is
+        # what bounds the working set (the full-S version allocates
+        # B*S*C*N floats twice).
+        b_sz, s_len = x.shape[0], x.shape[1]
+        n = -(-s_len // cfg.chunk)
+        pad = n * cfg.chunk - s_len
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0))) if pad else dt
+        bt_p = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0))) if pad else b_t
+        ct_p = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0))) if pad else c_t
+        xc_p = (jnp.pad(xc.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+                if pad else xc.astype(jnp.float32))
+        sp = n * cfg.chunk
+        chunked = lambda t: t.reshape(b_sz, n, cfg.chunk, -1).swapaxes(0, 1)
+        dt_c, bt_c, ct_c, xc_c = map(chunked, (dt_p, bt_p, ct_p, xc_p))
+
+        def chunk_step(h0, xs):
+            dtj, btj, ctj, xcj = xs
+            ab = jnp.exp(dtj[..., None] * a[None, None])      # (B,c,C,N)
+            bb = (dtj * xcj)[..., None] * btj[..., None, :]
+            a_cum, h_local = jax.lax.associative_scan(combine, (ab, bb),
+                                                      axis=1)
+            h_full = h_local + a_cum * h0[:, None]
+            yc = jnp.einsum("bscn,bsn->bsc", h_full, ctj)
+            return h_full[:, -1], yc
+
+        h0 = jnp.zeros((b_sz, cfg.d_inner, cfg.d_state), jnp.float32)
+        h_last, y_c = jax.lax.scan(chunk_step, h0,
+                                   (dt_c, bt_c, ct_c, xc_c))
+        y = y_c.swapaxes(0, 1).reshape(b_sz, sp, -1)[:, :s_len]
+        y = y + p["d_skip"] * xc.astype(jnp.float32)
+    else:
+        abar = jnp.exp(dt[..., None] * a[None, None])            # (B,S,C,N)
+        bx = (dt * xc.astype(jnp.float32))[..., None] * b_t[..., None, :]
+        a_s, h = jax.lax.associative_scan(combine, (abar, bx), axis=1)
+        h_last = h[:, -1]
+        y = jnp.einsum("bscn,bsn->bsc", h, c_t) \
+            + p["d_skip"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(p["out_proj"], y)
+    if not return_state:
+        return out
+    kc = cfg.d_conv - 1
+    if x.shape[1] >= kc:
+        conv_win = xi[:, -kc:]
+    else:
+        conv_win = jnp.pad(xi, ((0, 0), (kc - x.shape[1], 0), (0, 0)))
+    return out, {"h": h_last, "conv": conv_win}
+
+
+def init_ssm_cache(batch: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def ssm_decode_step(p: dict, cfg: SSMConfig, x: jax.Array, cache: dict
+                    ) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d_model); O(1) state update."""
+    xz = dense(p["in_proj"], x)
+    xi, z = jnp.split(xz, 2, axis=-1)                            # (B,1,C)
+    window = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)],
+                             axis=1)                             # (B,K,C)
+    w = p["conv"].astype(jnp.float32)
+    xc = jnp.sum(window.astype(jnp.float32) * w[None], axis=1, keepdims=True)
+    xc = jax.nn.silu(xc + p["conv_bias"].astype(jnp.float32)[None, None])
+    xc = xc.astype(x.dtype)
+    dt, b_t, c_t = _selective_terms(p, cfg, xc)                  # (B,1,*)
+    a = -jnp.exp(p["a_log"])
+    abar = jnp.exp(dt[..., None] * a[None, None])[:, 0]          # (B,C,N)
+    bx = ((dt * xc.astype(jnp.float32))[..., None] * b_t[..., None, :])[:, 0]
+    h = cache["h"] * abar + bx                                   # (B,C,N)
+    y = jnp.einsum("bcn,bn->bc", h, c_t[:, 0]) \
+        + p["d_skip"] * xc[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(x.dtype)
+    out = dense(p["out_proj"], y)
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,475 @@
+"""Transformer block zoo + layer-stack machinery.
+
+Every repeated stack is a ``jax.lax.scan`` over params stacked on a
+leading layer axis (keeps HLO size O(1) in depth — essential for the
+61/94-layer dry-runs), with optional ``jax.checkpoint`` (remat) around
+the block body for training. Families:
+
+  dense   — pre-norm GQA attention + (SwiGLU | GeLU) MLP
+  mla     — pre-norm MLA attention + SwiGLU MLP (MiniCPM3)
+  moe     — pre-norm GQA attention + top-k MoE FFN (+ shared expert)
+  rwkv    — RWKV-6 time-mix + channel-mix
+  hybrid  — Hymba: parallel {GQA attention, Mamba SSM} heads + SwiGLU MLP
+  encdec  — Whisper: bidirectional encoder; decoder w/ self+cross attention
+  vlm     — Llama-3.2-Vision: grouped scan, 1 gated cross-attn + 4 self
+            layers per group
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (dense, dense_init, gelu_mlp, gelu_mlp_init,
+                                 layernorm, layernorm_init, rmsnorm,
+                                 rmsnorm_init, swiglu, swiglu_init)
+
+PyTree = Any
+
+
+def _norm_init(kind: str, dim: int) -> dict:
+    return rmsnorm_init(dim) if kind == "rmsnorm" else layernorm_init(dim)
+
+
+def _norm(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+def _mlp_init(kind: str, key, d_model: int, d_ff: int, dtype) -> dict:
+    return (swiglu_init(key, d_model, d_ff, dtype) if kind == "swiglu"
+            else gelu_mlp_init(key, d_model, d_ff, dtype))
+
+
+def _mlp(kind: str, p: dict, x: jax.Array) -> jax.Array:
+    return swiglu(p, x) if kind == "swiglu" else gelu_mlp(p, x)
+
+
+def stack_init(block_init: Callable, key, n_layers: int) -> PyTree:
+    """vmap a single-layer init over per-layer keys -> stacked params."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(block_init)(keys)
+
+
+def stack_apply(block_fn: Callable, stacked: PyTree, x: jax.Array,
+                aux0: Optional[jax.Array] = None, remat: bool = False,
+                unroll: bool = False,
+                ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """scan ``block_fn(layer_params, x) -> (x', aux)`` over the layer axis.
+    aux (e.g. MoE load-balance loss) is accumulated additively.
+    ``unroll`` materialises every layer in HLO — used by the dry-run's
+    per-layer cost calibration (XLA cost analysis counts while bodies
+    once, so scanned programs under-report; see launch/dryrun.py)."""
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def body(carry, layer_params):
+        x, aux = carry
+        x, a = fn(layer_params, x)
+        return (x, aux + a if aux is not None else None), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), stacked, unroll=unroll)
+    return x, aux
+
+
+def stack_decode(block_fn: Callable, stacked: PyTree, caches: PyTree,
+                 x: jax.Array, unroll: bool = False
+                 ) -> Tuple[jax.Array, PyTree]:
+    """scan ``block_fn(layer_params, cache, x) -> (x', cache')`` over layers,
+    threading per-layer caches (stacked on the layer axis)."""
+
+    def body(x, layer):
+        lp, cache = layer
+        x, cache = block_fn(lp, cache, x)
+        return x, cache
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches), unroll=unroll)
+    return x, new_caches
+
+
+def stack_prefill(block_fn: Callable, stacked: PyTree, x: jax.Array,
+                  unroll: bool = False) -> Tuple[jax.Array, PyTree]:
+    """scan ``block_fn(layer_params, x) -> (x', cache)`` collecting the
+    per-layer caches (stacked on the layer axis) as scan outputs."""
+
+    def body(x, lp):
+        x, cache = block_fn(lp, x)
+        return x, cache
+
+    x, caches = jax.lax.scan(body, x, stacked, unroll=unroll)
+    return x, caches
+
+
+# --------------------------------------------------------------------------
+# Block definitions. Each returns (init_fn(key) -> params,
+#                                  fwd(params, x) -> (x, aux),
+#                                  decode(params, cache, x, pos) -> (x, cache),
+#                                  init_cache(batch, length) -> cache,
+#                                  pfl(params, x, length) -> (x, cache))
+# --------------------------------------------------------------------------
+
+def dense_block(cfg) -> tuple:
+    acfg = cfg.attn_config()
+    norm, mlpk = cfg.norm, cfg.mlp
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "attn": attn.attn_init(k1, acfg, cfg.dtype),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "mlp": _mlp_init(mlpk, k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    def fwd(p, x):
+        s = x.shape[1]
+        pos = jnp.arange(s, dtype=jnp.int32)
+        x = x + attn.self_attention(p["attn"], acfg, _norm(norm, p["ln1"], x), pos)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def decode(p, cache, x, pos):
+        y, cache2 = attn.decode_self_attention(
+            p["attn"], acfg, _norm(norm, p["ln1"], x), cache["kv"], pos)
+        x = x + y
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {**cache, "kv": cache2}
+
+    def init_cache(batch, length):
+        return {"kv": attn.init_kv_cache(batch, length, acfg, cfg.dtype)}
+
+    def pfl(p, x, length):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        y, kv = attn.prefill_kv_cache(p["attn"], acfg,
+                                      _norm(norm, p["ln1"], x), pos, length)
+        x = x + y
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {"kv": kv}
+
+    return init, fwd, decode, init_cache, pfl
+
+
+def mla_block(cfg) -> tuple:
+    mcfg = cfg.mla_config()
+    norm, mlpk = cfg.norm, cfg.mlp
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "attn": mla_mod.mla_init(k1, mcfg, cfg.dtype),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "mlp": _mlp_init(mlpk, k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    def fwd(p, x):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + mla_mod.mla_self_attention(p["attn"], mcfg,
+                                           _norm(norm, p["ln1"], x), pos)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def decode(p, cache, x, pos):
+        y, c2 = mla_mod.mla_decode_step(p["attn"], mcfg,
+                                        _norm(norm, p["ln1"], x),
+                                        cache["kv"], pos)
+        x = x + y
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {**cache, "kv": c2}
+
+    def init_cache(batch, length):
+        return {"kv": mla_mod.init_mla_cache(batch, length, mcfg, cfg.dtype)}
+
+    def pfl(p, x, length):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        y, kv = mla_mod.mla_prefill(p["attn"], mcfg,
+                                    _norm(norm, p["ln1"], x), pos, length)
+        x = x + y
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {"kv": kv}
+
+    return init, fwd, decode, init_cache, pfl
+
+
+def moe_block(cfg) -> tuple:
+    acfg = cfg.attn_config()
+    ecfg = cfg.moe_config()
+    norm = cfg.norm
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "attn": attn.attn_init(k1, acfg, cfg.dtype),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "moe": moe_mod.moe_init(k2, ecfg, cfg.dtype),
+        }
+
+    def fwd(p, x):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + attn.self_attention(p["attn"], acfg, _norm(norm, p["ln1"], x), pos)
+        y, aux = moe_mod.moe_apply(p["moe"], ecfg, _norm(norm, p["ln2"], x))
+        return x + y, aux
+
+    def decode(p, cache, x, pos):
+        y, c2 = attn.decode_self_attention(p["attn"], acfg,
+                                           _norm(norm, p["ln1"], x),
+                                           cache["kv"], pos)
+        x = x + y
+        y, _ = moe_mod.moe_apply(p["moe"], ecfg, _norm(norm, p["ln2"], x))
+        return x + y, {**cache, "kv": c2}
+
+    def init_cache(batch, length):
+        return {"kv": attn.init_kv_cache(batch, length, acfg, cfg.dtype)}
+
+    def pfl(p, x, length):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        y, kv = attn.prefill_kv_cache(p["attn"], acfg,
+                                      _norm(norm, p["ln1"], x), pos, length)
+        x = x + y
+        y, _ = moe_mod.moe_apply(p["moe"], ecfg, _norm(norm, p["ln2"], x))
+        return x + y, {"kv": kv}
+
+    return init, fwd, decode, init_cache, pfl
+
+
+def rwkv_block(cfg) -> tuple:
+    rcfg = cfg.rwkv_config()
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": layernorm_init(cfg.d_model),
+            "tmix": rwkv_mod.time_mix_init(k1, rcfg, cfg.dtype),
+            "ln2": layernorm_init(cfg.d_model),
+            "cmix": rwkv_mod.channel_mix_init(k2, rcfg, cfg.dtype),
+        }
+
+    def fwd(p, x):
+        x = x + rwkv_mod.time_mix_forward(p["tmix"], rcfg,
+                                          layernorm(p["ln1"], x))
+        x = x + rwkv_mod.channel_mix_forward(p["cmix"], rcfg,
+                                             layernorm(p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def decode(p, cache, x, pos):
+        del pos  # O(1) state, position-free
+        y, c = rwkv_mod.time_mix_decode(p["tmix"], rcfg,
+                                        layernorm(p["ln1"], x), cache["r"])
+        x = x + y
+        y, c = rwkv_mod.channel_mix_decode(p["cmix"], rcfg,
+                                           layernorm(p["ln2"], x), c)
+        return x + y, {**cache, "r": c}
+
+    def init_cache(batch, length):
+        del length  # O(1) state
+        return {"r": rwkv_mod.init_rwkv_cache(batch, rcfg, cfg.dtype)}
+
+    def pfl(p, x, length):
+        del length
+        h1 = layernorm(p["ln1"], x)
+        y, s_fin, x_tm = rwkv_mod.time_mix_forward(p["tmix"], rcfg, h1,
+                                                   return_state=True)
+        x = x + y
+        h2 = layernorm(p["ln2"], x)
+        x = x + rwkv_mod.channel_mix_forward(p["cmix"], rcfg, h2)
+        cache = {"r": {"state": s_fin, "x_tm": x_tm, "x_cm": h2[:, -1]}}
+        return x, cache
+
+    return init, fwd, decode, init_cache, pfl
+
+
+def hybrid_block(cfg) -> tuple:
+    """Hymba: attention and SSM branches in parallel on the same input,
+    per-branch output norms, averaged; then a SwiGLU MLP."""
+    acfg = cfg.attn_config()
+    scfg = cfg.ssm_config()
+    norm, mlpk = cfg.norm, cfg.mlp
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "attn": attn.attn_init(k1, acfg, cfg.dtype),
+            "ssm": ssm_mod.ssm_init(k2, scfg, cfg.dtype),
+            "attn_out_norm": rmsnorm_init(cfg.d_model),
+            "ssm_out_norm": rmsnorm_init(cfg.d_model),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "mlp": _mlp_init(mlpk, k3, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    def fwd(p, x):
+        h = _norm(norm, p["ln1"], x)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        ya = rmsnorm(p["attn_out_norm"],
+                     attn.self_attention(p["attn"], acfg, h, pos))
+        ys = rmsnorm(p["ssm_out_norm"], ssm_mod.ssm_forward(p["ssm"], scfg, h))
+        x = x + 0.5 * (ya + ys)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def decode(p, cache, x, pos):
+        h = _norm(norm, p["ln1"], x)
+        ya, ckv = attn.decode_self_attention(p["attn"], acfg, h,
+                                             cache["kv"], pos)
+        ya = rmsnorm(p["attn_out_norm"], ya)
+        ys, ch = ssm_mod.ssm_decode_step(p["ssm"], scfg, h, cache["ssm"])
+        ys = rmsnorm(p["ssm_out_norm"], ys)
+        x = x + 0.5 * (ya + ys)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {**cache, "kv": ckv, "ssm": ch}
+
+    def init_cache(batch, length):
+        return {"kv": attn.init_kv_cache(batch, length, acfg, cfg.dtype),
+                "ssm": ssm_mod.init_ssm_cache(batch, scfg, cfg.dtype)}
+
+    def pfl(p, x, length):
+        h = _norm(norm, p["ln1"], x)
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        ya, kv = attn.prefill_kv_cache(p["attn"], acfg, h, pos, length)
+        ya = rmsnorm(p["attn_out_norm"], ya)
+        ys, sc = ssm_mod.ssm_forward(p["ssm"], scfg, h, return_state=True)
+        ys = rmsnorm(p["ssm_out_norm"], ys)
+        x = x + 0.5 * (ya + ys)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {"kv": kv, "ssm": sc}
+
+    return init, fwd, decode, init_cache, pfl
+
+
+def encdec_blocks(cfg) -> tuple:
+    """Whisper-style: returns (enc_block fns, dec_block fns). Decoder blocks
+    carry a cross-attention over the (stubbed) audio-frame embeddings."""
+    # Whisper uses learned positions (added at the embedding), not RoPE.
+    acfg = dataclasses.replace(cfg.attn_config(), rope=False)
+    enc_acfg = dataclasses.replace(acfg, causal=False)
+    x_acfg = dataclasses.replace(acfg, causal=False)
+    norm, mlpk = cfg.norm, cfg.mlp
+
+    def enc_init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "attn": attn.attn_init(k1, enc_acfg, cfg.dtype),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "mlp": _mlp_init(mlpk, k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    def enc_fwd(p, x):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + attn.self_attention(p["attn"], enc_acfg,
+                                    _norm(norm, p["ln1"], x), pos)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def dec_init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": _norm_init(norm, cfg.d_model),
+            "self": attn.attn_init(k1, acfg, cfg.dtype),
+            "lnx": _norm_init(norm, cfg.d_model),
+            "cross": attn.attn_init(k2, x_acfg, cfg.dtype),
+            "ln2": _norm_init(norm, cfg.d_model),
+            "mlp": _mlp_init(mlpk, k3, cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+
+    def dec_fwd(p, x, enc_out):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + attn.self_attention(p["self"], acfg, _norm(norm, p["ln1"], x), pos)
+        x = x + attn.cross_attention(p["cross"], x_acfg,
+                                     _norm(norm, p["lnx"], x), enc_out)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, jnp.zeros((), jnp.float32)
+
+    def dec_decode(p, cache, x, pos, enc_out):
+        y, ckv = attn.decode_self_attention(p["self"], acfg,
+                                            _norm(norm, p["ln1"], x),
+                                            cache["kv"], pos)
+        x = x + y
+        x = x + attn.cross_attention(p["cross"], x_acfg,
+                                     _norm(norm, p["lnx"], x), enc_out)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {**cache, "kv": ckv}
+
+    def dec_init_cache(batch, length):
+        return {"kv": attn.init_kv_cache(batch, length, acfg, cfg.dtype)}
+
+    def dec_pfl(p, x, length, enc_out):
+        pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        y, kv = attn.prefill_kv_cache(p["self"], acfg,
+                                      _norm(norm, p["ln1"], x), pos, length)
+        x = x + y
+        x = x + attn.cross_attention(p["cross"], x_acfg,
+                                     _norm(norm, p["lnx"], x), enc_out)
+        x = x + _mlp(mlpk, p["mlp"], _norm(norm, p["ln2"], x))
+        return x, {"kv": kv}
+
+    return ((enc_init, enc_fwd),
+            (dec_init, dec_fwd, dec_decode, dec_init_cache, dec_pfl))
+
+
+def vlm_group(cfg) -> tuple:
+    """One Llama-3.2-Vision 'group': 1 gated cross-attn layer followed by
+    (cross_attn_period - 1) self-attn layers. The stack scans groups."""
+    acfg = cfg.attn_config()
+    x_acfg = dataclasses.replace(acfg, causal=False, rope=False)
+    norm, mlpk = cfg.norm, cfg.mlp
+    n_self = cfg.cross_attn_period - 1
+    d_init, d_fwd, d_decode, d_init_cache, d_pfl = dense_block(cfg)
+
+    def init(key):
+        kx, km, ks = jax.random.split(key, 3)
+        return {
+            "x_ln": _norm_init(norm, cfg.d_model),
+            "x_attn": attn.attn_init(kx, x_acfg, cfg.dtype),
+            "x_gate": jnp.zeros((), jnp.float32),
+            "x_ln2": _norm_init(norm, cfg.d_model),
+            "x_mlp": _mlp_init(mlpk, km, cfg.d_model, cfg.d_ff, cfg.dtype),
+            "x_mlp_gate": jnp.zeros((), jnp.float32),
+            "selfs": stack_init(d_init, ks, n_self),
+        }
+
+    def fwd(p, x, img):
+        y = attn.cross_attention(p["x_attn"], x_acfg,
+                                 _norm(norm, p["x_ln"], x), img)
+        x = x + jnp.tanh(p["x_gate"]).astype(x.dtype) * y
+        y = _mlp(mlpk, p["x_mlp"], _norm(norm, p["x_ln2"], x))
+        x = x + jnp.tanh(p["x_mlp_gate"]).astype(x.dtype) * y
+        x, _ = stack_apply(d_fwd, p["selfs"], x, jnp.zeros((), jnp.float32),
+                           remat=cfg.remat, unroll=cfg.scan_unroll)
+        return x, jnp.zeros((), jnp.float32)
+
+    def decode(p, cache, x, pos, img):
+        y = attn.cross_attention(p["x_attn"], x_acfg,
+                                 _norm(norm, p["x_ln"], x), img)
+        x = x + jnp.tanh(p["x_gate"]).astype(x.dtype) * y
+        y = _mlp(mlpk, p["x_mlp"], _norm(norm, p["x_ln2"], x))
+        x = x + jnp.tanh(p["x_mlp_gate"]).astype(x.dtype) * y
+        x, c = stack_decode(lambda lp, ch, xx: d_decode(lp, ch, xx, pos),
+                            p["selfs"], cache["selfs"], x,
+                            unroll=cfg.scan_unroll)
+        return x, {**cache, "selfs": c}
+
+    def init_cache(batch, length):
+        one = d_init_cache(batch, length)
+        return {"selfs": jax.tree.map(
+            lambda a: jnp.stack([a] * n_self), one)}
+
+    def pfl(p, x, length, img):
+        y = attn.cross_attention(p["x_attn"], x_acfg,
+                                 _norm(norm, p["x_ln"], x), img)
+        x = x + jnp.tanh(p["x_gate"]).astype(x.dtype) * y
+        y = _mlp(mlpk, p["x_mlp"], _norm(norm, p["x_ln2"], x))
+        x = x + jnp.tanh(p["x_mlp_gate"]).astype(x.dtype) * y
+        x, caches = stack_prefill(lambda lp, xx: d_pfl(lp, xx, length),
+                                  p["selfs"], x, unroll=cfg.scan_unroll)
+        return x, {"selfs": caches}
+
+    return init, fwd, decode, init_cache, pfl

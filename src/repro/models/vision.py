@@ -1,0 +1,144 @@
+"""The paper's own experiment models, CPU-sized.
+
+The paper trains ResNet-18/34 on CIFAR-10/100 and logistic regression on
+EMNIST. Offline + CPU-only, we use: logistic regression (exactly the
+paper's convex task), an MLP, and "ResNet-tiny" — a small residual
+conv net with the same structural ingredients as ResNet-18 (conv stem,
+2-conv residual blocks with projection shortcuts, global average pool).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TaskModel(NamedTuple):
+    init: Callable
+    loss_fn: Callable         # (params, batch{x,y}) -> scalar
+    predict: Callable         # (params, x) -> logits
+    name: str
+
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(model: TaskModel, params, x, y, batch: int = 4096) -> float:
+    correct = 0
+    for i in range(0, len(y), batch):
+        logits = model.predict(params, x[i:i + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == y[i:i + batch]))
+    return correct / len(y)
+
+
+def logistic_regression(d: int, n_classes: int) -> TaskModel:
+    def init(key):
+        return {"w": jnp.zeros((d, n_classes), jnp.float32),
+                "b": jnp.zeros((n_classes,), jnp.float32)}
+
+    def predict(p, x):
+        return x @ p["w"] + p["b"]
+
+    def loss_fn(p, batch):
+        return _xent(predict(p, batch["x"]), batch["y"])
+
+    return TaskModel(init, loss_fn, predict, "logreg")
+
+
+def mlp(d: int, n_classes: int, hidden: int = 128) -> TaskModel:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        s1, s2 = 1 / math.sqrt(d), 1 / math.sqrt(hidden)
+        return {"w1": jax.random.normal(k1, (d, hidden)) * s1,
+                "b1": jnp.zeros((hidden,)),
+                "w2": jax.random.normal(k2, (hidden, n_classes)) * s2,
+                "b2": jnp.zeros((n_classes,))}
+
+    def predict(p, x):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        return h @ p["w2"] + p["b2"]
+
+    def loss_fn(p, batch):
+        return _xent(predict(p, batch["x"]), batch["y"])
+
+    return TaskModel(init, loss_fn, predict, "mlp")
+
+
+# ---------------------------------------------------------------------------
+# ResNet-tiny.
+# ---------------------------------------------------------------------------
+
+def _conv(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_init(key, k, cin, cout):
+    return jax.random.normal(key, (k, k, cin, cout)) * math.sqrt(2.0 / (k * k * cin))
+
+
+def _groupnorm(scale, bias, x, groups=8, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def resnet_tiny(n_classes: int, channels=(16, 32, 64), blocks_per_stage=2,
+                in_channels: int = 3) -> TaskModel:
+    """Residual conv net (GroupNorm instead of BatchNorm — no running
+    stats to aggregate across FL clients, a standard FL substitution)."""
+
+    def init(key):
+        keys = iter(jax.random.split(key, 64))
+        p = {"stem": _conv_init(next(keys), 3, in_channels, channels[0]),
+             "gn0_s": jnp.ones((channels[0],)), "gn0_b": jnp.zeros((channels[0],))}
+        cin = channels[0]
+        for si, c in enumerate(channels):
+            for bi in range(blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                p[pre + "_c1"] = _conv_init(next(keys), 3, cin, c)
+                p[pre + "_g1s"], p[pre + "_g1b"] = jnp.ones((c,)), jnp.zeros((c,))
+                p[pre + "_c2"] = _conv_init(next(keys), 3, c, c)
+                p[pre + "_g2s"], p[pre + "_g2b"] = jnp.ones((c,)), jnp.zeros((c,))
+                if stride != 1 or cin != c:
+                    p[pre + "_proj"] = _conv_init(next(keys), 1, cin, c)
+                cin = c
+        p["head_w"] = jnp.zeros((cin, n_classes))
+        p["head_b"] = jnp.zeros((n_classes,))
+        return p
+
+    def predict(p, x):
+        h = _groupnorm(p["gn0_s"], p["gn0_b"], _conv(p["stem"], x))
+        h = jax.nn.relu(h)
+        cin = channels[0]
+        for si, c in enumerate(channels):
+            for bi in range(blocks_per_stage):
+                pre = f"s{si}b{bi}"
+                stride = 2 if (bi == 0 and si > 0) else 1
+                y = _conv(p[pre + "_c1"], h, stride)
+                y = jax.nn.relu(_groupnorm(p[pre + "_g1s"], p[pre + "_g1b"], y))
+                y = _conv(p[pre + "_c2"], y)
+                y = _groupnorm(p[pre + "_g2s"], p[pre + "_g2b"], y)
+                sc = h if (pre + "_proj") not in p else _conv(p[pre + "_proj"],
+                                                              h, stride)
+                h = jax.nn.relu(y + sc)
+                cin = c
+        pooled = h.mean(axis=(1, 2))
+        return pooled @ p["head_w"] + p["head_b"]
+
+    def loss_fn(p, batch):
+        return _xent(predict(p, batch["x"]), batch["y"])
+
+    return TaskModel(init, loss_fn, predict, "resnet_tiny")

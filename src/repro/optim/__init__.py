@@ -1,0 +1,93 @@
+"""Local (client-side) optimizers + LR schedules.
+
+The paper's CLIENTUPDATE returns a plain gradient, but the framework also
+supports multi-step local training (FedAvg-style); these are the
+optimizers clients use locally, plus schedules for the server's eta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class LocalOpt(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    name: str
+
+
+def sgd(lr: float) -> LocalOpt:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+
+    return LocalOpt(init, update, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9) -> LocalOpt:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda s, g: beta * s + g.astype(jnp.float32),
+                         state, grads)
+        new = jax.tree.map(lambda p, mi: (p - lr * mi).astype(p.dtype),
+                           params, m)
+        return new, m
+
+    return LocalOpt(init, update, "momentum")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> LocalOpt:
+    class State(NamedTuple):
+        step: jax.Array
+        m: PyTree
+        v: PyTree
+
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return State(jnp.zeros((), jnp.int32), z(), z())
+
+    def update(grads, state, params):
+        t = state.step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p - step - lr * weight_decay * p.astype(jnp.float32)
+                    ).astype(p.dtype)
+
+        return jax.tree.map(upd, params, m, v), State(t, m, v)
+
+    return LocalOpt(init, update, "adamw")
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = base_lr * 0.5 * (1 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr_at
+
+
+def constant_schedule(base_lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

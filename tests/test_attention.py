@@ -1,0 +1,103 @@
+"""Attention paths: chunked online-softmax == full, window masks, MLA."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (AttentionConfig, attend, attn_init,
+                                    decode_self_attention, init_kv_cache,
+                                    prefill_kv_cache, self_attention)
+
+
+def _qkv(key, b, sq, sk, h, kh, d):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kh, d), jnp.float32)
+    return q, k, v
+
+
+@settings(max_examples=15, deadline=None)
+@given(sk=st.integers(3, 70), chunk=st.sampled_from([4, 16, 32]),
+       window=st.sampled_from([None, 8]))
+def test_chunked_equals_full(sk, chunk, window):
+    q, k, v = _qkv(jax.random.key(0), 2, sk, sk, 4, 2, 16)
+    pos = jnp.arange(sk)
+    full = attend(q, k, v, pos, pos, True, window, kv_chunk=None)
+    chk = attend(q, k, v, pos, pos, True, window, kv_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causal_mask_blocks_future():
+    """Changing a future token must not change past outputs."""
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attn_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 10, 32), jnp.float32)
+    pos = jnp.arange(10)
+    y1 = self_attention(p, cfg, x, pos)
+    x2 = x.at[:, -1].add(10.0)
+    y2 = self_attention(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(y1[:, :9]), np.asarray(y2[:, :9]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.max(jnp.abs(y1[:, 9] - y2[:, 9]))) > 1e-3
+
+
+def test_window_mask_limits_reach():
+    """With window w, token t must not see tokens < t - w + 1."""
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=4, head_dim=8,
+                          window=4)
+    p = attn_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 12, 32), jnp.float32)
+    pos = jnp.arange(12)
+    y1 = self_attention(p, cfg, x, pos)
+    x2 = x.at[:, 0].add(100.0)   # token 0 out of window for t >= 4
+    y2 = self_attention(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(y1[:, 4:]), np.asarray(y2[:, 4:]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gqa_head_groups_use_right_kv():
+    """With K=2 kv heads, q heads 0..1 use kv head 0; make kv head 1 huge
+    and check only the second half of q heads changes."""
+    b, s, h, kh, d = 1, 6, 4, 2, 8
+    q, k, v = _qkv(jax.random.key(0), b, s, s, h, kh, d)
+    pos = jnp.arange(s)
+    base = attend(q, k, v, pos, pos, True, None)
+    v2 = v.at[:, :, 1].add(5.0)
+    mod = attend(q, k, v2, pos, pos, True, None)
+    diff = np.abs(np.asarray(base - mod)).max(axis=(0, 1, 3))
+    assert diff[0] < 1e-6 and diff[1] < 1e-6
+    assert diff[2] > 1e-2 and diff[3] > 1e-2
+
+
+def test_prefill_cache_then_decode_continuity():
+    cfg = AttentionConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attn_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 9, 32), jnp.float32)
+    pos = jnp.arange(9)
+    y_all = self_attention(p, cfg, x, pos)
+    y_pre, cache = prefill_kv_cache(p, cfg, x[:, :8], jnp.arange(8), 16)
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_all[:, :8]),
+                               rtol=1e-5, atol=1e-5)
+    y9, cache = decode_self_attention(p, cfg, x[:, 8:9], cache,
+                                      jnp.asarray(8))
+    np.testing.assert_allclose(np.asarray(y9), np.asarray(y_all[:, 8:9]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_cache_is_compressed():
+    """The whole point of MLA: cache stores kv_lora + rope dims per token,
+    NOT n_heads * head_dim * 2."""
+    from repro.models.mla import MLAConfig, init_mla_cache
+    cfg = MLAConfig(d_model=64, n_heads=8, q_lora_rank=32, kv_lora_rank=16,
+                    qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8)
+    cache = init_mla_cache(2, 100, cfg)
+    per_token = (cache["c_kv"].shape[-1] + cache["k_pe"].shape[-1])
+    full_kv = 2 * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+    assert per_token == 20
+    assert per_token * 12 < full_kv  # >12x compression at this config

@@ -1,0 +1,98 @@
+"""OTA channel statistics: alpha-stable sampler, fading, Upsilon."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
+                                sample_fading, sample_interference, upsilon)
+from repro.core.tail_index import log_moment_estimate
+
+N = 200_000
+
+
+def test_alpha2_is_gaussian():
+    x = sample_alpha_stable(jax.random.key(1), 2.0, (N,))
+    # S(2, 0, c) == N(0, 2 c^2): var ~ 2.
+    assert abs(float(jnp.var(x)) - 2.0) < 0.05
+    # Gaussian kurtosis.
+    k = float(jnp.mean(x**4) / jnp.var(x) ** 2)
+    assert abs(k - 3.0) < 0.2
+
+
+@pytest.mark.parametrize("alpha", [1.2, 1.5, 1.8, 2.0])
+def test_tail_index_recovered(alpha):
+    x = sample_alpha_stable(jax.random.key(2), alpha, (N,))
+    a_hat, c_hat = log_moment_estimate(x)
+    assert abs(float(a_hat) - alpha) < 0.05
+    assert abs(float(c_hat) - 1.0) < 0.05
+
+
+def test_scale_recovered():
+    x = sample_alpha_stable(jax.random.key(3), 1.5, (N,), scale=0.1)
+    _, c_hat = log_moment_estimate(x)
+    assert abs(float(c_hat) - 0.1) < 0.02
+
+
+def test_heavy_tails_have_extremes():
+    """Smaller alpha -> heavier tails -> larger extreme draws (Remark 6)."""
+    x12 = sample_alpha_stable(jax.random.key(4), 1.2, (N,))
+    x20 = sample_alpha_stable(jax.random.key(4), 2.0, (N,))
+    assert float(jnp.max(jnp.abs(x12))) > 10 * float(jnp.max(jnp.abs(x20)))
+
+
+def test_rayleigh_fading_moments():
+    cfg = OTAChannelConfig(fading="rayleigh", mu_c=1.0)
+    h = sample_fading(jax.random.key(5), cfg, (N,))
+    assert abs(float(h.mean()) - 1.0) < 0.01
+    assert abs(float(h.var()) - cfg.fading_var) < 0.01
+    assert float(h.min()) >= 0.0
+
+
+def test_no_fading_no_interference():
+    cfg = OTAChannelConfig(fading="none", interference=False)
+    h = sample_fading(jax.random.key(6), cfg, (100,))
+    xi = sample_interference(jax.random.key(7), cfg, (100,))
+    np.testing.assert_array_equal(np.asarray(h), 1.0)
+    np.testing.assert_array_equal(np.asarray(xi), 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n1=st.integers(2, 100), n2=st.integers(2, 100),
+       d=st.integers(1, 10_000))
+def test_upsilon_monotone_in_clients(n1, n2, d):
+    """Remark 12: more clients -> smaller Upsilon (faster convergence)."""
+    cfg = OTAChannelConfig(alpha=1.5)
+    u1 = upsilon(cfg, d, min(n1, n2), grad_bound=1.0)
+    u2 = upsilon(cfg, d, max(n1, n2), grad_bound=1.0)
+    assert u2 <= u1 + 1e-9
+
+
+def test_upsilon_monotone_in_fading_variance():
+    """Remark 11: larger sigma_c -> larger Upsilon."""
+    lo = OTAChannelConfig(fading="gaussian", sigma_c=0.1)
+    hi = OTAChannelConfig(fading="gaussian", sigma_c=0.9)
+    assert upsilon(hi, 1000, 50, 1.0) > upsilon(lo, 1000, 50, 1.0)
+
+
+def test_alpha_must_be_valid():
+    with pytest.raises(ValueError):
+        OTAChannelConfig(alpha=0.9)
+    with pytest.raises(ValueError):
+        OTAChannelConfig(alpha=2.5)
+    with pytest.raises(ValueError):
+        OTAChannelConfig(fading="nakagami")
+
+
+def test_power_control_truncated_inversion():
+    """With CSI power control, effective fading is 0/1 (silent in deep
+    fades, perfectly inverted otherwise) and most clients transmit."""
+    cfg = OTAChannelConfig(fading="rayleigh", power_control=True,
+                           pc_threshold=0.2)
+    h = sample_fading(jax.random.key(0), cfg, (50_000,))
+    vals = np.unique(np.asarray(h))
+    assert set(vals.tolist()) <= {0.0, 1.0}
+    # Rayleigh(mean 1): P[h < 0.2] ~ 3%; most clients transmit.
+    assert 0.9 < float(h.mean()) <= 1.0

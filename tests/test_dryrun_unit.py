@@ -1,0 +1,75 @@
+"""Dry-run machinery units (no 512-device flag needed here): HLO
+collective parsing, shape adjustment, optimizers/configs wiring."""
+
+import pytest
+
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+from repro.launch.specs import (INPUT_SHAPES, LONG_CONTEXT_WINDOW,
+                                cache_length, shape_config)
+from repro.configs import get_config
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,4]{1,0}") == 2048
+    assert _shape_bytes("bf16[10]{0}") == 20
+    assert _shape_bytes("(f32[4]{0}, u32[2]{0})") == 24
+    assert _shape_bytes("pred[]") == 1   # scalar -> 1 elem
+    assert _shape_bytes("token[]") == 0  # unknown type skipped
+
+
+def test_collective_parse():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), dims={0}
+  %ar.1 = f32[512]{0} all-reduce(f32[512]{0} %y), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[512]{0} %y), dimensions={0}
+  %a2a = (f32[8]{0}, f32[8]{0}) all-to-all(f32[8]{0} %a, f32[8]{0} %b)
+  %cp-start = bf16[64]{0} collective-permute-start(bf16[64]{0} %z)
+  %other = f32[99]{0} add(f32[99]{0} %p, f32[99]{0} %q)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 1024 * 2
+    assert out["all-reduce"] == 512 * 4
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["all-to-all"] == 64
+    assert out["collective-permute"] == 128
+
+
+def test_input_shapes_match_assignment():
+    assert INPUT_SHAPES["train_4k"] == dict(seq=4096, batch=256, kind="train")
+    assert INPUT_SHAPES["prefill_32k"] == dict(seq=32768, batch=32,
+                                               kind="prefill")
+    assert INPUT_SHAPES["decode_32k"] == dict(seq=32768, batch=128,
+                                              kind="decode")
+    assert INPUT_SHAPES["long_500k"] == dict(seq=524288, batch=1,
+                                             kind="decode")
+
+
+def test_long_context_gets_window():
+    dense = get_config("qwen3-14b")
+    assert dense.window is None
+    adj = shape_config(dense, "long_500k")
+    assert adj.window == LONG_CONTEXT_WINDOW
+    # native-window arch keeps its own window
+    sc = get_config("starcoder2-15b")
+    assert shape_config(sc, "long_500k").window == 4096
+    # rwkv needs no window (O(1) state)
+    rw = get_config("rwkv6-7b")
+    assert shape_config(rw, "long_500k").window is None
+    # other shapes untouched
+    assert shape_config(dense, "train_4k").window is None
+
+
+def test_cache_length_respects_window():
+    sc = get_config("starcoder2-15b")        # window 4096
+    assert cache_length(sc, 524288) == 4096
+    assert cache_length(sc, 1024) == 1024
+    q = get_config("qwen3-14b")
+    assert cache_length(q, 32768) == 32768
+
+
+def test_mesh_constructors_pure():
+    """Importing mesh.py must not initialise jax devices."""
+    import importlib
+    import repro.launch.mesh as m
+    importlib.reload(m)   # would fail if module-level device usage existed
+    assert callable(m.make_production_mesh)

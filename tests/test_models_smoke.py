@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (REDUCED same-family variants): one
+forward + one train-grad step + one decode step on CPU; shapes + no NaNs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.models.model import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=2):
+    batch = {"tokens": jax.random.randint(jax.random.key(key), (B, S), 0,
+                                          cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["audio_embed"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.enc_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["image_embed"] = jax.random.normal(
+            jax.random.key(3), (B, cfg.n_img_tokens, cfg.d_model),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    assert cfg.n_layers <= 10 and cfg.d_model <= 512
+    assert (cfg.n_experts or 0) <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert gnorm > 0.0
+    for g in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg)
+    _, cache = model.prefill(params, batch, length=S + cfg.n_meta_tokens + 8)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = model.decode_step(params, cache, tok, jnp.asarray(S))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache2) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_dimensions(arch):
+    """The FULL configs carry the exact assigned dimensions (checked
+    without allocation via eval_shape)."""
+    cfg = get_config(arch)
+    expected = {
+        "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "rwkv6-7b": (32, 4096, 64, 64, 14336, 65536),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected
+    if arch == "kimi-k2-1t-a32b":
+        assert (cfg.n_experts, cfg.top_k) == (384, 8)
+        assert cfg.n_params() > 1.0e12          # trillion-param MoE
+        assert cfg.n_active_params() < 4.0e10   # ~32B active
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.n_experts, cfg.top_k) == (128, 8)
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16 and cfg.n_meta_tokens == 128
+
+
+def test_param_counts_roughly_match_names():
+    """Sanity: named sizes are in the right ballpark (same count basis as
+    the model cards, embeddings included)."""
+    approx = {
+        "starcoder2-15b": (15e9, 0.25),
+        "qwen2.5-14b": (14e9, 0.25),
+        "qwen3-14b": (14e9, 0.25),
+        "rwkv6-7b": (7e9, 0.35),
+        "minicpm3-4b": (4e9, 0.35),
+        "hymba-1.5b": (1.5e9, 0.4),
+        "llama-3.2-vision-11b": (10e9, 0.35),  # decoder side of the 11B
+    }
+    for arch, (target, tol) in approx.items():
+        n = get_config(arch).n_params()
+        assert abs(n - target) / target < tol, (arch, n)

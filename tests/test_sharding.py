@@ -1,0 +1,104 @@
+"""Sharding rules: every full-size config gets valid PartitionSpecs
+(divisibility respected) — eval_shape only, no allocation."""
+
+import math
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import build_model, partition_spec
+
+MSIZE = 16
+DSIZE = 16
+
+
+def _check_divisible(shapes, specs, axis_sizes):
+    bad = []
+
+    def chk(path, leaf, spec):
+        for dim, part in zip(leaf.shape, spec):
+            if part is None:
+                continue
+            parts = (part,) if isinstance(part, str) else part
+            size = math.prod(axis_sizes[p] for p in parts)
+            if dim % size != 0:
+                bad.append((jax.tree_util.keystr(path), leaf.shape, spec))
+
+    jax.tree_util.tree_map_with_path(chk, shapes, specs)
+    return bad
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_partition_specs_valid(arch):
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = partition_spec(cfg, shapes, "model", MSIZE)
+    # same structure
+    assert jax.tree.structure(shapes) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    bad = _check_divisible(shapes, specs,
+                           {"model": MSIZE, "data": DSIZE, "pod": 2})
+    assert not bad, bad[:5]
+    # spec rank must equal leaf rank
+    def rank_ok(l, s):
+        assert len(s) == len(l.shape)
+    jax.tree.map(rank_ok, shapes, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "kimi-k2-1t-a32b", "rwkv6-7b"])
+def test_model_axis_actually_used(arch):
+    """Tensor parallelism must actually shard the big tensors."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = partition_spec(cfg, shapes, "model", MSIZE)
+    total, sharded = 0, 0
+
+    def acc(l, s):
+        nonlocal total, sharded
+        n = math.prod(l.shape)
+        total += n
+        if any(p is not None for p in s):
+            sharded += n
+
+    jax.tree.map(acc, shapes, specs, is_leaf=lambda x: isinstance(x, P))
+    assert sharded / total > 0.9   # >90% of params are model-sharded
+
+
+def test_fsdp_shards_more():
+    cfg = get_config("qwen3-14b")
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    base = partition_spec(cfg, shapes, "model", MSIZE)
+    fsdp = partition_spec(cfg, shapes, "model", MSIZE,
+                          fsdp_axis="data", fsdp_size=DSIZE)
+
+    def count_axes(specs):
+        n = 0
+        for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+            n += sum(p is not None for p in s)
+        return n
+
+    assert count_axes(fsdp) > count_axes(base)
+
+
+def test_cache_partition_specs():
+    from jax.sharding import AxisType
+    from repro.launch.specs import cache_partition_spec
+    import jax.numpy as jnp
+    cfg = get_config("qwen3-14b")
+    model = build_model(cfg)
+    import functools
+    cache_shapes = jax.eval_shape(functools.partial(model.init_cache, 128,
+                                                    1024))
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    specs = cache_partition_spec(cache_shapes, mesh, 128, lambda n: False)
+    # k/v cache batch dim sharded over data
+    kspec = specs["layers"]["kv"]["k"]
+    assert kspec[1] in ("data", ("data",))   # P normalises 1-tuples
+    # pos replicated
+    assert all(p is None for p in specs["layers"]["kv"]["pos"])

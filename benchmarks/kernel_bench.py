@@ -19,6 +19,8 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        init_server, make_round_step)
 from repro.kernels.ref import (adaptive_update_ref, flash_attention_ref,
                                ota_channel_ref)
 
@@ -68,6 +70,62 @@ def bench_attention(s: int = 1024) -> Dict:
     flops = 4 * s * s * 8 * 64
     return dict(name=f"attention_ref_s{s}", us_per_call=us,
                 derived=f"flops={flops}")
+
+
+def _round_step_case(n_params: int, n_clients: int):
+    """A multi-leaf quadratic model of ~n_params total parameters."""
+    a = n_params // 2
+    b = n_params // 4
+    shapes = {"w1": (a,), "w2": (b // 2, 2), "b": (n_params - a - 2 * (b // 2),)}
+    ks = jax.random.split(jax.random.key(0), len(shapes))
+    params = {k: jax.random.normal(kk, s)
+              for (k, s), kk in zip(shapes.items(), ks)}
+
+    def loss_fn(p, batch):
+        return sum(jnp.mean((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(1), (n_clients,) + p.shape),
+        params)
+    return params, loss_fn, batches
+
+
+def bench_round_step(n_params: int, n_clients: int = 8,
+                     iters: int = 5) -> List[Dict]:
+    """One full ADOTA round, jnp tree.map backend vs the pallas slab
+    engine (interpret mode on CPU — the pallas wall time here measures
+    the Python interpreter loop, NOT the TPU kernel; the bytes-moved
+    model is the hardware-relevant comparison). Records both backends so
+    the perf trajectory is tracked from PR 1 on."""
+    params, loss_fn, batches = _round_step_case(n_params, n_clients)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
+    fl = FLConfig(n_clients=n_clients)
+    # HBM-traffic model, f32 words: the MAC reads (N+1)d and writes d
+    # either way; the server update is 4 reads + 3 writes fused vs ~10
+    # model-sized transfers as a chained jnp expression.
+    bytes_mac = 4 * n_params * (n_clients + 2)
+    records = []
+    for backend, upd_transfers in (("jnp", 10), ("pallas", 7)):
+        rs = make_round_step(loss_fn, ch, ad, fl, backend=backend)
+        state = init_server(params, ad)
+        key = jax.random.key(2)
+        run = lambda: rs(params, state, key, batches)
+        jax.block_until_ready(run())         # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = run()
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        records.append(dict(
+            name=f"round_step_{backend}_{n_params}",
+            backend=backend, n_params=n_params, n_clients=n_clients,
+            us_per_round=us, us_per_call=us,
+            hbm_bytes_est=bytes_mac + upd_transfers * 4 * n_params,
+            derived=f"hbm_bytes_est={bytes_mac + upd_transfers * 4 * n_params}",
+        ))
+    return records
 
 
 def all_benches() -> List[Dict]:

@@ -19,8 +19,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks import kernel_bench, paper_figs  # noqa: E402
 
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
 def _csv(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def run_round_step_bench(quick: bool, out_dir: str) -> list:
+    """Full-round jnp vs pallas-slab benchmark on >= 2 model sizes; the
+    records land in BENCH_round_step.json at the repo root so the perf
+    trajectory is tracked across PRs. A --quick run is reduced-fidelity
+    (fewer sizes/iters), so it writes under ``out_dir`` instead of
+    clobbering the tracked artifact."""
+    sizes = (1 << 14, 1 << 16) if quick else (1 << 14, 1 << 16, 1 << 18)
+    records = []
+    for n_params in sizes:
+        records.extend(kernel_bench.bench_round_step(
+            n_params, iters=2 if quick else 5))
+    for r in records:
+        _csv(r["name"], r["us_per_round"], r["derived"])
+    dest = out_dir if quick else REPO_ROOT
+    with open(os.path.join(dest, "BENCH_round_step.json"), "w") as f:
+        json.dump(records, f, indent=2)
+    return records
 
 
 def run_paper_fig(fig_name: str, quick: bool) -> list:
@@ -61,6 +83,13 @@ def main() -> None:
     if not args.only or args.only == "kernels":
         for rec in kernel_bench.all_benches():
             _csv(rec["name"], rec["us_per_call"], rec["derived"])
+
+    if not args.only or args.only == "round_step":
+        try:
+            all_records["round_step"] = run_round_step_bench(args.quick,
+                                                             args.out)
+        except Exception as e:  # noqa: BLE001
+            _csv("round_step:ERROR", 0.0, repr(e)[:80])
 
     # Roofline summary (if dry-run artifacts exist).
     try:

@@ -1,0 +1,38 @@
+"""jax version compatibility shims.
+
+The repo targets current jax (``jax.shard_map``, ``jax.sharding.AxisType``)
+but must degrade gracefully on older releases (this CPU container ships
+0.4.x, where shard_map still lives in ``jax.experimental`` and meshes
+have no axis_types). Centralising the fallbacks here keeps version
+probes out of model/launch/test code.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # jax >= 0.5
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def make_auto_mesh(shape, axis_names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    if AxisType is None:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names,
+                         axis_types=(AxisType.Auto,) * len(axis_names))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check`` maps onto ``check_vma`` (new) / ``check_rep`` (old).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

@@ -1,22 +1,29 @@
 """Core ADOTA-FL library: OTA channel, adaptive server optimizers, FL loop."""
 
 from repro.core.adaptive import (AdaptiveConfig, ServerOptimizer, ServerOptState,
-                                 adagrad_ota, adam_ota, amsgrad_ota, fedavg,
-                                 fedavgm, make_server_optimizer, yogi_ota)
-from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
-                                sample_fading, sample_interference, upsilon)
+                                 adagrad_ota, adam_ota, amsgrad_ota,
+                                 apply_slab_update, fedavg, fedavgm,
+                                 make_server_optimizer, yogi_ota)
+from repro.core.channel import (OTAChannelConfig, cms_inputs, cms_transform,
+                                sample_alpha_stable, sample_fading,
+                                sample_interference, upsilon)
 from repro.core.fl import (FLConfig, RoundMetrics, init_server, make_round_step,
                            make_sharded_round_step, run_rounds)
 from repro.core.ota import (add_interference, faded_loss_weights,
-                            ota_aggregate_stacked, ota_psum)
+                            ota_aggregate_slab, ota_aggregate_stacked, ota_psum)
+from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
+                             stack_to_slab, tree_to_slab, zeros_slab)
 from repro.core.tail_index import hill_estimate, log_moment_estimate
 
 __all__ = [
     "AdaptiveConfig", "ServerOptimizer", "ServerOptState", "adagrad_ota",
     "adam_ota", "fedavg", "fedavgm", "make_server_optimizer", "yogi_ota",
-    "amsgrad_ota", "OTAChannelConfig", "sample_alpha_stable", "sample_fading",
+    "amsgrad_ota", "apply_slab_update", "OTAChannelConfig", "cms_inputs",
+    "cms_transform", "sample_alpha_stable", "sample_fading",
     "sample_interference", "upsilon", "FLConfig", "RoundMetrics",
     "init_server", "make_round_step", "make_sharded_round_step", "run_rounds",
-    "add_interference", "faded_loss_weights", "ota_aggregate_stacked",
-    "ota_psum", "hill_estimate", "log_moment_estimate",
+    "add_interference", "faded_loss_weights", "ota_aggregate_slab",
+    "ota_aggregate_stacked", "ota_psum", "SlabSpec", "make_slab_spec",
+    "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",
+    "hill_estimate", "log_moment_estimate",
 ]

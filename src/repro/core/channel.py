@@ -53,12 +53,19 @@ class OTAChannelConfig:
                                     # — the paper's related-work [33]-[35]
                                     # mechanism, as a channel option.
     pc_threshold: float = 0.2
+    backend: str = "jnp"            # "jnp": per-leaf tree.map aggregation;
+                                    # "pallas": one fused ota_channel_slab
+                                    # launch over the whole model slab.
+    interpret: bool = True          # Pallas interpret mode (True on CPU;
+                                    # set False on real TPU).
 
     def __post_init__(self):
         if not (1.0 < self.alpha <= 2.0):
             raise ValueError(f"tail index alpha must be in (1, 2], got {self.alpha}")
         if self.fading not in ("rayleigh", "gaussian", "none"):
             raise ValueError(f"unknown fading model: {self.fading}")
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown channel backend: {self.backend}")
 
     @property
     def fading_mean(self) -> float:
@@ -98,31 +105,63 @@ def sample_fading(key: jax.Array, cfg: OTAChannelConfig, shape: Tuple[int, ...],
     return h
 
 
+# Angles are kept strictly inside (-pi/2, pi/2): at the endpoints f32
+# cos() is a tiny NEGATIVE number, and the fractional powers of the CMS
+# transform turn that into NaN (even at alpha == 2, where the transform
+# should reduce to the perfectly finite Gaussian 2*sin(u)*sqrt(e)).
+CMS_U_BOUND = math.pi / 2 - 1e-6
+CMS_E_FLOOR = 1e-7
+
+
+def cms_inputs(key: jax.Array, shape: Tuple[int, ...],
+               dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """Draw the (u, e) inputs of the CMS transform with the edge guards.
+
+    u ~ Uniform(-pi/2, pi/2) bounded away from the endpoints, e ~ Exp(1)
+    floored away from 0. These are the *only* random bits of the
+    interference synthesis — the fused ``ota_channel_slab`` kernel
+    consumes exactly these draws, so the jnp and pallas channel backends
+    see identical noise.
+    """
+    ku, kw = jax.random.split(key)
+    u = jax.random.uniform(ku, shape, dtype=dtype,
+                           minval=-CMS_U_BOUND, maxval=CMS_U_BOUND)
+    e = -jnp.log(jax.random.uniform(kw, shape, dtype=dtype,
+                                    minval=jnp.finfo(dtype).tiny))
+    return u, jnp.maximum(e, jnp.asarray(CMS_E_FLOOR, dtype))
+
+
+def cms_transform(u: jax.Array, e: jax.Array, alpha) -> jax.Array:
+    """Branch-free symmetric Chambers–Mallows–Stuck transform.
+
+        X = sin(alpha u) / cos(u)^{1/alpha}
+              * ( cos((1-alpha) u) / e )^{(1-alpha)/alpha}
+
+    ``alpha`` may be a python float (static, e.g. inside a Pallas kernel
+    body) or a traced scalar. Guards: u is clipped into the open interval
+    the sampler guarantees and e is floored, so the transform is finite
+    for every input — including endpoint angles and alpha == 2, where it
+    reduces to the Gaussian special case 2*sin(u)*sqrt(e) ~ N(0, 2).
+    """
+    u = jnp.clip(u, -CMS_U_BOUND, CMS_U_BOUND)
+    e = jnp.maximum(e, CMS_E_FLOOR)
+    a = alpha
+    return (jnp.sin(a * u) / jnp.cos(u) ** (1.0 / a)
+            * (jnp.cos((1.0 - a) * u) / e) ** ((1.0 - a) / a))
+
+
 def sample_alpha_stable(key: jax.Array, alpha, shape: Tuple[int, ...],
                         scale=1.0, dtype=jnp.float32) -> jax.Array:
     """Symmetric alpha-stable sampler via the Chambers–Mallows–Stuck method.
 
-    For S(alpha, beta=0, scale, 0):
-
-        X = scale * sin(alpha U) / cos(U)^{1/alpha}
-                  * ( cos((1-alpha) U) / W )^{(1-alpha)/alpha}
-
-    with U ~ Uniform(-pi/2, pi/2) and W ~ Exp(1). ``alpha`` may be a traced
-    scalar. At alpha == 2 this yields N(0, 2*scale^2) (standard stable
+    For S(alpha, beta=0, scale, 0): ``scale * cms_transform(u, e, alpha)``
+    with (u, e) from ``cms_inputs``. ``alpha`` may be a traced scalar. At
+    alpha == 2 this yields N(0, 2*scale^2) (standard stable
     parameterisation).
     """
     alpha = jnp.asarray(alpha, dtype)
-    ku, kw = jax.random.split(key)
-    eps = jnp.asarray(1e-7, dtype)
-    u = jax.random.uniform(ku, shape, dtype=dtype,
-                           minval=-math.pi / 2 + 1e-6, maxval=math.pi / 2 - 1e-6)
-    w = -jnp.log(jax.random.uniform(kw, shape, dtype=dtype,
-                                    minval=jnp.finfo(dtype).tiny))
-    w = jnp.maximum(w, eps)
-    a = alpha
-    x = (jnp.sin(a * u) / jnp.cos(u) ** (1.0 / a)
-         * (jnp.cos((1.0 - a) * u) / w) ** ((1.0 - a) / a))
-    return jnp.asarray(scale, dtype) * x
+    u, e = cms_inputs(key, shape, dtype)
+    return jnp.asarray(scale, dtype) * cms_transform(u, e, alpha)
 
 
 def sample_interference(key: jax.Array, cfg: OTAChannelConfig,

@@ -23,6 +23,15 @@ Three mathematically-identical realisations, picked by deployment mode:
    interference is then added to the gradient pytree. This keeps XLA free
    to fuse/shard the backward pass (no custom collective needed) and is
    what the production ``train_step`` uses.
+
+Realisation 1 has two backends (``OTAChannelConfig.backend``): ``"jnp"``
+maps the faded sum and the interference over leaves, while ``"pallas"``
+stacks the client gradients into one (N, d) slab (``repro.core.slab``)
+and runs the fused ``ota_channel_slab`` kernel — fading reduction + CMS
+interference synthesis in a single read of G. Both backends consume the
+SAME per-leaf PRNG draws (``cms_inputs`` keyed exactly like
+``add_interference``), so they agree to f32 rounding, not just in
+distribution.
 """
 
 from __future__ import annotations
@@ -33,8 +42,10 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
-                                sample_fading, sample_interference)
+from repro.core.channel import (OTAChannelConfig, cms_inputs,
+                                sample_alpha_stable, sample_fading,
+                                sample_interference)
+from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
 
 PyTree = Any
 
@@ -63,9 +74,59 @@ def add_interference(key: jax.Array, cfg: OTAChannelConfig, grads: PyTree) -> Py
 # 1. Simulation path: stacked per-client gradients.
 # ---------------------------------------------------------------------------
 
+def _cms_slab_inputs(kx: jax.Array, spec: SlabSpec
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """(u, e) CMS inputs over the whole slab, drawn per leaf with the SAME
+    keys ``add_interference`` would use — the pallas backend consumes
+    identical noise to the jnp backend. Padding gets (u=0, e=1), a fixed
+    point of the CMS transform (xi == 0)."""
+    us, es = [], []
+    for i, shape in enumerate(spec.shapes):
+        u, e = cms_inputs(jax.random.fold_in(kx, i), shape)
+        us.append(u.reshape(-1))
+        es.append(e.reshape(-1))
+    pad = spec.padded - spec.total
+    u = jnp.pad(jnp.concatenate(us), (0, pad))
+    e = jnp.pad(jnp.concatenate(es), (0, pad), constant_values=1.0)
+    return u, e
+
+
+def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
+                       client_grads: PyTree, spec: SlabSpec
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Slab-engine OTA MAC: one fused kernel over the stacked gradients.
+
+    ``spec`` is the slab layout of a SINGLE client's gradient (== the
+    model parameters). Returns ``(g_slab, h, grads_slab)``: the noisy
+    aggregate as a (spec.padded,) f32 slab (zero tail), the fading draw
+    (N,), and the stacked (N, spec.padded) f32 gradient slab (returned so
+    callers can derive clean-gradient statistics without re-stacking).
+    """
+    from repro.kernels.ota_channel import ota_channel_slab
+
+    n = jax.tree.leaves(client_grads)[0].shape[0]
+    kh, kx = jax.random.split(key)
+    h = sample_fading(kh, cfg, (n,))
+    grads_slab = stack_to_slab(spec, client_grads)
+    if cfg.interference:
+        u, e = _cms_slab_inputs(kx, spec)
+        scale = cfg.xi_scale
+    else:
+        u = jnp.zeros((spec.padded,), jnp.float32)
+        e = jnp.ones((spec.padded,), jnp.float32)
+        scale = 0.0
+    g_slab = ota_channel_slab(grads_slab, h, u, e, alpha=cfg.alpha,
+                              scale=scale, interpret=cfg.interpret)
+    return g_slab, h, grads_slab
+
+
 def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
                           client_grads: PyTree) -> Tuple[PyTree, jax.Array]:
     """OTA-aggregate gradients stacked on a leading client axis.
+
+    Dispatches on ``cfg.backend``: the jnp path maps the faded sum over
+    leaves and adds per-leaf interference; the pallas path routes through
+    ``ota_aggregate_slab`` (one fused kernel) and restores the pytree.
 
     Args:
       key: PRNG key for this communication round.
@@ -77,6 +138,13 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
       (g_t, h): the noisy aggregated gradient pytree (leaf shape (...)) and
       the fading draw h of shape (N,) (returned for logging/analysis).
     """
+    if cfg.backend == "pallas":
+        spec = make_slab_spec(jax.tree.map(
+            lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype),
+            client_grads))
+        g_slab, h, _ = ota_aggregate_slab(key, cfg, client_grads, spec)
+        return slab_to_tree(spec, g_slab), h
+
     n = jax.tree.leaves(client_grads)[0].shape[0]
     kh, kx = jax.random.split(key)
     h = sample_fading(kh, cfg, (n,))
@@ -106,7 +174,9 @@ def ota_psum(local_grad: PyTree, key: jax.Array, cfg: OTAChannelConfig,
     exactly like the single RF front end of the server.
     """
     axis_names = tuple(axis_names)
-    sizes = [jax.lax.axis_size(a) for a in axis_names]
+    # psum of a literal 1 constant-folds to the static axis size on every
+    # jax version; jax.lax.axis_size only exists on newer releases.
+    sizes = [jax.lax.psum(1, a) for a in axis_names]
     n = math.prod(sizes)
     # Linear client index of this shard.
     idx = jnp.zeros((), jnp.int32)

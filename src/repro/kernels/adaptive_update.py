@@ -1,65 +1,122 @@
-"""Fused ADOTA server-update Pallas kernel.
+"""Fused ADOTA server-update Pallas kernel — all six server optimizers.
 
 The ADOTA update (Eq. 8-11) is elementwise over every parameter:
 
     Delta <- b1*Delta + (1-b1)*g
-    v     <- v + |Delta|^a            (or EMA for Adam-OTA)
+    v     <- f(v, |Delta|^a)          (mode-dependent, see below)
     w     <- w - lr * Delta / (v+eps)^{1/a}
 
 Naively chained in jnp this is ~10 HBM round-trips over 4 model-sized
 arrays; the fractional |.|^a and (.)^{1/a} powers (exp/log on the VPU)
 make it strictly memory-bound. The kernel performs the whole update in
 ONE read-modify-write pass per block: each grid step streams a
-(block_rows, 128) tile of {g, Delta, v, w} HBM->VMEM, does all the math
-in VMEM/VREGs, and writes the three outputs back.
+(block_rows, 128) tile of the operands HBM->VMEM, does all the math in
+VMEM/VREGs, and writes the outputs back.
+
+Modes (matching ``repro.core.adaptive`` update rules exactly):
+
+    adagrad   v += |Delta|^a                       (AdaGrad-OTA, Eq. 9)
+    adam      v = b2 v + (1-b2)|Delta|^a           (Adam-OTA,    Eq. 10)
+    amsgrad   adam v, plus vmax = max(vmax, v); step divides by vmax
+    yogi      v -= (1-b2) sign(v - |Delta|^a)|Delta|^a
+    momentum  Delta = b1 Delta + g; w -= lr Delta  (FedAvgM; no v)
+    sgd       w -= lr g                            (FedAvg; stateless)
+
+The operand list varies with the mode (sgd needs no state, amsgrad
+carries an extra vmax slab); ``adaptive_update_slab`` assembles the
+right ``pallas_call`` and always returns ``(*updated_state, w')`` in
+(delta, nu, nu_max) order — 3-tuple for adagrad/adam/yogi, 4-tuple for
+amsgrad, 2-tuple for momentum, 1-tuple for sgd.
 
 TPU is the target (bf16/f32 tiles aligned to the 8x128 VPU lanes); on
 this CPU container the kernel body is validated with interpret=True
-against ``ref.adaptive_update_ref``.
+against ``ref.adaptive_update_ref``. The elementwise math mirrors the
+jnp reference ops exactly (same |.|** / zero-fill / maximum guards), so
+interpret-mode results match the tree.map path to f32 rounding.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# The single source of the |.|^alpha zero-guard: the jnp/pallas backend
+# parity contract depends on the kernel computing the exact same ops as
+# the tree.map reference. (Import is cycle-safe: core.adaptive pulls in
+# this module only lazily, inside apply_slab_update.)
+from repro.core.adaptive import _abs_pow
+
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256     # (256, 128) f32 tile = 128 KiB per operand
 
+MODES = ("adagrad", "adam", "amsgrad", "yogi", "momentum", "sgd")
 
-def _adaptive_update_kernel(g_ref, delta_ref, nu_ref, w_ref,
-                            delta_out, nu_out, w_out,
-                            *, lr: float, beta1: float, beta2: float,
-                            alpha: float, eps: float, adagrad: bool):
-    g = g_ref[...].astype(jnp.float32)
-    delta = beta1 * delta_ref[...] + (1.0 - beta1) * g
-    da = jnp.exp(alpha * jnp.log(jnp.maximum(jnp.abs(delta), 1e-30)))
-    da = jnp.where(delta == 0.0, 0.0, da)
-    if adagrad:
-        nu = nu_ref[...] + da
-    else:
+
+def _adaptive_update_kernel(*refs, lr: float, beta1: float, beta2: float,
+                            alpha: float, eps: float, mode: str):
+    g = refs[0][...].astype(jnp.float32)
+    if mode == "sgd":
+        w_ref, w_out = refs[1:]
+        w_out[...] = (w_ref[...].astype(jnp.float32) - lr * g).astype(
+            w_out.dtype)
+        return
+
+    delta_ref = refs[1]
+    gain = 1.0 if mode == "momentum" else (1.0 - beta1)
+    delta = beta1 * delta_ref[...] + gain * g
+
+    if mode == "momentum":
+        w_ref, delta_out, w_out = refs[2:]
+        delta_out[...] = delta
+        w_out[...] = (w_ref[...].astype(jnp.float32) - lr * delta).astype(
+            w_out.dtype)
+        return
+
+    da = _abs_pow(delta, alpha)
+    if mode == "amsgrad":
+        nu_ref, vmax_ref, w_ref, delta_out, nu_out, vmax_out, w_out = refs[2:]
         nu = beta2 * nu_ref[...] + (1.0 - beta2) * da
-    denom = jnp.exp(jnp.log(nu + eps) / alpha)
+        vmax = jnp.maximum(vmax_ref[...], nu)
+        vmax_out[...] = vmax
+        denom_v = vmax
+    else:
+        nu_ref, w_ref, delta_out, nu_out, w_out = refs[2:]
+        if mode == "adagrad":
+            nu = nu_ref[...] + da
+        elif mode == "adam":
+            nu = beta2 * nu_ref[...] + (1.0 - beta2) * da
+        else:  # yogi
+            v = nu_ref[...]
+            nu = v - (1.0 - beta2) * jnp.sign(v - da) * da
+        denom_v = nu
+    denom = jnp.maximum(denom_v + eps, 0.0) ** (1.0 / alpha)
     w = w_ref[...].astype(jnp.float32) - lr * delta / denom
     delta_out[...] = delta
     nu_out[...] = nu
     w_out[...] = w.astype(w_out.dtype)
 
 
-def adaptive_update_slab(g: jax.Array, delta: jax.Array, nu: jax.Array,
-                         w: jax.Array, *, lr: float, beta1: float,
-                         beta2: float, alpha: float, eps: float, mode: str,
+def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
+                         nu: Optional[jax.Array], w: jax.Array, *, lr: float,
+                         beta1: float, beta2: float, alpha: float, eps: float,
+                         mode: str, nu_max: Optional[jax.Array] = None,
                          block_rows: int = DEFAULT_BLOCK_ROWS,
-                         interpret: bool = True
-                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Fused update on a 1-D parameter slab (any length; padded to lanes).
+                         interpret: bool = True) -> Tuple[jax.Array, ...]:
+    """Fused server update on a 1-D parameter slab (any length; padded to
+    lanes internally).
 
-    g/w may be bf16 or f32; delta/nu are f32 state. Returns (delta', nu', w').
+    g/w may be bf16 or f32; delta/nu/nu_max are f32 state (ignored — pass
+    None — for modes that do not carry them). For ``momentum``, ``beta1``
+    is the server momentum coefficient (g enters with gain 1). Returns
+    the updated slabs in ``(delta', nu', nu_max', w')`` order, dropping
+    the entries the mode does not own; ``w'`` is always last.
     """
+    if mode not in MODES:
+        raise ValueError(f"unknown update mode {mode!r}; options: {MODES}")
     n = g.shape[0]
     rows = -(-n // LANE)
     rows_pad = -(-rows // block_rows) * block_rows
@@ -69,28 +126,35 @@ def adaptive_update_slab(g: jax.Array, delta: jax.Array, nu: jax.Array,
         x = jnp.pad(x, (0, total - n))
         return x.reshape(rows_pad, LANE).astype(dt or x.dtype)
 
-    g2 = shape2d(g)
-    d2 = shape2d(delta, jnp.float32)
-    v2 = shape2d(nu, jnp.float32)
-    w2 = shape2d(w)
+    ins = [shape2d(g)]
+    n_state = 0
+    if mode != "sgd":
+        ins.append(shape2d(delta, jnp.float32))
+        n_state += 1
+    if mode in ("adagrad", "adam", "amsgrad", "yogi"):
+        ins.append(shape2d(nu, jnp.float32))
+        n_state += 1
+    if mode == "amsgrad":
+        ins.append(shape2d(nu_max, jnp.float32))
+        n_state += 1
+    ins.append(shape2d(w))
 
     grid = (rows_pad // block_rows,)
-    blk = lambda dt: pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
     kernel = functools.partial(
         _adaptive_update_kernel, lr=lr, beta1=beta1, beta2=beta2,
-        alpha=alpha, eps=eps, adagrad=(mode == "adagrad"))
-    d_new, v_new, w_new = pl.pallas_call(
+        alpha=alpha, eps=eps, mode=mode)
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[blk(None)] * 4,
-        out_specs=[blk(None)] * 3,
-        out_shape=[
-            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
-            jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32),
-            jax.ShapeDtypeStruct((rows_pad, LANE), w.dtype),
-        ],
+        in_specs=[blk] * len(ins),
+        out_specs=[blk] * (n_state + 1),
+        out_shape=[jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32)
+                   ] * n_state
+        + [jax.ShapeDtypeStruct((rows_pad, LANE), w.dtype)],
         interpret=interpret,
-    )(g2, d2, v2, w2)
-    unpad = lambda x2, dt: x2.reshape(-1)[:n].astype(dt)
-    return (unpad(d_new, jnp.float32), unpad(v_new, jnp.float32),
-            unpad(w_new, w.dtype))
+    )(*ins)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    unpad = lambda x2: x2.reshape(-1)[:n]
+    return tuple(unpad(o) for o in outs)

@@ -1,9 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``fused_server_update`` is the production entry point: it applies the
-fused ADOTA update kernel leaf-by-leaf over the parameter pytree (each
-leaf flattened to a slab), replacing the ~10-pass jnp expression chain
-of ``repro.core.adaptive`` with one read-modify-write HBM pass. The jnp
+``fused_server_update`` is the production entry point: it routes the
+parameter pytree through the slab engine (``repro.core.slab``) and
+applies the fused ADOTA update kernel in ONE launch over the whole
+model, replacing the ~10-pass jnp expression chain of
+``repro.core.adaptive`` with one read-modify-write HBM pass. The jnp
 reference implementations remain the default on non-TPU backends; the
 kernels run in interpret mode there (tests) and compiled on TPU.
 """
@@ -16,12 +17,15 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.adaptive import ServerOptState
-from repro.kernels.adaptive_update import adaptive_update_slab
+from repro.core.adaptive import (_SLAB_MODES, AdaptiveConfig, ServerOptState,
+                                 apply_slab_update)
+from repro.core.slab import make_slab_spec, tree_to_slab
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ota_channel import ota_channel_slab
 
 PyTree = Any
+
+_MODE_TO_OPTIMIZER = {mode: name for name, mode in _SLAB_MODES.items()}
 
 
 @functools.partial(jax.jit, static_argnames=("lr", "beta1", "beta2", "alpha",
@@ -31,25 +35,20 @@ def fused_server_update(g: PyTree, state: ServerOptState, params: PyTree, *,
                         eps: float, mode: str = "adam",
                         interpret: bool = True
                         ) -> Tuple[PyTree, ServerOptState]:
-    """Kernel-fused equivalent of adagrad_ota/adam_ota .update()."""
-
-    def leaf(gl, dl, vl, wl):
-        shape = wl.shape
-        dn, vn, wn = adaptive_update_slab(
-            gl.reshape(-1), dl.reshape(-1), vl.reshape(-1), wl.reshape(-1),
-            lr=lr, beta1=beta1, beta2=beta2, alpha=alpha, eps=eps,
-            mode=mode, interpret=interpret)
-        return dn.reshape(shape), vn.reshape(shape), wn.reshape(shape)
-
-    flat_g, treedef = jax.tree.flatten(g)
-    flat_d = treedef.flatten_up_to(state.delta)
-    flat_v = treedef.flatten_up_to(state.nu)
-    flat_w = treedef.flatten_up_to(params)
-    outs = [leaf(*t) for t in zip(flat_g, flat_d, flat_v, flat_w)]
-    delta = jax.tree.unflatten(treedef, [o[0] for o in outs])
-    nu = jax.tree.unflatten(treedef, [o[1] for o in outs])
-    new_w = jax.tree.unflatten(treedef, [o[2] for o in outs])
-    return new_w, ServerOptState(state.step + 1, delta, nu)
+    """Kernel-fused equivalent of any registered server optimizer's
+    .update(): one ``adaptive_update_slab`` launch over the whole model
+    slab. ``state`` must come from the matching optimizer's init (e.g.
+    the amsgrad mode expects the {"v", "vmax"} nu dict). For
+    ``momentum``, ``beta1`` is the server momentum coefficient."""
+    if mode not in _MODE_TO_OPTIMIZER:
+        raise ValueError(f"unknown update mode {mode!r}; "
+                         f"options: {sorted(_MODE_TO_OPTIMIZER)}")
+    cfg = AdaptiveConfig(optimizer=_MODE_TO_OPTIMIZER[mode], lr=lr,
+                         beta1=beta1, beta2=beta2, alpha=alpha, eps=eps,
+                         momentum=beta1, backend="pallas",
+                         interpret=interpret)
+    spec = make_slab_spec(params)
+    return apply_slab_update(cfg, spec, tree_to_slab(spec, g), state, params)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "scale", "interpret"))

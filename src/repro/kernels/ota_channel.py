@@ -7,8 +7,16 @@ In the OTA simulator this is the server-side "RF front end": N stacked
 client gradients are combined under per-client fading and the heavy-tail
 interference is synthesized in the same VMEM tile (uniform angles u and
 Exp(1) draws e are produced upstream by the TPU PRNG; the CMS transform
-itself is branch-free VPU math: sin/cos/exp/log). Memory-bound in G —
-the kernel reads each gradient element exactly once.
+itself is branch-free VPU math: sin/cos/pow). Memory-bound in G — the
+kernel reads each gradient element exactly once.
+
+The CMS math is ``repro.core.channel.cms_transform`` — the same guarded
+expression the jnp sampler uses, so kernel and reference agree bitwise
+in interpret mode: angles are clipped strictly inside (-pi/2, pi/2)
+(endpoint angles made the old log-space form NaN, even at alpha == 2
+where the transform reduces to the finite Gaussian 2*sin(u)*sqrt(e))
+and the Exp(1) draws are floored. The tail index is validated against
+the same (1, 2] range as ``OTAChannelConfig``.
 
 Grid: 1-D over column blocks of size (N, block_cols); the N reduction
 runs inside the tile (N = clients-per-shard is small, <= a few hundred).
@@ -17,11 +25,12 @@ runs inside the tile (N = clients-per-shard is small, <= a few hundred).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.channel import cms_transform
 
 LANE = 128
 DEFAULT_BLOCK_COLS = 512
@@ -32,12 +41,7 @@ def _ota_kernel(g_ref, h_ref, u_ref, e_ref, out_ref, *, alpha: float,
     g = g_ref[...].astype(jnp.float32)              # (N, bc)
     h = h_ref[...].astype(jnp.float32)              # (N, 1)
     agg = jnp.sum(h * g, axis=0, keepdims=True) / n_clients   # (1, bc)
-    u = u_ref[...]                                   # (1, bc)
-    e = jnp.maximum(e_ref[...], 1e-7)
-    a = alpha
-    xi = (jnp.sin(a * u) / jnp.exp(jnp.log(jnp.cos(u)) / a)
-          * jnp.exp(((1.0 - a) / a) * (jnp.log(jnp.cos((1.0 - a) * u))
-                                       - jnp.log(e))))
+    xi = cms_transform(u_ref[...], e_ref[...], alpha)         # (1, bc)
     out_ref[...] = agg + scale * xi
 
 
@@ -48,6 +52,8 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
     """grads: (N, d) stacked client gradients; h: (N,) fading draws;
     u: (d,) uniform angles in (-pi/2, pi/2); e: (d,) Exp(1) draws.
     Returns the aggregated noisy gradient (d,) float32."""
+    if not (1.0 < alpha <= 2.0):
+        raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
     n, d = grads.shape
     d_pad = -(-d // block_cols) * block_cols
     gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))

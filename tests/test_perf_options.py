@@ -54,15 +54,14 @@ def test_ssm_chunk_model_equivalence():
 def test_moe_sharded_model_equivalence():
     """shard_map expert parallelism == plain dispatch on a 1x1 mesh
     (exactness requires no capacity drops -> generous factor)."""
-    from jax.sharding import AxisType
+    from repro.compat import make_auto_mesh
     from repro.models.moe import clear_moe_sharding, set_moe_sharding
 
     base = dataclasses.replace(smoke_config("qwen3-moe-235b-a22b"),
                                param_dtype="float32", capacity_factor=8.0)
     toks = jax.random.randint(jax.random.key(2), (2, 16), 0, base.vocab)
     a = _logits(base, toks)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     set_moe_sharding(mesh, ("data",), "model")
     try:
         b = _logits(dataclasses.replace(base, moe_sharded=True), toks)
@@ -75,14 +74,13 @@ def test_moe_sharded_model_equivalence():
 def test_moe_sharded_capacity_is_per_shard():
     """The sharded path's capacity is computed from local tokens (the
     per-shard load), and dropped slots still yield finite outputs."""
-    from jax.sharding import AxisType
+    from repro.compat import make_auto_mesh
     from repro.models.moe import (MoEConfig, clear_moe_sharding, moe_apply,
                                   moe_init, set_moe_sharding)
     cfg = MoEConfig(d_model=16, n_experts=4, top_k=2, d_ff=32,
                     capacity_factor=0.1, sharded=True)
     p = moe_init(jax.random.key(0), cfg, jnp.float32)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     set_moe_sharding(mesh, ("data",), "model")
     try:
         y, aux = moe_apply(p, cfg, jax.random.normal(jax.random.key(1),

@@ -87,7 +87,7 @@ def test_fsdp_shards_more():
 
 
 def test_cache_partition_specs():
-    from jax.sharding import AxisType
+    from repro.compat import make_auto_mesh
     from repro.launch.specs import cache_partition_spec
     import jax.numpy as jnp
     cfg = get_config("qwen3-14b")
@@ -95,7 +95,7 @@ def test_cache_partition_specs():
     import functools
     cache_shapes = jax.eval_shape(functools.partial(model.init_cache, 128,
                                                     1024))
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_auto_mesh((1,), ("data",))
     specs = cache_partition_spec(cache_shapes, mesh, 128, lambda n: False)
     # k/v cache batch dim sharded over data
     kspec = specs["layers"]["kv"]["k"]

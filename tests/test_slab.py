@@ -1,0 +1,109 @@
+"""Pytree <-> slab contract: layout, round-trips, padding invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.slab import (LANE, make_slab_spec, slab_to_tree, stack_to_slab,
+                             tree_to_slab, zeros_slab)
+
+
+def _mixed_tree(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "emb": jax.random.normal(ks[0], (7, 33), jnp.bfloat16),
+        "blocks": [
+            {"w": jax.random.normal(ks[1], (130,), jnp.float32),
+             "b": jax.random.normal(ks[2], (1,), jnp.float32)},
+        ],
+        "scale": jax.random.normal(ks[3], ()),   # scalar leaf
+    }
+
+
+def test_spec_layout_static():
+    tree = _mixed_tree(jax.random.key(0))
+    spec = make_slab_spec(tree)
+    assert spec.total == 7 * 33 + 130 + 1 + 1
+    assert spec.padded % LANE == 0
+    assert spec.padded >= spec.total
+    # offsets are contiguous in leaf order
+    for i in range(1, spec.n_leaves):
+        assert spec.offsets[i] == spec.offsets[i - 1] + spec.sizes[i - 1]
+
+
+def test_roundtrip_restores_shapes_and_dtypes():
+    tree = _mixed_tree(jax.random.key(1))
+    spec = make_slab_spec(tree)
+    slab = tree_to_slab(spec, tree)
+    assert slab.shape == (spec.padded,)
+    assert slab.dtype == jnp.float32
+    back = slab_to_tree(spec, slab)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in jax.tree.leaves(jax.tree.map(lambda x, y: (x, y), tree, back),
+                                is_leaf=lambda x: isinstance(x, tuple)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-6)
+
+
+def test_roundtrip_nocast_keeps_f32():
+    tree = _mixed_tree(jax.random.key(2))
+    spec = make_slab_spec(tree)
+    back = slab_to_tree(spec, tree_to_slab(spec, tree), cast=False)
+    for leaf in jax.tree.leaves(back):
+        assert leaf.dtype == jnp.float32
+
+
+def test_padding_tail_is_zero_and_norm_preserved():
+    tree = {"w": jnp.full((3, 5), 2.0)}       # 15 elements -> padded to 128
+    spec = make_slab_spec(tree)
+    slab = tree_to_slab(spec, tree)
+    np.testing.assert_array_equal(np.asarray(slab[spec.total:]), 0.0)
+    np.testing.assert_allclose(float(jnp.linalg.norm(slab)),
+                               float(jnp.linalg.norm(tree["w"])), rtol=1e-6)
+
+
+def test_stack_to_slab_matches_per_client_flatten():
+    n = 4
+    tree = {"a": jnp.arange(n * 6, dtype=jnp.float32).reshape(n, 2, 3),
+            "b": jnp.arange(n * 5, dtype=jnp.float32).reshape(n, 5)}
+    spec = make_slab_spec({"a": jnp.zeros((2, 3)), "b": jnp.zeros(5)})
+    stacked = stack_to_slab(spec, tree)
+    assert stacked.shape == (n, spec.padded)
+    for c in range(n):
+        per_client = tree_to_slab(
+            spec, {"a": tree["a"][c], "b": tree["b"][c]})
+        np.testing.assert_array_equal(np.asarray(stacked[c]),
+                                      np.asarray(per_client))
+
+
+def test_spec_from_shape_dtype_structs():
+    structs = {"w": jax.ShapeDtypeStruct((9, 9), jnp.bfloat16)}
+    spec = make_slab_spec(structs)
+    assert spec.total == 81 and spec.dtypes[0] == jnp.bfloat16
+
+
+def test_empty_tree_rejected():
+    with pytest.raises(ValueError):
+        make_slab_spec({})
+
+
+def test_zeros_slab():
+    spec = make_slab_spec({"w": jnp.ones(200)})
+    z = zeros_slab(spec)
+    assert z.shape == (spec.padded,) and float(jnp.sum(jnp.abs(z))) == 0.0
+
+
+def test_roundtrip_inside_jit():
+    tree = _mixed_tree(jax.random.key(3))
+
+    @jax.jit
+    def f(t):
+        spec = make_slab_spec(t)
+        return slab_to_tree(spec, tree_to_slab(spec, t) * 2.0)
+
+    out = f(tree)
+    np.testing.assert_allclose(
+        np.asarray(out["blocks"][0]["w"]),
+        np.asarray(tree["blocks"][0]["w"]) * 2.0, rtol=1e-6)

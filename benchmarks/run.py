@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -26,17 +27,39 @@ def _csv(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+def _sharded_round_step_records(sizes, iters: int) -> list:
+    """The pallas_sharded column, from a subprocess: the sharded engine
+    needs a multi-device mesh, and this process must keep jax's real
+    single-device view (jax locks the device count at first backend
+    init), so benchmarks/shard_bench.py forces host devices in its own
+    interpreter and ships records back as JSON."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.shard_bench",
+         "--sizes", *[str(s) for s in sizes], "--iters", str(iters)],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"shard_bench failed: {out.stderr[-500:]}")
+    return json.loads(out.stdout)
+
+
 def run_round_step_bench(quick: bool, out_dir: str) -> list:
-    """Full-round jnp vs pallas-slab benchmark on >= 2 model sizes; the
-    records land in BENCH_round_step.json at the repo root so the perf
-    trajectory is tracked across PRs. A --quick run is reduced-fidelity
-    (fewer sizes/iters), so it writes under ``out_dir`` instead of
-    clobbering the tracked artifact."""
+    """Full-round benchmark, jnp vs pallas-slab vs mesh-sharded slab, on
+    >= 2 model sizes; the records land in BENCH_round_step.json at the
+    repo root so the perf trajectory is tracked across PRs. A --quick
+    run is reduced-fidelity (fewer sizes/iters), so it writes under
+    ``out_dir`` instead of clobbering the tracked artifact."""
     sizes = (1 << 14, 1 << 16) if quick else (1 << 14, 1 << 16, 1 << 18)
+    iters = 2 if quick else 5
     records = []
     for n_params in sizes:
-        records.extend(kernel_bench.bench_round_step(
-            n_params, iters=2 if quick else 5))
+        records.extend(kernel_bench.bench_round_step(n_params, iters=iters))
+    # No stub record on failure: a full run would clobber the tracked
+    # repo-root artifact with it, and a quick run would exit 0 under CI;
+    # main() turns the raise into a round_step:ERROR line + exit 1.
+    records.extend(_sharded_round_step_records(sizes, iters))
     for r in records:
         _csv(r["name"], r["us_per_round"], r["derived"])
     dest = out_dir if quick else REPO_ROOT
@@ -84,12 +107,14 @@ def main() -> None:
         for rec in kernel_bench.all_benches():
             _csv(rec["name"], rec["us_per_call"], rec["derived"])
 
+    failed = False
     if not args.only or args.only == "round_step":
         try:
             all_records["round_step"] = run_round_step_bench(args.quick,
                                                              args.out)
         except Exception as e:  # noqa: BLE001
             _csv("round_step:ERROR", 0.0, repr(e)[:80])
+            failed = True
 
     # Roofline summary (if dry-run artifacts exist).
     try:
@@ -109,6 +134,10 @@ def main() -> None:
 
     with open(os.path.join(args.out, "paper_figs.json"), "w") as f:
         json.dump(all_records, f, indent=2)
+    if failed:
+        # The tracked round_step artifact is the perf trajectory; exiting
+        # 0 on a failed run would let it rot silently under CI.
+        sys.exit(1)
 
 
 if __name__ == "__main__":

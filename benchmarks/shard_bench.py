@@ -1,0 +1,91 @@
+"""Sharded-slab round benchmark (separate process on purpose).
+
+The main bench process must keep jax's real single-device view (see
+tests/conftest.py), and jax locks the device count at first backend
+init — so the ``pallas_sharded`` column of BENCH_round_step.json is
+produced here, in a subprocess spawned by ``benchmarks/run.py`` with the
+host-device override above, and shipped back as JSON on stdout.
+
+Like the other pallas numbers on this CPU container, the wall time
+measures interpret mode; the hardware-relevant column is the per-device
+bytes model: each of P devices streams its N/P client rows once for the
+MAC, does the 7-transfer fused update on its d/P slab slice, and pays
+~2 slab transfers of psum traffic (ring all-reduce) for the
+superposition + regather.
+
+    PYTHONPATH=src python -m benchmarks.shard_bench --sizes 16384 65536
+"""
+
+import os
+import sys
+
+from repro.launch.hostdev import (force_host_devices, mesh_device_count,
+                                  positive_int)
+
+force_host_devices(mesh_device_count(sys.argv, "--mesh"))
+
+import argparse
+import json
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def bench_sharded_round_step(n_params: int, n_clients: int = 8,
+                             mesh_shape=(2,), iters: int = 5) -> dict:
+    import jax
+    from benchmarks.kernel_bench import _round_step_case
+    from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                            init_server, make_round_step)
+    from repro.launch.mesh import make_client_mesh
+
+    params, loss_fn, batches = _round_step_case(n_params, n_clients)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
+    mesh = make_client_mesh(mesh_shape)
+    rs = make_round_step(loss_fn, ch, ad, FLConfig(n_clients=n_clients),
+                         backend="pallas_sharded", mesh=mesh)
+    state = init_server(params, ad)
+    key = jax.random.key(2)
+    run = lambda: rs(params, state, key, batches)
+    jax.block_until_ready(run())          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run()
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / iters * 1e6
+    n_dev = 1
+    for s in mesh_shape:
+        n_dev *= s
+    # Per-device f32 words: MAC reads (N/P + 2)d, update moves 7 d/P,
+    # psum ring traffic ~2d (superposition) + ~2d/P * k (regather,
+    # k = 3 rows for adam_ota: delta, nu, params).
+    k_rows = 3
+    bytes_dev = 4 * (n_params * (n_clients // n_dev + 2)
+                     + 7 * n_params // n_dev + 2 * n_params
+                     + 2 * k_rows * n_params // n_dev)
+    shape_tag = "x".join(str(s) for s in mesh_shape)
+    return dict(
+        name=f"round_step_pallas_sharded_{n_params}",
+        backend="pallas_sharded", n_params=n_params, n_clients=n_clients,
+        mesh=shape_tag, us_per_round=us, us_per_call=us,
+        hbm_bytes_est=bytes_dev,
+        derived=f"hbm_bytes_per_device={bytes_dev};mesh={shape_tag}",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[1 << 14])
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--mesh", default="2")
+    ap.add_argument("--iters", type=positive_int, default=5)
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    records = [bench_sharded_round_step(n, args.clients, mesh_shape,
+                                        args.iters) for n in args.sizes]
+    json.dump(records, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

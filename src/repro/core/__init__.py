@@ -11,6 +11,8 @@ from repro.core.fl import (FLConfig, RoundMetrics, init_server, make_round_step,
                            make_sharded_round_step, run_rounds)
 from repro.core.ota import (add_interference, faded_loss_weights,
                             ota_aggregate_slab, ota_aggregate_stacked, ota_psum)
+from repro.core.shard import (client_axes_of, n_client_shards,
+                              shard_round_step)
 from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
                              stack_to_slab, tree_to_slab, zeros_slab)
 from repro.core.tail_index import hill_estimate, log_moment_estimate
@@ -25,5 +27,6 @@ __all__ = [
     "add_interference", "faded_loss_weights", "ota_aggregate_slab",
     "ota_aggregate_stacked", "ota_psum", "SlabSpec", "make_slab_spec",
     "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",
-    "hill_estimate", "log_moment_estimate",
+    "hill_estimate", "log_moment_estimate", "client_axes_of",
+    "n_client_shards", "shard_round_step",
 ]

@@ -38,7 +38,7 @@ register the optimizer here, and map its name in ``_SLAB_MODES``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,12 +91,16 @@ class AdaptiveConfig:
     momentum: float = 0.9         # FedAvgM server momentum
     backend: str = "jnp"          # "jnp": per-leaf tree.map reference;
                                   # "pallas": one fused adaptive_update_slab
-                                  # launch over the whole model slab.
+                                  # launch over the whole model slab;
+                                  # "pallas_sharded": the slab round is
+                                  # distributed over a device mesh
+                                  # (repro.core.shard) — outside shard_map
+                                  # this behaves like "pallas".
     interpret: bool = True        # Pallas interpret mode (True on CPU;
                                   # set False on real TPU).
 
     def __post_init__(self):
-        if self.backend not in ("jnp", "pallas"):
+        if self.backend not in ("jnp", "pallas", "pallas_sharded"):
             raise ValueError(f"unknown optimizer backend: {self.backend}")
 
 
@@ -270,6 +274,93 @@ _SLAB_MODES = {
 }
 
 
+def state_slab_rows(cfg: AdaptiveConfig) -> Tuple[str, ...]:
+    """Names of the optimizer-state slabs the fused kernel carries, in
+    the fixed row order used by ``pack_state_slabs``/``slab_update_slabs``.
+    Empty for sgd; ("delta",) for momentum; ("delta", "nu", "vmax") for
+    amsgrad; ("delta", "nu") otherwise."""
+    mode = _SLAB_MODES[cfg.optimizer]
+    if mode == "sgd":
+        return ()
+    if mode == "momentum":
+        return ("delta",)
+    if mode == "amsgrad":
+        return ("delta", "nu", "vmax")
+    return ("delta", "nu")
+
+
+def pack_state_slabs(cfg: AdaptiveConfig, spec: SlabSpec,
+                     state: ServerOptState) -> Tuple[jax.Array, ...]:
+    """Flatten the optimizer state into f32 slabs, ``state_slab_rows``
+    order. The slabs share ``spec``'s layout (and hence its shard-aligned
+    padding), so the sharded engine can slice them per device."""
+    rows = state_slab_rows(cfg)
+    amsgrad = "vmax" in rows     # nu is {"v": tree, "vmax": tree} then
+    out = []
+    for name in rows:
+        if name == "delta":
+            out.append(tree_to_slab(spec, state.delta))
+        elif name == "nu":
+            out.append(tree_to_slab(spec,
+                                    state.nu["v"] if amsgrad else state.nu))
+        else:  # vmax
+            out.append(tree_to_slab(spec, state.nu["vmax"]))
+    return tuple(out)
+
+
+def unpack_state_slabs(cfg: AdaptiveConfig, spec: SlabSpec,
+                       state: ServerOptState,
+                       slabs: Tuple[jax.Array, ...]) -> ServerOptState:
+    """Inverse of ``pack_state_slabs``: restore the state pytrees (f32,
+    ``cast=False``) and bump the round counter. Modes that carry no
+    delta/nu keep the previous (placeholder) values."""
+    rows = state_slab_rows(cfg)
+    named = dict(zip(rows, slabs))
+    delta = (slab_to_tree(spec, named["delta"], cast=False)
+             if "delta" in named else state.delta)
+    if "vmax" in named:
+        nu = {"v": slab_to_tree(spec, named["nu"], cast=False),
+              "vmax": slab_to_tree(spec, named["vmax"], cast=False)}
+    elif "nu" in named:
+        nu = slab_to_tree(spec, named["nu"], cast=False)
+    else:
+        nu = state.nu
+    return ServerOptState(state.step + 1, delta, nu)
+
+
+def slab_update_slabs(cfg: AdaptiveConfig, g_slab: jax.Array,
+                      state_slabs: Tuple[jax.Array, ...], w_slab: jax.Array
+                      ) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
+    """ONE fused ``adaptive_update_slab`` launch on raw 1-D slabs.
+
+    ``state_slabs`` is in ``state_slab_rows`` order; the slabs may be the
+    full model or any lane-aligned slice of it (the sharded engine passes
+    each device's local slab shard). Returns ``(new_state_slabs, w')``.
+    """
+    from repro.kernels.adaptive_update import adaptive_update_slab
+
+    mode = _SLAB_MODES[cfg.optimizer]
+    kw = dict(lr=cfg.lr,
+              beta1=cfg.momentum if mode == "momentum" else cfg.beta1,
+              beta2=cfg.beta2, alpha=cfg.alpha, eps=cfg.eps, mode=mode,
+              interpret=cfg.interpret)
+    if mode == "sgd":
+        (w_n,) = adaptive_update_slab(g_slab, None, None, w_slab, **kw)
+        return (), w_n
+    if mode == "momentum":
+        d_n, w_n = adaptive_update_slab(g_slab, state_slabs[0], None, w_slab,
+                                        **kw)
+        return (d_n,), w_n
+    if mode == "amsgrad":
+        d_s, v_s, m_s = state_slabs
+        d_n, v_n, m_n, w_n = adaptive_update_slab(g_slab, d_s, v_s, w_slab,
+                                                  nu_max=m_s, **kw)
+        return (d_n, v_n, m_n), w_n
+    d_s, v_s = state_slabs
+    d_n, v_n, w_n = adaptive_update_slab(g_slab, d_s, v_s, w_slab, **kw)
+    return (d_n, v_n), w_n
+
+
 def apply_slab_update(cfg: AdaptiveConfig, spec: SlabSpec, g_slab: jax.Array,
                       state: ServerOptState, params: PyTree):
     """Slab-engine server update: ONE fused kernel over the whole model.
@@ -282,38 +373,11 @@ def apply_slab_update(cfg: AdaptiveConfig, spec: SlabSpec, g_slab: jax.Array,
     (params to their original dtypes, state to f32), so the result is
     interchangeable with the jnp backend's.
     """
-    from repro.kernels.adaptive_update import adaptive_update_slab
-
-    mode = _SLAB_MODES[cfg.optimizer]
     w_s = tree_to_slab(spec, params)
-    kw = dict(lr=cfg.lr,
-              beta1=cfg.momentum if mode == "momentum" else cfg.beta1,
-              beta2=cfg.beta2, alpha=cfg.alpha, eps=cfg.eps, mode=mode,
-              interpret=cfg.interpret)
-    if mode == "sgd":
-        (w_n,) = adaptive_update_slab(g_slab, None, None, w_s, **kw)
-        delta, nu = state.delta, state.nu
-    elif mode == "momentum":
-        d_s = tree_to_slab(spec, state.delta)
-        d_n, w_n = adaptive_update_slab(g_slab, d_s, None, w_s, **kw)
-        delta, nu = slab_to_tree(spec, d_n, cast=False), state.nu
-    elif mode == "amsgrad":
-        d_s = tree_to_slab(spec, state.delta)
-        v_s = tree_to_slab(spec, state.nu["v"])
-        m_s = tree_to_slab(spec, state.nu["vmax"])
-        d_n, v_n, m_n, w_n = adaptive_update_slab(g_slab, d_s, v_s, w_s,
-                                                  nu_max=m_s, **kw)
-        delta = slab_to_tree(spec, d_n, cast=False)
-        nu = {"v": slab_to_tree(spec, v_n, cast=False),
-              "vmax": slab_to_tree(spec, m_n, cast=False)}
-    else:
-        d_s = tree_to_slab(spec, state.delta)
-        v_s = tree_to_slab(spec, state.nu)
-        d_n, v_n, w_n = adaptive_update_slab(g_slab, d_s, v_s, w_s, **kw)
-        delta = slab_to_tree(spec, d_n, cast=False)
-        nu = slab_to_tree(spec, v_n, cast=False)
+    new_slabs, w_n = slab_update_slabs(cfg, g_slab, pack_state_slabs(
+        cfg, spec, state), w_s)
     new_params = slab_to_tree(spec, w_n)
-    return new_params, ServerOptState(state.step + 1, delta, nu)
+    return new_params, unpack_state_slabs(cfg, spec, state, new_slabs)
 
 
 def _make_slab_update(cfg: AdaptiveConfig):
@@ -334,4 +398,7 @@ def make_server_optimizer(cfg: AdaptiveConfig) -> ServerOptimizer:
     opt = _REGISTRY[cfg.optimizer](cfg)
     if cfg.backend == "jnp":
         return opt
+    # "pallas" and "pallas_sharded" both use the fused slab update here:
+    # the sharded round step (repro.core.shard) drives the kernels itself
+    # inside shard_map and only uses this optimizer's ``init``.
     return ServerOptimizer(opt.init, _make_slab_update(cfg), opt.name)

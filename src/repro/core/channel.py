@@ -55,7 +55,11 @@ class OTAChannelConfig:
     pc_threshold: float = 0.2
     backend: str = "jnp"            # "jnp": per-leaf tree.map aggregation;
                                     # "pallas": one fused ota_channel_slab
-                                    # launch over the whole model slab.
+                                    # launch over the whole model slab;
+                                    # "pallas_sharded": per-device partial
+                                    # MAC + cross-client psum over a mesh
+                                    # (repro.core.shard) — outside
+                                    # shard_map this behaves like "pallas".
     interpret: bool = True          # Pallas interpret mode (True on CPU;
                                     # set False on real TPU).
 
@@ -64,7 +68,7 @@ class OTAChannelConfig:
             raise ValueError(f"tail index alpha must be in (1, 2], got {self.alpha}")
         if self.fading not in ("rayleigh", "gaussian", "none"):
             raise ValueError(f"unknown fading model: {self.fading}")
-        if self.backend not in ("jnp", "pallas"):
+        if self.backend not in ("jnp", "pallas", "pallas_sharded"):
             raise ValueError(f"unknown channel backend: {self.backend}")
 
     @property

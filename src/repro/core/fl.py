@@ -20,7 +20,13 @@ round over the whole model instead of dozens of per-leaf ops; results
 match the jnp backend to f32 rounding (both backends consume identical
 PRNG draws).
 
-``make_sharded_round_step`` is the distributed twin used on a real mesh:
+``backend="pallas_sharded"`` (requires ``mesh=``) is the distributed
+slab engine (``repro.core.shard.shard_round_step``): the client axis and
+the slab are partitioned over the mesh's client-carrying axes, each
+device runs the two fused launches on its local clients/slab shard, and
+the OTA superposition is a real cross-client ``psum``.
+
+``make_sharded_round_step`` is the older per-leaf distributed twin:
 clients map onto (pod, data) shard groups and step 2 becomes the
 ``ota_psum`` collective inside ``shard_map``.
 """
@@ -94,14 +100,17 @@ def _resolve_backend(backend: Optional[str], channel_cfg: OTAChannelConfig,
                      ) -> Tuple[str, OTAChannelConfig, AdaptiveConfig]:
     """Pick the round backend and force both configs onto it.
 
-    An explicit ``backend`` argument wins; otherwise a "pallas" request
-    on either config switches the whole round (a split round — slab MAC
-    but tree.map update, or vice versa — would just pay both conversion
-    costs)."""
+    An explicit ``backend`` argument wins; otherwise the "biggest"
+    backend either config requests switches the whole round (a split
+    round — slab MAC but tree.map update, or vice versa — would just pay
+    both conversion costs)."""
     if backend is None:
-        backend = ("pallas" if "pallas" in (channel_cfg.backend,
-                                            adaptive_cfg.backend) else "jnp")
-    if backend not in ("jnp", "pallas"):
+        requested = (channel_cfg.backend, adaptive_cfg.backend)
+        backend = "jnp"
+        for cand in ("pallas", "pallas_sharded"):
+            if cand in requested:
+                backend = cand
+    if backend not in ("jnp", "pallas", "pallas_sharded"):
         raise ValueError(f"unknown round backend: {backend}")
     channel_cfg = dataclasses.replace(channel_cfg, backend=backend)
     adaptive_cfg = dataclasses.replace(adaptive_cfg, backend=backend)
@@ -110,18 +119,35 @@ def _resolve_backend(backend: Optional[str], channel_cfg: OTAChannelConfig,
 
 def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                     adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
-                    jit: bool = True, backend: Optional[str] = None):
+                    jit: bool = True, backend: Optional[str] = None,
+                    mesh=None):
     """One ADOTA-FL round over vmapped clients.
 
     Returns ``round_step(params, opt_state, key, client_batches)`` where
     ``client_batches`` leaves have shape (N, ...) for local_steps == 1 and
     (N, k, ...) otherwise. ``backend`` overrides the configs' backend
-    fields ("jnp" | "pallas"); with "pallas" the round executes exactly
-    one ``ota_channel_slab`` and one ``adaptive_update_slab`` launch over
-    the full model.
+    fields ("jnp" | "pallas" | "pallas_sharded"); with "pallas" the round
+    executes exactly one ``ota_channel_slab`` and one
+    ``adaptive_update_slab`` launch over the full model. With
+    "pallas_sharded" the round is distributed over ``mesh``'s
+    client-carrying axes (required argument then): same signature, same
+    results to f32 rounding, but each device runs the two fused launches
+    on its local clients/slab shard (see ``repro.core.shard``).
     """
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
+    if backend == "pallas_sharded":
+        from repro.core.shard import shard_round_step
+        if mesh is None:
+            raise ValueError('backend="pallas_sharded" needs a mesh; pass '
+                             'make_round_step(..., mesh=...)')
+        return shard_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                mesh, jit=jit)
+    if mesh is not None:
+        raise ValueError(
+            f'mesh= was given but the resolved backend is "{backend}", '
+            'which runs single-device and would silently ignore it; use '
+            'backend="pallas_sharded" for distributed rounds')
     server_opt = make_server_optimizer(adaptive_cfg)
     client_fn = _client_update(loss_fn, fl_cfg)
 

@@ -138,7 +138,7 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
       (g_t, h): the noisy aggregated gradient pytree (leaf shape (...)) and
       the fading draw h of shape (N,) (returned for logging/analysis).
     """
-    if cfg.backend == "pallas":
+    if cfg.backend in ("pallas", "pallas_sharded"):
         spec = make_slab_spec(jax.tree.map(
             lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype),
             client_grads))
@@ -161,6 +161,22 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
 # 2. Explicit-collective path for shard_map (client == mesh shard group).
 # ---------------------------------------------------------------------------
 
+def linear_shard_index(axis_names: Sequence[str]) -> jax.Array:
+    """Row-major linear index of this shard over ``axis_names`` — the
+    same order PartitionSpec uses to lay blocks of a sharded array out,
+    so slicing a replicated array at ``idx * block`` matches what an
+    in_spec ``P(axis_names)`` would have delivered. Call inside
+    ``shard_map``.
+    """
+    # psum of a literal 1 constant-folds to the static axis size on every
+    # jax version; jax.lax.axis_size only exists on newer releases.
+    sizes = [jax.lax.psum(1, a) for a in axis_names]
+    idx = jnp.zeros((), jnp.int32)
+    for a, s in zip(axis_names, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
 def ota_psum(local_grad: PyTree, key: jax.Array, cfg: OTAChannelConfig,
              axis_names: Sequence[str]) -> PyTree:
     """OTA aggregation as a collective; call inside ``shard_map``.
@@ -174,14 +190,8 @@ def ota_psum(local_grad: PyTree, key: jax.Array, cfg: OTAChannelConfig,
     exactly like the single RF front end of the server.
     """
     axis_names = tuple(axis_names)
-    # psum of a literal 1 constant-folds to the static axis size on every
-    # jax version; jax.lax.axis_size only exists on newer releases.
-    sizes = [jax.lax.psum(1, a) for a in axis_names]
-    n = math.prod(sizes)
-    # Linear client index of this shard.
-    idx = jnp.zeros((), jnp.int32)
-    for a, s in zip(axis_names, sizes):
-        idx = idx * s + jax.lax.axis_index(a)
+    n = math.prod(jax.lax.psum(1, a) for a in axis_names)
+    idx = linear_shard_index(axis_names)
     kh, kx = jax.random.split(key)
     h_all = sample_fading(kh, cfg, (n,))
     h_n = jax.lax.dynamic_index_in_dim(h_all, idx, keepdims=False)

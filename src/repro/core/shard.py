@@ -1,0 +1,165 @@
+"""Sharded slab engine: the OTA round distributed over a device mesh.
+
+The paper's aggregation (Eq. 7) is a *physical superposition*: all N
+clients transmit simultaneously and the channel adds their signals.
+``shard_round_step`` maps that superposition onto a device mesh — the
+mesh IS the multiple-access channel:
+
+1. The mesh's client-carrying axes (every axis except ``"model"``) are
+   split into P shard groups; each holds N/P clients and computes their
+   gradients locally (the client compute is embarrassingly parallel).
+2. Each device runs ONE fused ``ota_channel_slab`` launch over its local
+   client rows — the faded partial sum ``(1/N) sum_{n local} h_n G_n``
+   over the full slab width — and a cross-client ``psum`` completes the
+   MAC exactly like the over-the-air sum.
+3. The interference xi_t is added once, from the SAME per-leaf CMS draws
+   the single-device backends consume (see the PRNG contract below).
+4. Each device then owns one contiguous, lane-aligned slice of the slab
+   (the shard-aligned padding rule of ``make_slab_spec(..., shards=P)``)
+   and runs ONE fused ``adaptive_update_slab`` launch on its slice —
+   the server update is model-sharded, ZeRO-style. The updated slices
+   are regathered (masked psum) so params/state come back as full
+   pytrees, drop-in interchangeable with the other backends.
+
+**Per-shard PRNG keying contract.** Every random draw is made from the
+round key with the exact keying of the single-device path and then
+*sliced*, never re-keyed per shard:
+
+* fading: ``kh, kx = split(key)``; ``h = sample_fading(kh, cfg, (N,))``
+  is the full draw on every shard; shard s uses rows
+  ``h[s*N/P : (s+1)*N/P]`` (clients are laid out in linear shard-index
+  order, matching the batch sharding).
+* interference: ``(u, e) = _cms_slab_inputs(kx, spec)`` draws per LEAF
+  (``fold_in(kx, leaf_index)``), so the values of every real slab entry
+  are independent of the padded length — specs built with different
+  ``shards`` (hence different padding) agree on every real entry.
+
+Hence jnp, pallas and pallas_sharded consume literally the same noise,
+and differ only by float32 summation order (psum of P partial sums vs
+one in-kernel reduction) — parity holds to ~1e-7 relative, tested at
+1e-5 (tests/test_shard_roundstep.py, repro.launch.shard_check).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
+                                 pack_state_slabs, slab_update_slabs,
+                                 unpack_state_slabs)
+from repro.core.channel import OTAChannelConfig, cms_transform, sample_fading
+from repro.core.fl import FLConfig, RoundMetrics, _client_update
+from repro.core.ota import _cms_slab_inputs, linear_shard_index
+from repro.core.slab import make_slab_spec, slab_to_tree, stack_to_slab, tree_to_slab
+
+PyTree = Any
+
+
+def client_axes_of(mesh) -> Tuple[str, ...]:
+    """The client-carrying axes of a mesh: every axis except "model"."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_client_shards(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in client_axes_of(mesh))
+
+
+def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
+                     adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig, mesh,
+                     jit: bool = True):
+    """Build the distributed twin of ``make_round_step(backend="pallas")``.
+
+    Returns ``round_step(params, opt_state, key, client_batches)`` with
+    the SAME signature and pytree in/out contract as the single-device
+    backends: ``client_batches`` leaves carry the global client axis N
+    up front and are sharded over the mesh's client axes by shard_map;
+    params/opt_state go in and come out as full (replicated) pytrees.
+
+    Per device and per round the body is exactly two fused Pallas
+    launches — ``ota_channel_slab`` over the device's local client rows
+    and ``adaptive_update_slab`` over its slab slice — plus two psums
+    (the MAC superposition and the slice regather).
+    """
+    axes = client_axes_of(mesh)
+    if not axes:
+        raise ValueError("mesh has no client-carrying axes (all axes are "
+                         "'model'); shard_round_step needs at least one")
+    n_shards = n_client_shards(mesh)
+    n = fl_cfg.n_clients
+    if n % n_shards != 0:
+        raise ValueError(
+            f"n_clients={n} must be divisible by the mesh's client-shard "
+            f"count {n_shards} (axes {axes} of mesh shape {dict(mesh.shape)})")
+    n_local = n // n_shards
+    client_fn = _client_update(loss_fn, fl_cfg)
+
+    def body(params, opt_state: ServerOptState, key, local_batches):
+        # --- local client compute: N/P clients on this device ---------
+        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
+                                                               local_batches)
+        spec = make_slab_spec(params, shards=n_shards)
+        shard_len = spec.shard_len
+        idx = linear_shard_index(axes)
+
+        # --- PRNG: full draws from the round key, sliced per shard ----
+        kh, kx = jax.random.split(key)
+        h = sample_fading(kh, channel_cfg, (n,))
+        h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
+
+        # --- launch 1: fused partial MAC over the local client rows ---
+        g_loc_stack = stack_to_slab(spec, grads)          # (n_local, padded)
+        from repro.kernels.ota_channel import ota_channel_slab
+        zeros = jnp.zeros((spec.padded,), jnp.float32)
+        partial = ota_channel_slab(
+            g_loc_stack, h_loc, zeros, jnp.ones_like(zeros),
+            alpha=channel_cfg.alpha, scale=0.0, n_total=n,
+            interpret=channel_cfg.interpret)
+        clean_part = jnp.sum(g_loc_stack, axis=0)
+
+        # --- the superposition: ONE cross-client psum == the MAC ------
+        summed = jax.lax.psum(jnp.stack([partial, clean_part]), axes)
+        g_slab, clean_sum = summed[0], summed[1]
+        if channel_cfg.interference:
+            # Identical draws to the single-device backends (per-leaf
+            # keying is padding-independent); added once, post-psum —
+            # the server's single RF front end.
+            u, e = _cms_slab_inputs(kx, spec)
+            g_slab = g_slab + channel_cfg.xi_scale * cms_transform(
+                u, e, channel_cfg.alpha)
+
+        # --- launch 2: fused server update on this device's slice -----
+        start = idx * shard_len
+        sl = lambda s: jax.lax.dynamic_slice_in_dim(s, start, shard_len)
+        w_slab = tree_to_slab(spec, params)
+        state_slabs = pack_state_slabs(adaptive_cfg, spec, opt_state)
+        new_slices, w_slice = slab_update_slabs(
+            adaptive_cfg, sl(g_slab), tuple(sl(s) for s in state_slabs),
+            sl(w_slab))
+
+        # --- regather the updated slices (masked psum == all_gather) --
+        rows = jnp.stack(list(new_slices) + [w_slice])     # (k+1, shard_len)
+        full = jnp.zeros((rows.shape[0], spec.padded), jnp.float32)
+        full = jax.lax.psum(
+            jax.lax.dynamic_update_slice(full, rows, (0, start)), axes)
+        new_params = slab_to_tree(spec, full[-1])
+        new_state = unpack_state_slabs(adaptive_cfg, spec, opt_state,
+                                       tuple(full[:-1]))
+
+        metrics = RoundMetrics(
+            loss=jax.lax.pmean(jnp.mean(losses), axes),
+            grad_norm=jnp.sqrt(jnp.sum(jnp.square(clean_sum / n))),
+            noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
+            fading_mean=jnp.mean(h),
+        )
+        return new_params, new_state, metrics
+
+    step = shard_map(body, mesh,
+                     in_specs=(P(), P(), P(), P(axes)),
+                     out_specs=(P(), P(), P()))
+    return jax.jit(step) if jit else step

@@ -10,7 +10,13 @@ contract between the two worlds:
   dtype, flat size and offset into the slab, plus the lane-padded total
   (``LANE == 128`` to line up with the TPU VPU lanes the kernels tile
   over). Shapes are static under jit, so the spec can be built inside a
-  traced function at no runtime cost.
+  traced function at no runtime cost. ``shards=P`` rounds the padded
+  length up to a multiple of ``lane * P`` — the *shard-aligned padding
+  rule* of the sharded slab engine: the slab then splits into P
+  contiguous, equal, lane-aligned slices, one per device of the mesh's
+  client axes, and every slice is itself a valid kernel operand. The
+  extra padding is zeros, so specs built with different ``shards`` agree
+  on every real entry and round-trip identically.
 * ``tree_to_slab(spec, tree)`` flattens every leaf, casts to f32 (the
   canonical compute dtype of the server update — the jnp reference path
   also computes in f32), concatenates in leaf order and zero-pads to the
@@ -59,17 +65,30 @@ class SlabSpec:
     sizes: Tuple[int, ...]
     total: int
     padded: int
+    shards: int = 1
 
     @property
     def n_leaves(self) -> int:
         return len(self.shapes)
 
+    @property
+    def shard_len(self) -> int:
+        """Length of one per-device slab slice (``padded / shards``)."""
+        return self.padded // self.shards
 
-def make_slab_spec(tree: PyTree, lane: int = LANE) -> SlabSpec:
-    """Build the static slab layout of ``tree`` (arrays or ShapeDtypeStructs)."""
+
+def make_slab_spec(tree: PyTree, lane: int = LANE, shards: int = 1) -> SlabSpec:
+    """Build the static slab layout of ``tree`` (arrays or ShapeDtypeStructs).
+
+    ``shards`` > 1 applies the shard-aligned padding rule: the padded
+    length becomes the smallest multiple of ``lane * shards`` holding all
+    leaves, so the slab splits into ``shards`` equal lane-aligned slices.
+    """
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         raise ValueError("cannot build a slab spec from an empty pytree")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     shapes = tuple(tuple(l.shape) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
     sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
@@ -77,10 +96,11 @@ def make_slab_spec(tree: PyTree, lane: int = LANE) -> SlabSpec:
     for s in sizes:
         offsets.append(off)
         off += s
-    padded = -(-off // lane) * lane
+    quantum = lane * shards
+    padded = -(-off // quantum) * quantum
     return SlabSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
                     offsets=tuple(offsets), sizes=tuple(sizes), total=off,
-                    padded=padded)
+                    padded=padded, shards=shards)
 
 
 def tree_to_slab(spec: SlabSpec, tree: PyTree,

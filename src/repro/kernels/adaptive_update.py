@@ -33,6 +33,16 @@ this CPU container the kernel body is validated with interpret=True
 against ``ref.adaptive_update_ref``. The elementwise math mirrors the
 jnp reference ops exactly (same |.|** / zero-fill / maximum guards), so
 interpret-mode results match the tree.map path to f32 rounding.
+
+Sharded slab engine (``repro.core.shard``): the update is elementwise,
+so each mesh device passes its OWN contiguous slab slice here and the
+grid covers just that shard — P devices each run one launch of 1/P the
+size instead of one device running the full-model launch. Slices are
+valid operands by construction: the shard-aligned padding rule
+(``make_slab_spec(..., shards=P)``) makes every slice lane-aligned, and
+the zero tail stays a fixed point of all six modes (delta' = b1*0, nu
+update of 0 is 0, w' = 0 - lr*0/denom = 0), so regathered slices equal
+the unsharded result exactly.
 """
 
 from __future__ import annotations

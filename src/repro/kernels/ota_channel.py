@@ -20,6 +20,14 @@ the same (1, 2] range as ``OTAChannelConfig``.
 
 Grid: 1-D over column blocks of size (N, block_cols); the N reduction
 runs inside the tile (N = clients-per-shard is small, <= a few hundred).
+
+Sharded slab engine: when the round is distributed over a device mesh
+(``repro.core.shard``), each device launches this kernel on its LOCAL
+client shard only, passing ``n_total`` = the global client count so the
+1/N normalisation matches the single-device launch; the cross-device
+``psum`` then completes the superposition (the mesh is the multiple-
+access channel). The grid covers just the local rows/columns, so the
+launch cost scales down with the shard, not the model.
 """
 
 from __future__ import annotations
@@ -47,14 +55,22 @@ def _ota_kernel(g_ref, h_ref, u_ref, e_ref, out_ref, *, alpha: float,
 
 def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
                      e: jax.Array, *, alpha: float, scale: float,
+                     n_total: int | None = None,
                      block_cols: int = DEFAULT_BLOCK_COLS,
                      interpret: bool = True) -> jax.Array:
     """grads: (N, d) stacked client gradients; h: (N,) fading draws;
     u: (d,) uniform angles in (-pi/2, pi/2); e: (d,) Exp(1) draws.
-    Returns the aggregated noisy gradient (d,) float32."""
+    Returns the aggregated noisy gradient (d,) float32.
+
+    ``n_total`` overrides the 1/N normalisation (defaults to the local
+    row count N). The sharded engine passes the GLOBAL client count here
+    while feeding only this shard's rows, so per-shard partial sums psum
+    to exactly the single-device aggregate."""
     if not (1.0 < alpha <= 2.0):
         raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
     n, d = grads.shape
+    if n_total is None:
+        n_total = n
     d_pad = -(-d // block_cols) * block_cols
     gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
     up = jnp.pad(u, (0, d_pad - d)).reshape(1, d_pad)
@@ -63,7 +79,8 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
 
     grid = (d_pad // block_cols,)
     out = pl.pallas_call(
-        functools.partial(_ota_kernel, alpha=alpha, scale=scale, n_clients=n),
+        functools.partial(_ota_kernel, alpha=alpha, scale=scale,
+                          n_clients=n_total),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n, block_cols), lambda i: (0, i)),

@@ -1,0 +1,60 @@
+"""Force CPU host devices for multi-device runs — jax-free on purpose.
+
+jax locks the host device count at first backend init, so subprocess
+entry points (``repro.launch.shard_check``, ``benchmarks.shard_bench``)
+must append ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``
+before any jax array/device op. They read the requested mesh shapes
+from raw ``sys.argv`` because argparse would come too late (it runs
+after the jax imports at module top). Harmless on real TPU hosts — the
+flag only affects the Host platform.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Sequence
+
+
+def mesh_device_count(argv: Sequence[str], flag: str, minimum: int = 8) -> int:
+    """Max product over the comma-separated mesh shapes given by
+    ``flag`` in ``argv`` — both the ``--mesh 4,2`` / ``--meshes 2 4,2``
+    and the ``--mesh=4,2`` forms — floored at ``minimum``. Absent or
+    malformed values fall back to ``minimum``; argparse reports the
+    malformed ones properly later."""
+    argv = list(argv)
+    vals = []
+    for i, a in enumerate(argv):
+        if a == flag:
+            for v in argv[i + 1:]:
+                if v.startswith("--"):
+                    break
+                vals.append(v)
+        elif a.startswith(flag + "="):
+            vals.append(a[len(flag) + 1:])
+    n_max = minimum
+    for v in vals:
+        try:
+            n = 1
+            for x in v.split(","):
+                n *= int(x)
+            n_max = max(n_max, n)
+        except ValueError:
+            pass
+    return n_max
+
+
+def force_host_devices(n: int) -> None:
+    """Append the host-device override to ``XLA_FLAGS``. Call before
+    jax's first backend init (first array/device op)."""
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def positive_int(v: str) -> int:
+    """argparse type: int >= 1."""
+    n = int(v)
+    if n < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {n}")
+    return n

@@ -24,11 +24,28 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_auto_mesh(shape, axes)
 
 
+def make_client_mesh(shape):
+    """Mesh whose EVERY axis carries clients — the sharded slab engine's
+    deployment shape (no model parallelism; ``repro.core.shard`` splits
+    the slab, not the tensors). 1-D shapes get the canonical ("data",)
+    axis, 2-D ("pod", "data"); higher ranks fall back to generic names.
+
+    On a CPU host run under ``--xla_force_host_platform_device_count``
+    (see ``launch.train``/``launch.shard_check``) this is how the OTA
+    round is simulated multi-device.
+    """
+    shape = tuple(shape)
+    names = {1: ("data",), 2: ("pod", "data")}.get(
+        len(shape), tuple(f"clients{i}" for i in range(len(shape))))
+    return make_auto_mesh(shape, names)
+
+
 def data_axes(mesh) -> tuple:
     """The client-carrying axes of a mesh (everything except "model")."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    from repro.core.shard import client_axes_of
+    return client_axes_of(mesh)
 
 
 def n_clients_of(mesh) -> int:
-    import math
-    return math.prod(mesh.shape[a] for a in data_axes(mesh))
+    from repro.core.shard import n_client_shards
+    return n_client_shards(mesh)

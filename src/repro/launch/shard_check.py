@@ -1,0 +1,134 @@
+"""Cross-backend parity check of the sharded slab engine (CLI).
+
+Runs full ADOTA rounds on the jnp reference backend, the single-device
+pallas slab engine, and the mesh-distributed ``pallas_sharded`` engine
+on one or more client-mesh shapes, then reports the maximum deviation of
+params / optimizer state / metrics. Also asserts seeded determinism:
+the sharded round run twice with the same key must be bitwise equal.
+
+This is the executable form of the sharded-engine acceptance contract
+(all three backends consume identical PRNG draws and differ only by f32
+summation order); tests/test_shard_roundstep.py runs it as a subprocess
+so the main pytest process keeps its real single-device view.
+
+    PYTHONPATH=src python -m repro.launch.shard_check \
+        --meshes 2 4,2 --optimizers adam_ota fedavgm --tol 1e-5
+
+The XLA flag below MUST precede any jax import (jax locks the device
+count at first backend init); at least 8 host devices are forced, or
+the largest --meshes product if bigger (read from raw argv — argparse
+would come too late).
+"""
+
+import sys
+
+from repro.launch.hostdev import (force_host_devices, mesh_device_count,
+                                  positive_int)
+
+force_host_devices(mesh_device_count(sys.argv, "--meshes"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        init_server, make_round_step)
+from repro.launch.mesh import make_client_mesh
+
+
+def _max_dev(a, b) -> float:
+    assert jax.tree.structure(a) == jax.tree.structure(b), (
+        jax.tree.structure(a), jax.tree.structure(b))
+    dev = 0.0
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        denom = np.maximum(np.abs(x), 1.0)
+        dev = max(dev, float(np.max(np.abs(x - y) / denom)))
+    return dev
+
+
+def _run(backend: str, mesh, params, batches, ch, ad, fl, rounds: int):
+    rs = make_round_step(_loss_fn, ch, ad, fl, backend=backend, mesh=mesh)
+    p, s = params, init_server(params, ad)
+    for t in range(rounds):
+        p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(7), t), batches)
+    return p, s, m
+
+
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--meshes", nargs="+", default=["2", "4,2"],
+                    help="client-mesh shapes, e.g. --meshes 2 4,2")
+    ap.add_argument("--optimizers", nargs="+",
+                    default=["adam_ota", "fedavgm"])
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=positive_int, default=2)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    args = ap.parse_args(argv)
+
+    params = {
+        "emb": jax.random.normal(jax.random.key(0), (7, 33)),
+        "w": jax.random.normal(jax.random.key(1), (257,)),
+        "b": jax.random.normal(jax.random.key(2), (1,)),
+    }
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3),
+                                    (args.clients,) + p.shape), params)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    fl = FLConfig(n_clients=args.clients)
+
+    failures = 0
+    for opt in args.optimizers:
+        ad = AdaptiveConfig(optimizer=opt, lr=0.05, alpha=1.5, beta2=0.3)
+        p_ref, s_ref, m_ref = _run("jnp", None, params, batches, ch, ad, fl,
+                                   args.rounds)
+        p_slab, _, _ = _run("pallas", None, params, batches, ch, ad, fl,
+                            args.rounds)
+        dev = _max_dev(p_ref, p_slab)
+        print(f"{opt:12s} pallas            dev={dev:.2e}")
+        failures += dev > args.tol
+        for mesh_str in args.meshes:
+            shape = tuple(int(x) for x in mesh_str.split(","))
+            mesh = make_client_mesh(shape)
+            p_s, s_s, m_s = _run("pallas_sharded", mesh, params, batches, ch,
+                                 ad, fl, args.rounds)
+            devs = {
+                "params": _max_dev(p_ref, p_s),
+                "delta": _max_dev(s_ref.delta, s_s.delta),
+                "nu": _max_dev(s_ref.nu, s_s.nu),
+                "loss": abs(float(m_ref.loss) - float(m_s.loss)),
+                "|g_t|": abs(float(m_ref.noisy_grad_norm)
+                             - float(m_s.noisy_grad_norm))
+                / max(abs(float(m_ref.noisy_grad_norm)), 1.0),
+            }
+            worst = max(devs.values())
+            ok = worst <= args.tol
+            failures += not ok
+            print(f"{opt:12s} sharded mesh={mesh_str:5s} "
+                  + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
+                  + ("  OK" if ok else "  FAIL"))
+            # Seeded determinism: the identical run must be bitwise equal.
+            p_s2, s_s2, m_s2 = _run("pallas_sharded", mesh, params, batches,
+                                    ch, ad, fl, args.rounds)
+            for x, y in zip(jax.tree.leaves((p_s, s_s)),
+                            jax.tree.leaves((p_s2, s_s2))):
+                if not np.array_equal(np.asarray(x), np.asarray(y)):
+                    print(f"{opt:12s} sharded mesh={mesh_str}: "
+                          "NONDETERMINISTIC rerun")
+                    failures += 1
+                    break
+
+    print("PARITY OK" if failures == 0 else f"PARITY FAIL ({failures})")
+    return 0 if failures == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

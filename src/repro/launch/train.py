@@ -57,9 +57,16 @@ def main() -> None:
     ap.add_argument("--optimizer", default="adam_ota",
                     choices=["adam_ota", "adagrad_ota", "amsgrad_ota",
                              "yogi_ota", "fedavgm", "fedavg"])
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"],
-                    help="round-step backend: per-leaf jnp tree.map or the "
-                         "fused Pallas slab engine (2 kernel launches/round)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=["jnp", "pallas", "pallas_sharded"],
+                    help="round-step backend: per-leaf jnp tree.map, the "
+                         "fused Pallas slab engine (2 kernel launches/"
+                         "round), or the mesh-distributed slab engine "
+                         "(2 launches per DEVICE + cross-client psum)")
+    ap.add_argument("--mesh", default=None,
+                    help="client-mesh shape for --backend pallas_sharded, "
+                         "comma-separated (e.g. '2' or '4,2', default 2); "
+                         "the client count must be divisible by its product")
     ap.add_argument("--no-interpret", action="store_true",
                     help="compile the Pallas kernels (real TPU) instead of "
                          "interpret mode")
@@ -74,6 +81,27 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh is not None and args.backend != "pallas_sharded":
+        ap.error(f"--mesh only applies to --backend pallas_sharded "
+                 f"(got --backend {args.backend}); it would be silently "
+                 f"ignored on a single-device backend")
+    if args.backend == "pallas_sharded":
+        import math
+
+        from repro.launch.hostdev import force_host_devices
+        try:
+            mesh_shape = tuple(int(x) for x in (args.mesh or "2").split(","))
+            if not mesh_shape or any(s < 1 for s in mesh_shape):
+                raise ValueError
+        except ValueError:
+            ap.error(f"--mesh must be comma-separated positive ints "
+                     f"(e.g. '2' or '4,2'), got {args.mesh!r}")
+        # A CPU host exposes one device; force enough host devices for
+        # the mesh BEFORE jax initialises its backend (first jax array
+        # op locks the count).
+        force_host_devices(math.prod(mesh_shape))
 
     cfg = preset_config(args.arch, args.preset)
     model = build_model(cfg)
@@ -105,8 +133,13 @@ def main() -> None:
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
                         alpha=args.alpha, beta2=0.3, backend=args.backend,
                         interpret=interpret)
+    if args.backend == "pallas_sharded":
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(mesh_shape)
+        print(f"client mesh {dict(mesh.shape)} "
+              f"({len(jax.devices())} devices visible)")
     rs = make_round_step(lambda p, b: model.loss_fn(p, b), ch, ad,
-                         FLConfig(n_clients=args.clients))
+                         FLConfig(n_clients=args.clients), mesh=mesh)
     params = model.init(jax.random.key(args.seed))
     state = init_server(params, ad)
 
@@ -142,8 +175,12 @@ def main() -> None:
                     exist_ok=True)
         with open(args.history_out, "w") as f:
             json.dump(history, f)
-    print(f"done: final loss {history[-1]['loss']:.4f} "
-          f"(started {history[0]['loss']:.4f})")
+    if history:
+        print(f"done: final loss {history[-1]['loss']:.4f} "
+              f"(started {history[0]['loss']:.4f})")
+    else:
+        print(f"done: nothing to do (resumed at round {start_round} "
+              f">= --rounds {args.rounds})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""Benchmark-harness smoke: ``benchmarks/run.py --quick`` must run and
+write schema-valid JSON under ``--out`` — so the bench harness (and the
+BENCH_round_step.json perf trajectory, now including the sharded
+backend) cannot silently rot.
+
+Scoped to ``--only round_step``: that is the artifact tracked across
+PRs; the paper-figure benches are exercised by their own test modules.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+ROUND_STEP_REQUIRED_KEYS = {"name", "backend", "n_params", "n_clients",
+                            "us_per_round", "us_per_call", "hbm_bytes_est",
+                            "derived"}
+
+
+def test_quick_bench_writes_valid_round_step_json(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out_dir = str(tmp_path / "bench")
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--only", "round_step", "--out", out_dir],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=1200)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    # CSV header + one line per record on stdout
+    assert res.stdout.splitlines()[0] == "name,us_per_call,derived"
+
+    bench_path = os.path.join(out_dir, "BENCH_round_step.json")
+    assert os.path.exists(bench_path), os.listdir(out_dir)
+    with open(bench_path) as f:
+        records = json.load(f)
+    assert isinstance(records, list) and records
+
+    by_backend = {}
+    for rec in records:
+        assert "ERROR" not in rec["name"], rec
+        missing = ROUND_STEP_REQUIRED_KEYS - set(rec)
+        assert not missing, (rec["name"], missing)
+        assert rec["us_per_round"] > 0
+        assert rec["hbm_bytes_est"] > 0
+        by_backend.setdefault(rec["backend"], []).append(rec)
+    # jnp + pallas + the sharded column, >= 2 model sizes each
+    assert set(by_backend) == {"jnp", "pallas", "pallas_sharded"}
+    for backend, recs in by_backend.items():
+        sizes = {r["n_params"] for r in recs}
+        assert len(sizes) >= 2, (backend, sizes)
+    # the sharded records carry their mesh shape
+    assert all("mesh" in r for r in by_backend["pallas_sharded"])
+
+    # the quick run must NOT clobber the tracked repo-root artifact
+    # (it writes under --out instead) — guard the path logic.
+    with open(os.path.join(REPO_ROOT, "BENCH_round_step.json")) as f:
+        json.load(f)   # still valid JSON, untouched by this run

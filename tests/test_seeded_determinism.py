@@ -1,0 +1,48 @@
+"""Seeded-determinism regression: two ``launch.train`` runs with the
+same seed must produce bitwise-identical loss curves, on the jnp
+reference backend and the pallas slab engine alike.
+
+This guards the round's PRNG contract (all randomness flows from
+``fold_in(key(seed+1), round)``) — exactly the contract the sharded
+engine's per-shard keying rework must preserve (its own bitwise rerun
+check lives in repro.launch.shard_check). Runs are separate processes on
+purpose: determinism must hold across interpreter restarts, not just
+within one jitted session.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+TRAIN_ARGS = ["--preset", "tiny", "--rounds", "2", "--clients", "2",
+              "--batch", "1", "--seq", "16", "--seed", "3",
+              "--log-every", "1000"]
+
+
+def _train(backend: str, out_path: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--backend", backend,
+         "--history-out", out_path, *TRAIN_ARGS],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    with open(out_path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_same_seed_same_curve(backend, tmp_path):
+    h1 = _train(backend, str(tmp_path / "h1.json"))
+    h2 = _train(backend, str(tmp_path / "h2.json"))
+    assert len(h1) == len(h2) == 2
+    # bitwise: json round-trips repr(float64(float32)) exactly
+    for a, b in zip(h1, h2):
+        assert a["loss"] == b["loss"], (a, b)
+        assert a["grad_norm"] == b["grad_norm"], (a, b)

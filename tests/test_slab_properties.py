@@ -1,0 +1,151 @@
+"""Property-based pytree <-> slab contract tests.
+
+test_slab.py pins hand-picked shapes; this module generates random
+pytrees — mixed dtypes (incl. bf16/f16), empty (size-0) leaves,
+non-lane sizes, deep nesting — and asserts the three slab invariants on
+every draw:
+
+  1. round-trip identity: slab_to_tree(tree_to_slab(t)) == t (bitwise —
+     every supported dtype embeds exactly in f32),
+  2. zero tail: slab[spec.total:] == 0, for every shard-aligned padding,
+  3. norm equality: ||slab||_2 == sqrt(sum_leaf ||leaf||_2^2).
+
+Strategies draw only scalars (a structure seed + knobs) and the tree is
+built deterministically from them with ``random.Random`` — this keeps
+the tests meaningful under both real hypothesis and the deterministic
+stub in tests/_hypothesis_stub.py.
+"""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.slab import (LANE, make_slab_spec, slab_to_tree,
+                             stack_to_slab, tree_to_slab)
+
+_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+_DIMS = (0, 1, 2, 3, 5, 7, 33, 128, 130)
+
+
+def _random_leaf(rnd: random.Random):
+    ndim = rnd.randint(0, 3)
+    shape = tuple(rnd.choice(_DIMS) for _ in range(ndim))
+    dt = rnd.choice(_DTYPES)
+    n = int(np.prod(shape, dtype=np.int64))
+    vals = np.asarray([rnd.gauss(0.0, 3.0) for _ in range(n)], np.float32)
+    return jnp.asarray(vals.reshape(shape), dt)
+
+
+def _random_tree(rnd: random.Random, depth: int):
+    """Random nested dict/list/tuple structure with >= 1 leaf."""
+    if depth == 0 or rnd.random() < 0.35:
+        return _random_leaf(rnd)
+    kind = rnd.choice(("dict", "list", "tuple"))
+    n = rnd.randint(1, 3)
+    children = [_random_tree(rnd, depth - 1) for _ in range(n)]
+    if kind == "dict":
+        return {f"k{i}": c for i, c in enumerate(children)}
+    return children if kind == "list" else tuple(children)
+
+
+def _leaf_pairs(a, b):
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    return zip(jax.tree.leaves(a), jax.tree.leaves(b))
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(0, 4),
+       shards=st.sampled_from([1, 2, 4, 8]))
+def test_roundtrip_zero_tail_and_dtypes(seed, depth, shards):
+    tree = _random_tree(random.Random(seed), depth)
+    spec = make_slab_spec(tree, shards=shards)
+    slab = tree_to_slab(spec, tree)
+    # shard-aligned padding rule
+    assert slab.shape == (spec.padded,)
+    assert spec.padded % (LANE * shards) == 0
+    assert spec.shards == shards and spec.padded == spec.shard_len * shards
+    # zero tail (padding is a fixed point of every kernel mode)
+    if spec.padded > spec.total:
+        np.testing.assert_array_equal(np.asarray(slab[spec.total:]), 0.0)
+    # bitwise round-trip, original shapes and dtypes
+    back = slab_to_tree(spec, slab)
+    for orig, rec in _leaf_pairs(tree, back):
+        assert orig.shape == rec.shape and orig.dtype == rec.dtype
+        np.testing.assert_array_equal(np.asarray(orig, np.float32),
+                                      np.asarray(rec, np.float32))
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(0, 3))
+def test_norm_equality(seed, depth):
+    tree = _random_tree(random.Random(seed), depth)
+    spec = make_slab_spec(tree)
+    slab = tree_to_slab(spec, tree)
+    # f64 accumulation on both sides isolates the property under test
+    # (the zero tail adds nothing) from f32 summation-order noise.
+    tree_sq = sum(float(np.sum(np.square(np.asarray(l, np.float64))))
+                  for l in jax.tree.leaves(tree))
+    slab_sq = float(np.sum(np.square(np.asarray(slab, np.float64))))
+    np.testing.assert_allclose(slab_sq, tree_sq, rtol=1e-9, atol=1e-9)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), shards=st.sampled_from([2, 4, 8]))
+def test_shard_padding_preserves_real_entries(seed, shards):
+    """Specs built with different ``shards`` values must agree on every
+    real slab entry — only the zero tail grows (the per-shard PRNG
+    contract of repro.core.shard depends on this)."""
+    tree = _random_tree(random.Random(seed), 3)
+    spec1 = make_slab_spec(tree)
+    specp = make_slab_spec(tree, shards=shards)
+    assert spec1.total == specp.total
+    assert specp.padded >= spec1.padded
+    s1 = np.asarray(tree_to_slab(spec1, tree))
+    sp = np.asarray(tree_to_slab(specp, tree))
+    np.testing.assert_array_equal(s1[:spec1.total], sp[:spec1.total])
+    # the bigger padding round-trips identically
+    for orig, rec in _leaf_pairs(tree, slab_to_tree(specp,
+                                                    jnp.asarray(sp))):
+        np.testing.assert_array_equal(np.asarray(orig, np.float32),
+                                      np.asarray(rec, np.float32))
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+def test_stacked_rows_match_per_client_slabs(seed, n):
+    rnd = random.Random(seed)
+    base = _random_tree(rnd, 2)
+    spec = make_slab_spec(base)
+    stacked_tree = jax.tree.map(
+        lambda l: jnp.stack([l] * n) * jnp.arange(
+            1.0, n + 1.0, dtype=jnp.float32).reshape((n,) + (1,) * l.ndim
+                                                     ).astype(l.dtype),
+        base)
+    stacked = stack_to_slab(spec, stacked_tree)
+    assert stacked.shape == (n, spec.padded)
+    for c in range(n):
+        per_client = tree_to_slab(
+            spec, jax.tree.map(lambda l: l[c], stacked_tree))
+        np.testing.assert_array_equal(np.asarray(stacked[c]),
+                                      np.asarray(per_client))
+
+
+def test_all_empty_leaves_roundtrip():
+    """Size-0 leaves are legal; an all-empty tree makes a length-0 slab."""
+    tree = {"a": jnp.zeros((0,), jnp.float32),
+            "b": jnp.zeros((3, 0), jnp.bfloat16)}
+    spec = make_slab_spec(tree)
+    assert spec.total == 0 and spec.padded == 0
+    back = slab_to_tree(spec, tree_to_slab(spec, tree))
+    for orig, rec in _leaf_pairs(tree, back):
+        assert orig.shape == rec.shape and orig.dtype == rec.dtype
+
+
+def test_bad_shards_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        make_slab_spec({"w": jnp.ones(4)}, shards=0)

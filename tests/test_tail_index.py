@@ -1,0 +1,102 @@
+"""Statistical tests for the online tail-index estimators (Remark 3).
+
+The log-moment estimator is the one the adaptive optimizer would
+consume, so it gets tight recovery bounds across the whole alpha grid in
+(1, 2]; the Hill estimator is a cross-check that is only asymptotically
+unbiased for stable laws (the stable tail is Pareto only in the limit),
+so agreement is asserted where its bias is small (alpha <= 1.3) and its
+growing bias toward the Gaussian endpoint is itself pinned as expected
+behavior. Tolerances are calibrated for n = 200k samples: the
+log-moment error there is ~0.01, tested at 0.05.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channel import OTAChannelConfig, sample_alpha_stable
+from repro.core.tail_index import (estimate_from_gradient_residual,
+                                   hill_estimate, log_moment_estimate)
+
+N_SAMPLES = 200_000
+ALPHA_GRID = (1.2, 1.5, 1.8, 2.0)
+
+
+def _draw(alpha, seed=0, scale=0.7, n=N_SAMPLES):
+    return sample_alpha_stable(jax.random.key(seed), alpha, (n,), scale)
+
+
+@pytest.mark.parametrize("alpha", ALPHA_GRID)
+def test_log_moment_recovers_alpha(alpha):
+    a_hat, scale_hat = log_moment_estimate(_draw(alpha))
+    assert abs(float(a_hat) - alpha) < 0.05
+    np.testing.assert_allclose(float(scale_hat), 0.7, rtol=0.05)
+
+
+@pytest.mark.parametrize("alpha", (1.1, 1.2, 1.3))
+def test_hill_recovers_heavy_tails(alpha):
+    """Hill is near-unbiased only deep in the heavy-tail regime."""
+    a_hat = hill_estimate(_draw(alpha))
+    assert abs(float(a_hat) - alpha) < 0.2
+
+
+@pytest.mark.parametrize("alpha", (1.1, 1.2, 1.3))
+def test_estimators_agree_in_heavy_tail_regime(alpha):
+    x = _draw(alpha, seed=1)
+    a_lm, _ = log_moment_estimate(x)
+    a_h = hill_estimate(x)
+    assert abs(float(a_lm) - float(a_h)) < 0.15
+
+
+def test_hill_bias_grows_toward_gaussian():
+    """Known limitation, pinned: by alpha = 1.8 the Hill estimate
+    overshoots substantially (the stable tail is no longer Pareto at
+    reachable order statistics) — which is why the optimizer consumes
+    the log-moment estimate, not Hill."""
+    a_h = hill_estimate(_draw(1.8))
+    assert float(a_h) - 1.8 > 0.3
+
+
+def test_gaussian_endpoint_clips_to_two():
+    """alpha == 2 is exactly Gaussian; the estimator must saturate its
+    upper clip instead of wandering above 2."""
+    a_hat, _ = log_moment_estimate(_draw(2.0))
+    assert float(a_hat) == 2.0
+    # plain normal draws (the alpha=2 stable with scale 1/sqrt(2))
+    g = jax.random.normal(jax.random.key(3), (N_SAMPLES,))
+    a_g, _ = log_moment_estimate(g)
+    assert float(a_g) >= 1.95
+
+
+def test_clip_bounds_are_hard():
+    # var(log|x|) -> huge: alpha pegs at the lower clip
+    spread = jnp.asarray([1e-30, 1e30] * 64, jnp.float32)
+    a_lo, _ = log_moment_estimate(spread)
+    assert float(a_lo) == pytest.approx(1.01)
+    # var(log|x|) -> 0: alpha pegs at the upper clip
+    const = jnp.full((256,), 3.0, jnp.float32)
+    a_hi, _ = log_moment_estimate(const)
+    assert float(a_hi) == 2.0
+
+
+def test_residual_estimation_recovers_channel_alpha():
+    """Differencing a clean reference gradient against the OTA one
+    recovers the interference tail index (the deployment path)."""
+    cfg = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    g_clean = jax.random.normal(jax.random.key(4), (N_SAMPLES,)) * 0.0
+    xi = sample_alpha_stable(jax.random.key(5), cfg.alpha, (N_SAMPLES,),
+                             cfg.xi_scale)
+    a_hat, scale_hat = estimate_from_gradient_residual(g_clean, g_clean + xi)
+    assert abs(float(a_hat) - cfg.alpha) < 0.05
+    np.testing.assert_allclose(float(scale_hat), cfg.xi_scale, rtol=0.05)
+
+
+def test_estimators_are_jittable():
+    x = _draw(1.5, seed=6, n=4096)
+    a_jit, _ = jax.jit(log_moment_estimate)(x)
+    a_ref, _ = log_moment_estimate(x)
+    np.testing.assert_allclose(float(a_jit), float(a_ref), rtol=1e-6)
+    h_jit = jax.jit(hill_estimate)(x)
+    np.testing.assert_allclose(float(h_jit), float(hill_estimate(x)),
+                               rtol=1e-6)

@@ -27,30 +27,41 @@ def _csv(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
-def _sharded_round_step_records(sizes, iters: int) -> list:
-    """The pallas_sharded column, from a subprocess: the sharded engine
-    needs a multi-device mesh, and this process must keep jax's real
-    single-device view (jax locks the device count at first backend
-    init), so benchmarks/shard_bench.py forces host devices in its own
-    interpreter and ships records back as JSON."""
+def _bench_subprocess(module: str, argv: list) -> list:
+    """Run a bench module in a subprocess and parse its JSON records.
+
+    The multi-device benches (shard_bench, train_loop_bench) need forced
+    host devices, and this process must keep jax's real single-device
+    view (jax locks the device count at first backend init) — so they
+    force the override in their own interpreter and ship records back
+    as JSON on stdout."""
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     out = subprocess.run(
-        [sys.executable, "-m", "benchmarks.shard_bench",
-         "--sizes", *[str(s) for s in sizes], "--iters", str(iters)],
+        [sys.executable, "-m", module, *argv],
         capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=1800)
     if out.returncode != 0:
-        raise RuntimeError(f"shard_bench failed: {out.stderr[-500:]}")
+        raise RuntimeError(f"{module} failed: {out.stderr[-500:]}")
     return json.loads(out.stdout)
+
+
+def _write_bench_json(filename: str, records: list, quick: bool,
+                      out_dir: str) -> None:
+    """Tracked artifacts live at the repo root; a --quick run is
+    reduced-fidelity, so it writes under ``out_dir`` instead of
+    clobbering them."""
+    for r in records:
+        _csv(r["name"], r["us_per_round"], r["derived"])
+    dest = out_dir if quick else REPO_ROOT
+    with open(os.path.join(dest, filename), "w") as f:
+        json.dump(records, f, indent=2)
 
 
 def run_round_step_bench(quick: bool, out_dir: str) -> list:
     """Full-round benchmark, jnp vs pallas-slab vs mesh-sharded slab, on
     >= 2 model sizes; the records land in BENCH_round_step.json at the
-    repo root so the perf trajectory is tracked across PRs. A --quick
-    run is reduced-fidelity (fewer sizes/iters), so it writes under
-    ``out_dir`` instead of clobbering the tracked artifact."""
+    repo root so the perf trajectory is tracked across PRs."""
     sizes = (1 << 14, 1 << 16) if quick else (1 << 14, 1 << 16, 1 << 18)
     iters = 2 if quick else 5
     records = []
@@ -59,12 +70,27 @@ def run_round_step_bench(quick: bool, out_dir: str) -> list:
     # No stub record on failure: a full run would clobber the tracked
     # repo-root artifact with it, and a quick run would exit 0 under CI;
     # main() turns the raise into a round_step:ERROR line + exit 1.
-    records.extend(_sharded_round_step_records(sizes, iters))
-    for r in records:
-        _csv(r["name"], r["us_per_round"], r["derived"])
-    dest = out_dir if quick else REPO_ROOT
-    with open(os.path.join(dest, "BENCH_round_step.json"), "w") as f:
-        json.dump(records, f, indent=2)
+    records.extend(_bench_subprocess(
+        "benchmarks.shard_bench",
+        ["--sizes", *[str(s) for s in sizes], "--iters", str(iters)]))
+    _write_bench_json("BENCH_round_step.json", records, quick, out_dir)
+    return records
+
+
+def run_train_loop_bench(quick: bool, out_dir: str) -> list:
+    """Multi-round loop benchmark: the slab-RESIDENT engine (scan over a
+    SlabTrainState) vs the per-round pytree API, single-device and on a
+    (2,)-mesh, with rounds/sec and per-round bytes-moved estimates. The
+    records land in BENCH_train_loop.json at the repo root (the sibling
+    of BENCH_round_step.json)."""
+    sizes = (1 << 14,) if quick else (1 << 14, 1 << 16)
+    rounds = 4 if quick else 8
+    iters = 1 if quick else 2
+    records = _bench_subprocess(
+        "benchmarks.train_loop_bench",
+        ["--sizes", *[str(s) for s in sizes], "--rounds", str(rounds),
+         "--iters", str(iters)])
+    _write_bench_json("BENCH_train_loop.json", records, quick, out_dir)
     return records
 
 
@@ -114,6 +140,14 @@ def main() -> None:
                                                              args.out)
         except Exception as e:  # noqa: BLE001
             _csv("round_step:ERROR", 0.0, repr(e)[:80])
+            failed = True
+
+    if not args.only or args.only == "train_loop":
+        try:
+            all_records["train_loop"] = run_train_loop_bench(args.quick,
+                                                             args.out)
+        except Exception as e:  # noqa: BLE001
+            _csv("train_loop:ERROR", 0.0, repr(e)[:80])
             failed = True
 
     # Roofline summary (if dry-run artifacts exist).

@@ -10,8 +10,11 @@ Like the other pallas numbers on this CPU container, the wall time
 measures interpret mode; the hardware-relevant column is the per-device
 bytes model: each of P devices streams its N/P client rows once for the
 MAC, does the 7-transfer fused update on its d/P slab slice, and pays
-~2 slab transfers of psum traffic (ring all-reduce) for the
-superposition + regather.
+ring-collective traffic for the model broadcast (all_gather), the MAC
+reduce-scatter, and — this being the pytree-per-round API — the
+boundary materialisation of params + state each call (the resident
+loop in BENCH_train_loop.json drops that last term; see
+benchmarks/train_loop_bench.py for the side-by-side).
 
     PYTHONPATH=src python -m benchmarks.shard_bench --sizes 16384 65536
 """
@@ -57,13 +60,15 @@ def bench_sharded_round_step(n_params: int, n_clients: int = 8,
     n_dev = 1
     for s in mesh_shape:
         n_dev *= s
-    # Per-device f32 words: MAC reads (N/P + 2)d, update moves 7 d/P,
-    # psum ring traffic ~2d (superposition) + ~2d/P * k (regather,
-    # k = 3 rows for adam_ota: delta, nu, params).
-    k_rows = 3
+    # Per-device f32 words: MAC reads (N/P + 2)d, update moves 7 d/P;
+    # collectives: d (all_gather model broadcast) + 2d (reduce-scatter
+    # of [g, clean]) + (k+1)d boundary materialisation of the k state
+    # slabs + params this pytree-per-round API pays each call (k = 2
+    # for adam_ota: delta, nu).
+    k_rows = 2
     bytes_dev = 4 * (n_params * (n_clients // n_dev + 2)
-                     + 7 * n_params // n_dev + 2 * n_params
-                     + 2 * k_rows * n_params // n_dev)
+                     + 7 * n_params // n_dev
+                     + (1 + 2 + (k_rows + 1)) * n_params)
     shape_tag = "x".join(str(s) for s in mesh_shape)
     return dict(
         name=f"round_step_pallas_sharded_{n_params}",

@@ -1,0 +1,168 @@
+"""Multi-round train-loop benchmark: slab-RESIDENT vs per-round pytree
+loop (separate process on purpose — the sharded variants need forced
+host devices, and jax locks the device count at first backend init; see
+benchmarks/shard_bench.py).
+
+Times R full ADOTA rounds through four loop structures:
+
+* ``pallas / resident``   — ``make_slab_round_runner``: one
+  ``jax.lax.scan`` over the ``SlabTrainState``; zero pack/unpack in
+  steady state.
+* ``pallas / perround``   — ``make_round_step`` Python loop: packs
+  params + k optimizer slabs and unpacks them again EVERY round.
+* ``pallas_sharded / resident`` — scan inside ``shard_map``; each
+  device carries only its slab slices; collectives are one
+  ``all_gather`` (model broadcast) + one ``psum_scatter`` (MAC) per
+  round.
+* ``pallas_sharded / perround`` — the pytree-per-round API (PR-2
+  style): full psums + a full-model materialisation at every call
+  boundary.
+
+Wall time on this CPU container measures Pallas interpret mode (the
+Python kernel loop), so the hardware-relevant columns are the derived
+bytes models, per device and per round (f32 words x 4; ring-collective
+cost ~= payload for reduce-scatter/all-gather, 2x for all-reduce):
+
+    comms resident : d (gather w) + 2d (reduce-scatter of [g, clean])
+                     = 3d
+    comms perround : resident + (k+1)d boundary materialisation of the
+                     k state slabs + params the pytree API gathers
+                     every call = 6d for adam (k = 2)
+    hbm   resident : MAC (N/P + 2)d + fused update 7(d/P) (4 reads +
+                     3 writes, same model as shard_bench) + d unflatten
+    hbm   perround : resident + 2(k+1)d boundary pack/unpack traffic
+
+So for adam the shipped per-round pytree loop moves 2x the collective
+bytes and ~1.5x the HBM bytes of the resident loop. (The PR-2
+implementation this PR deleted — full psum of [g, clean] plus a
+masked-psum regather of every row — moved 2*2d + 2(k+1)d = 10d words,
+3.3x the resident loop; it no longer exists to time.)
+
+    PYTHONPATH=src python -m benchmarks.train_loop_bench --sizes 16384
+"""
+
+import sys
+
+from repro.launch.hostdev import (force_host_devices, mesh_device_count,
+                                  positive_int)
+
+force_host_devices(mesh_device_count(sys.argv, "--mesh"))
+
+import argparse
+import json
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
+                resident: bool) -> dict:
+    """Per-device, per-round f32 traffic models (bytes).
+
+    ``state_rows`` is the optimizer-slab count (2 for adam: delta, nu);
+    the per-round pytree API regathers/repacks those plus the params row.
+    """
+    d, p = n_params, n_dev
+    boundary_rows = state_rows + 1
+    if resident:
+        comms = (d + 2 * d) if p > 1 else 0
+        hbm = d * (n_clients // p + 2) + 7 * d // p + d
+    else:
+        comms = (d + 2 * d + boundary_rows * d) if p > 1 else 0
+        hbm = (d * (n_clients // p + 2) + 7 * d // p + d
+               + 2 * boundary_rows * d)
+    return {"comms_bytes_per_round": 4 * comms,
+            "hbm_bytes_est": 4 * hbm}
+
+
+def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
+                     mesh_shape=(2,), iters: int = 2) -> list:
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.kernel_bench import _round_step_case
+    from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                            init_server, init_train_state,
+                            make_round_step, make_slab_round_runner)
+    from repro.launch.mesh import make_client_mesh
+
+    params, loss_fn, batches = _round_step_case(n_params, n_clients)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
+    fl = FLConfig(n_clients=n_clients)
+    k_rows = 2   # adam: delta, nu
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(2), t)
+                      for t in range(rounds)])
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * rounds), batches)
+    n_dev = 1
+    for s in mesh_shape:
+        n_dev *= s
+    records = []
+
+    def record(name, backend, variant, us_total, p):
+        us_round = us_total / rounds
+        byt = _loop_bytes(n_params, n_clients, p, k_rows,
+                          variant == "resident")
+        records.append(dict(
+            name=name, backend=backend, variant=variant, n_params=n_params,
+            n_clients=n_clients, rounds=rounds,
+            mesh="x".join(str(s) for s in mesh_shape) if p > 1 else "1",
+            us_per_round=us_round, us_per_call=us_round,
+            rounds_per_sec=1e6 / us_round, **byt,
+            derived=(f"rounds_per_sec={1e6 / us_round:.2f};"
+                     f"comms_bytes={byt['comms_bytes_per_round']};"
+                     f"hbm_bytes={byt['hbm_bytes_est']}")))
+
+    def timeit(fn):
+        jax.block_until_ready(fn())          # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6
+
+    for backend, mesh, p in (("pallas", None, 1),
+                             ("pallas_sharded", make_client_mesh(mesh_shape),
+                              n_dev)):
+        # resident: R rounds, one scanned dispatch, state stays slabs
+        run = make_slab_round_runner(loss_fn, ch, ad, fl, backend=backend,
+                                     mesh=mesh)
+        st0 = init_train_state(ad, params, shards=p)
+        us = timeit(lambda: run(st0, keys, stacked))
+        record(f"train_loop_{backend}_resident_{n_params}", backend,
+               "resident", us, p)
+
+        # per-round pytree API: pack/convert at every round boundary
+        rs = make_round_step(loss_fn, ch, ad, fl, backend=backend, mesh=mesh)
+        s0 = init_server(params, ad)
+
+        def loop(rs=rs, s0=s0):
+            prm, s = params, s0
+            for t in range(rounds):
+                prm, s, m = rs(prm, s, keys[t], batches)
+            return prm, s, m
+
+        us = timeit(loop)
+        record(f"train_loop_{backend}_perround_{n_params}", backend,
+               "perround", us, p)
+    return records
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[1 << 14])
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=positive_int, default=8)
+    ap.add_argument("--mesh", default="2")
+    ap.add_argument("--iters", type=positive_int, default=2)
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+    records = []
+    for n in args.sizes:
+        records.extend(bench_train_loop(n, args.clients, args.rounds,
+                                        mesh_shape, args.iters))
+    json.dump(records, sys.stdout)
+
+
+if __name__ == "__main__":
+    main()

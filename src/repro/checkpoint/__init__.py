@@ -1,16 +1,25 @@
-"""Pytree checkpointing (npz-based, dependency-free).
+"""Pytree + slab-state checkpointing (npz-based, dependency-free).
 
-Saves/restores {params, server optimizer state, round counter, rng key}
-so long federated runs resume exactly. Leaves are flattened to
-path-keyed arrays in one compressed .npz; pytree structure is rebuilt
-from the stored key paths on load (against a template tree).
+Two formats share one atomic-write core:
+
+* ``save``/``load`` — generic pytrees ({params, server optimizer state,
+  round counter, rng key}), leaves flattened to path-keyed arrays in one
+  compressed .npz, structure rebuilt from the stored key paths on load
+  (against a template tree).
+* ``save_slab_state``/``load_slab_state`` — the slab-resident
+  ``SlabTrainState`` (PR 3): the raw slabs are stored as-is (no
+  pytree unpack — checkpointing is a boundary, but it is a *slab*
+  boundary) together with a JSON fingerprint of the ``SlabSpec``
+  layout, which ``load_slab_state`` verifies against the caller's spec
+  so a resume can never silently re-pack into a drifted layout.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import tempfile
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,19 +45,23 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return out
 
 
-def save(path: str, tree: PyTree) -> None:
-    """Atomic save: write to a temp file in the same dir, then rename."""
+def _atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    """Write to a temp file in the same dir, then rename (atomic)."""
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    flat = _flatten(tree)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
                                suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez_compressed(f, **flat)
+            np.savez_compressed(f, **arrays)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def save(path: str, tree: PyTree) -> None:
+    """Atomic save of a generic pytree."""
+    _atomic_savez(path, _flatten(tree))
 
 
 def load(path: str, template: PyTree) -> PyTree:
@@ -73,6 +86,50 @@ def load(path: str, template: PyTree) -> PyTree:
         leaves.append(arr)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(template), leaves)
+
+
+def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None
+                    ) -> None:
+    """Atomic save of a ``SlabTrainState`` (slabs stored raw, no unpack).
+
+    The layout fingerprint (``slab_state.spec_meta``) rides along so
+    ``load_slab_state`` can verify the resuming process rebuilds the
+    SAME layout. ``extra`` adds named arrays (e.g. an rng key) under an
+    ``x_`` prefix.
+    """
+    from repro.core.slab_state import spec_meta
+    arrays = {"step": np.asarray(state.step), "w": np.asarray(state.w),
+              "spec_meta": np.asarray(json.dumps(spec_meta(state.spec)))}
+    for i, slab in enumerate(state.opt):
+        arrays[f"opt_{i}"] = np.asarray(slab)
+    arrays["n_opt"] = np.asarray(len(state.opt))
+    for k, v in (extra or {}).items():
+        arrays[f"x_{k}"] = np.asarray(v)
+    _atomic_savez(path, arrays)
+
+
+def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
+    """Restore a ``SlabTrainState`` laid out by ``spec``.
+
+    Raises if ``spec`` does not reproduce the checkpointed layout
+    (shapes/dtypes/offsets/padding/shards) — resuming into a drifted
+    layout would silently scramble the slabs. Returns
+    ``(state, extra)`` with ``extra`` the ``x_``-prefixed arrays given
+    at save time.
+    """
+    from repro.core.slab_state import SlabTrainState, check_spec_meta
+    with np.load(path) as data:
+        stored = {k: data[k] for k in data.files}
+    check_spec_meta(spec, json.loads(str(stored["spec_meta"])), where=path)
+    n_opt = int(stored["n_opt"])
+    state = SlabTrainState(
+        step=jnp.asarray(stored["step"], jnp.int32),
+        w=jnp.asarray(stored["w"], jnp.float32),
+        opt=tuple(jnp.asarray(stored[f"opt_{i}"], jnp.float32)
+                  for i in range(n_opt)),
+        spec=spec)
+    extra = {k[2:]: v for k, v in stored.items() if k.startswith("x_")}
+    return state, extra
 
 
 def latest_round(ckpt_dir: str, prefix: str = "round_") -> Optional[str]:

@@ -7,14 +7,18 @@ from repro.core.adaptive import (AdaptiveConfig, ServerOptimizer, ServerOptState
 from repro.core.channel import (OTAChannelConfig, cms_inputs, cms_transform,
                                 sample_alpha_stable, sample_fading,
                                 sample_interference, upsilon)
-from repro.core.fl import (FLConfig, RoundMetrics, init_server, make_round_step,
-                           make_sharded_round_step, run_rounds)
+from repro.core.fl import (FLConfig, RoundMetrics, init_server,
+                           make_round_step, make_sharded_round_step,
+                           make_slab_round_runner, make_slab_round_step,
+                           run_rounds, run_rounds_slab)
 from repro.core.ota import (add_interference, faded_loss_weights,
                             ota_aggregate_slab, ota_aggregate_stacked, ota_psum)
 from repro.core.shard import (client_axes_of, n_client_shards,
                               shard_round_step)
 from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
                              stack_to_slab, tree_to_slab, zeros_slab)
+from repro.core.slab_state import (SlabTrainState, init_train_state,
+                                   pack_train_state, unpack_train_state)
 from repro.core.tail_index import hill_estimate, log_moment_estimate
 
 __all__ = [
@@ -28,5 +32,7 @@ __all__ = [
     "ota_aggregate_stacked", "ota_psum", "SlabSpec", "make_slab_spec",
     "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",
     "hill_estimate", "log_moment_estimate", "client_axes_of",
-    "n_client_shards", "shard_round_step",
+    "n_client_shards", "shard_round_step", "SlabTrainState",
+    "init_train_state", "pack_train_state", "unpack_train_state",
+    "make_slab_round_step", "make_slab_round_runner", "run_rounds_slab",
 ]

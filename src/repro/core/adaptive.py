@@ -293,7 +293,13 @@ def pack_state_slabs(cfg: AdaptiveConfig, spec: SlabSpec,
                      state: ServerOptState) -> Tuple[jax.Array, ...]:
     """Flatten the optimizer state into f32 slabs, ``state_slab_rows``
     order. The slabs share ``spec``'s layout (and hence its shard-aligned
-    padding), so the sharded engine can slice them per device."""
+    padding), so the sharded engine can slice them per device.
+
+    Since the slab-resident loop (``repro.core.slab_state``) this is an
+    init/boundary-only conversion: the multi-round hot path keeps the
+    slabs resident and never re-packs between rounds; only the
+    pytree-per-round API (``apply_slab_update``) still calls it each
+    round."""
     rows = state_slab_rows(cfg)
     amsgrad = "vmax" in rows     # nu is {"v": tree, "vmax": tree} then
     out = []
@@ -313,7 +319,10 @@ def unpack_state_slabs(cfg: AdaptiveConfig, spec: SlabSpec,
                        slabs: Tuple[jax.Array, ...]) -> ServerOptState:
     """Inverse of ``pack_state_slabs``: restore the state pytrees (f32,
     ``cast=False``) and bump the round counter. Modes that carry no
-    delta/nu keep the previous (placeholder) values."""
+    delta/nu keep the previous (placeholder) values. Boundary-only, like
+    ``pack_state_slabs`` (the resident loop uses
+    ``slab_state.unpack_train_state`` at eval/checkpoint boundaries
+    instead)."""
     rows = state_slab_rows(cfg)
     named = dict(zip(rows, slabs))
     delta = (slab_to_tree(spec, named["delta"], cast=False)

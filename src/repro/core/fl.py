@@ -29,6 +29,17 @@ the OTA superposition is a real cross-client ``psum``.
 ``make_sharded_round_step`` is the older per-leaf distributed twin:
 clients map onto (pod, data) shard groups and step 2 becomes the
 ``ota_psum`` collective inside ``shard_map``.
+
+**Slab-resident variants** (the multi-round hot path since PR 3):
+``make_slab_round_step`` / ``make_slab_round_runner`` keep the training
+state as a ``SlabTrainState`` — params slab + optimizer-state slabs —
+ACROSS rounds, materialising pytrees only at boundaries (init, eval,
+checkpoint). The runner drives R rounds as one ``jax.lax.scan`` over
+the resident state (under a mesh: scan inside ``shard_map``, each
+device carrying only its slab slices — no full-model regather in the
+scanned body). ``run_rounds_slab`` is the host driver twin of
+``run_rounds`` with identical PRNG keying, so both drivers produce the
+same trajectory from the same key.
 """
 
 from __future__ import annotations
@@ -43,7 +54,9 @@ from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
                                  apply_slab_update, make_server_optimizer)
 from repro.core.channel import OTAChannelConfig
 from repro.core.ota import ota_aggregate_slab, ota_aggregate_stacked, ota_psum
-from repro.core.slab import make_slab_spec
+from repro.core.slab import make_slab_spec, slab_to_tree, tree_to_slab
+from repro.core.slab_state import (SlabTrainState, pack_train_state,
+                                   unpack_train_state)
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]   # (params, batch) -> scalar
@@ -66,6 +79,14 @@ class RoundMetrics(NamedTuple):
 def _tree_l2(t: PyTree) -> jax.Array:
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                         for x in jax.tree.leaves(t)))
+
+
+def _log_round(log, t: int, rec: dict) -> None:
+    """One history record, formatted identically by both drivers."""
+    log(f"round {t+1:5d}  loss {rec['loss']:.4f}  "
+        f"|g| {rec['grad_norm']:.3e}  |g_t| {rec['noisy_grad_norm']:.3e}"
+        + (f"  acc {rec.get('accuracy', float('nan')):.4f}"
+           if 'accuracy' in rec else ""))
 
 
 def _client_update(loss_fn: LossFn, fl_cfg: FLConfig
@@ -191,6 +212,198 @@ def init_server(params: PyTree, adaptive_cfg: AdaptiveConfig) -> ServerOptState:
     return make_server_optimizer(adaptive_cfg).init(params)
 
 
+# ---------------------------------------------------------------------------
+# Slab-resident variants: state stays a SlabTrainState across rounds.
+# ---------------------------------------------------------------------------
+
+def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
+                         adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
+                         jit: bool = True, backend: Optional[str] = None,
+                         mesh=None):
+    """Slab-state twin of ``make_round_step``.
+
+    Returns ``step(state, key, client_batches) -> (state, metrics)``
+    where ``state`` is a ``SlabTrainState`` (see
+    ``repro.core.slab_state``). Per round the only pytree materialised
+    is the parameter view the clients consume (the server's model
+    broadcast); optimizer state never leaves slab form. Backends:
+
+    * ``"pallas"`` — resident single-device slab engine: two fused
+      kernel launches per round, zero pack/unpack passes in steady
+      state (vs 2 full packs + 2k slab round-trips for the pytree API).
+    * ``"pallas_sharded"`` (requires ``mesh=``) — each device keeps only
+      its slab slices; see ``repro.core.shard.make_shard_slab_step``.
+    * ``"jnp"`` — reference: materialises pytrees each round and runs
+      the per-leaf update (boundary conversion per round — the parity
+      oracle, not a fast path).
+
+    All backends consume identical PRNG draws, so their multi-round
+    trajectories agree to f32 rounding.
+    """
+    backend, channel_cfg, adaptive_cfg = _resolve_backend(
+        backend, channel_cfg, adaptive_cfg)
+    if backend == "pallas_sharded":
+        from repro.core.shard import make_shard_slab_step
+        if mesh is None:
+            raise ValueError('backend="pallas_sharded" needs a mesh; pass '
+                             'make_slab_round_step(..., mesh=...)')
+        return make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg,
+                                    fl_cfg, mesh, jit=jit)
+    if mesh is not None:
+        raise ValueError(
+            f'mesh= was given but the resolved backend is "{backend}", '
+            'which runs single-device and would silently ignore it; use '
+            'backend="pallas_sharded" for distributed rounds')
+    if backend == "jnp":
+        inner = make_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                jit=False, backend="jnp")
+
+        def step(state: SlabTrainState, key, client_batches):
+            params, opt_state = unpack_train_state(adaptive_cfg, state)
+            p, s, m = inner(params, opt_state, key, client_batches)
+            return pack_train_state(adaptive_cfg, state.spec, p, s), m
+
+        return jax.jit(step) if jit else step
+
+    from repro.core.adaptive import slab_update_slabs
+    client_fn = _client_update(loss_fn, fl_cfg)
+
+    def step(state: SlabTrainState, key, client_batches):
+        spec = state.spec
+        # Model broadcast: the one pytree the round materialises (the
+        # clients' loss_fn consumes pytrees; original leaf dtypes).
+        params = slab_to_tree(spec, state.w)
+        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
+                                                               client_batches)
+        # Kernel launch 1: fused fading reduction + interference.
+        g_slab, h, grads_slab = ota_aggregate_slab(key, channel_cfg, grads,
+                                                   spec)
+        w_in = state.w
+        if any(dt != jnp.float32 for dt in spec.dtypes):
+            # Non-f32 leaves round-trip through their storage dtype each
+            # round on the pytree backends; mirror that for parity.
+            w_in = tree_to_slab(spec, params)
+        # Kernel launch 2: fused server update on the RESIDENT slabs.
+        new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slab, state.opt,
+                                           w_in)
+        metrics = RoundMetrics(
+            loss=jnp.mean(losses),
+            grad_norm=jnp.sqrt(jnp.sum(jnp.square(
+                jnp.mean(grads_slab, axis=0)))),
+            noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
+            fading_mean=jnp.mean(h),
+        )
+        return SlabTrainState(state.step + 1, w_new, new_opt, spec), metrics
+
+    return jax.jit(step) if jit else step
+
+
+def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
+                           adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
+                           jit: bool = True, backend: Optional[str] = None,
+                           mesh=None):
+    """R rounds as ONE ``jax.lax.scan`` over the resident state.
+
+    Returns ``run(state, keys, client_batches) -> (state, metrics)``
+    with ``keys`` a (R,) key array and ``client_batches`` leaves shaped
+    (R, N, ...); metrics come back stacked (R,). Under
+    ``backend="pallas_sharded"`` the scan runs *inside* ``shard_map``
+    (each device scans over its resident slices — no per-round dispatch,
+    no full-model regather anywhere in the scanned body).
+    """
+    backend, channel_cfg, adaptive_cfg = _resolve_backend(
+        backend, channel_cfg, adaptive_cfg)
+    if backend == "pallas_sharded":
+        from repro.core.shard import make_shard_slab_runner
+        if mesh is None:
+            raise ValueError('backend="pallas_sharded" needs a mesh; pass '
+                             'make_slab_round_runner(..., mesh=...)')
+        return make_shard_slab_runner(loss_fn, channel_cfg, adaptive_cfg,
+                                      fl_cfg, mesh, jit=jit)
+    step = make_slab_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                jit=False, backend=backend, mesh=mesh)
+
+    def run(state: SlabTrainState, keys, client_batches):
+        def scanned(s, xs):
+            key, batch = xs
+            return step(s, key, batch)
+
+        return jax.lax.scan(scanned, state, (keys, client_batches))
+
+    return jax.jit(run) if jit else run
+
+
+def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
+                    n_rounds: int, chunk: int = 8,
+                    adaptive_cfg: Optional[AdaptiveConfig] = None,
+                    eval_fn: Optional[Callable] = None, eval_every: int = 0,
+                    log_every: int = 0, log=print,
+                    key_fn: Optional[Callable] = None, start_round: int = 0,
+                    chunk_hook: Optional[Callable] = None,
+                    align: Tuple[int, ...] = ()):
+    """Slab-resident twin of ``run_rounds`` (host driver).
+
+    ``run_chunk`` comes from ``make_slab_round_runner``. Rounds are
+    dispatched in chunks of up to ``chunk`` (one scanned device program
+    per chunk); by default the per-round PRNG keying is IDENTICAL to
+    ``run_rounds`` — ``key, k_round, k_data = split(key, 3)`` per round,
+    ``batch_fn(t, k_data)`` feeding host-side — so both drivers produce
+    the same trajectory from the same key.
+
+    ``key_fn(t) -> round key`` replaces the sequential split with
+    keying by ABSOLUTE round index (``batch_fn`` then receives
+    ``k_data=None``) — required when resuming from ``start_round > 0``,
+    since round t's draws must not depend on how many rounds this
+    process ran. Eval (which needs pytree params) happens only at chunk
+    boundaries; chunks are clipped so every ``eval_every`` multiple —
+    and every multiple of each period in ``align`` — IS a boundary.
+    ``chunk_hook(t, state, history)`` runs after every chunk (e.g. for
+    checkpointing). Returns ``(state, history)``.
+    """
+    if eval_fn is not None and adaptive_cfg is None:
+        raise ValueError("eval_fn needs adaptive_cfg= to materialise params "
+                         "at eval boundaries")
+    if start_round and key_fn is None:
+        raise ValueError("start_round > 0 needs key_fn= (absolute-index "
+                         "keying); the sequential split would replay "
+                         "round-0 draws")
+    history = []
+    t = start_round
+    while t < n_rounds:
+        r = min(chunk, n_rounds - t)
+        for period in (eval_every, *align):
+            if period:
+                r = min(r, period - t % period)
+        ks, bs = [], []
+        for i in range(r):
+            if key_fn is not None:
+                k_round, k_data = key_fn(t + i), None
+            else:
+                key, k_round, k_data = jax.random.split(key, 3)
+            ks.append(k_round)
+            bs.append(batch_fn(t + i, k_data))
+        state, ms = run_chunk(state, jnp.stack(ks),
+                              jax.tree.map(lambda *xs: jnp.stack(xs), *bs))
+        loss = jax.device_get(ms.loss)
+        gn = jax.device_get(ms.grad_norm)
+        ngn = jax.device_get(ms.noisy_grad_norm)
+        for i in range(r):
+            history.append({"round": t + i, "loss": float(loss[i]),
+                            "grad_norm": float(gn[i]),
+                            "noisy_grad_norm": float(ngn[i])})
+        t += r
+        if eval_fn is not None and eval_every and t % eval_every == 0:
+            params, _ = unpack_train_state(adaptive_cfg, state)
+            history[-1].update(eval_fn(params))
+        if log_every:
+            for i in range(t - r, t):
+                if (i + 1) % log_every == 0:
+                    _log_round(log, i, history[i])
+        if chunk_hook is not None:
+            chunk_hook(t, state, history)
+    return state, history
+
+
 def make_sharded_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                             adaptive_cfg: AdaptiveConfig,
                             client_axes: Tuple[str, ...] = ("data",)):
@@ -233,8 +446,5 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
             rec.update(eval_fn(params))
         history.append(rec)
         if log_every and (t + 1) % log_every == 0:
-            log(f"round {t+1:5d}  loss {rec['loss']:.4f}  "
-                f"|g| {rec['grad_norm']:.3e}  |g_t| {rec['noisy_grad_norm']:.3e}"
-                + (f"  acc {rec.get('accuracy', float('nan')):.4f}"
-                   if 'accuracy' in rec else ""))
+            _log_round(log, t, rec)
     return params, opt_state, history

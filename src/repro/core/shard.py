@@ -2,28 +2,42 @@
 
 The paper's aggregation (Eq. 7) is a *physical superposition*: all N
 clients transmit simultaneously and the channel adds their signals.
-``shard_round_step`` maps that superposition onto a device mesh — the
-mesh IS the multiple-access channel:
+This module maps that superposition onto a device mesh — the mesh IS
+the multiple-access channel — and keeps the training state *resident*
+as sharded slabs across rounds (true ZeRO: each device permanently owns
+one contiguous ``spec.shard_len`` slice of the parameter slab and of
+every optimizer-state slab; optimizer state never moves between
+devices).
 
-1. The mesh's client-carrying axes (every axis except ``"model"``) are
-   split into P shard groups; each holds N/P clients and computes their
-   gradients locally (the client compute is embarrassingly parallel).
-2. Each device runs ONE fused ``ota_channel_slab`` launch over its local
-   client rows — the faded partial sum ``(1/N) sum_{n local} h_n G_n``
-   over the full slab width — and a cross-client ``psum`` completes the
-   MAC exactly like the over-the-air sum.
-3. The interference xi_t is added once, from the SAME per-leaf CMS draws
-   the single-device backends consume (see the PRNG contract below).
-4. Each device then owns one contiguous, lane-aligned slice of the slab
-   (the shard-aligned padding rule of ``make_slab_spec(..., shards=P)``)
-   and runs ONE fused ``adaptive_update_slab`` launch on its slice —
-   the server update is model-sharded, ZeRO-style. The updated slices
-   are regathered (masked psum) so params/state come back as full
-   pytrees, drop-in interchangeable with the other backends.
+Steady-state round, per device (``make_shard_slab_step`` /
+``make_shard_slab_runner``):
 
-**Per-shard PRNG keying contract.** Every random draw is made from the
-round key with the exact keying of the single-device path and then
-*sliced*, never re-keyed per shard:
+1. ``all_gather`` the parameter slices -> the full (padded,) slab, once
+   per round — the server's model *broadcast* to the clients (the only
+   full-model collective left in the loop; ~1 slab of ring traffic vs
+   the 2(k+1) slabs the PR-2 masked-psum regather moved).
+2. The device's N/P local clients compute gradients on the materialised
+   pytree; ONE fused ``ota_channel_slab`` launch forms the faded
+   partial sum ``(1/N) sum_{n local} h_n G_n`` over the full slab
+   width.
+3. ``psum_scatter`` completes the MAC *and* delivers each device only
+   its own slab slice of the superposition (half the ring traffic of
+   the full psum the PR-2 path used, and no full-width result anywhere).
+4. The CMS interference is synthesized per slab slice: the (u, e)
+   draws are made at full width from the SAME per-leaf keying as the
+   single-device backends (PRNG is compute, not communication), then
+   sliced, and the branch-free CMS transform runs on the slice only.
+5. ONE fused ``adaptive_update_slab`` launch updates the device's
+   resident w/Delta/nu slices in place. Nothing is regathered: the
+   next round starts from the slices.
+
+``RoundMetrics`` norms are computed from per-slice squared sums
+(``sqrt(psum(sum(slice**2)))``) — no full-width tensor is ever formed
+for a metric.
+
+**Per-shard PRNG keying contract** (unchanged from PR 2). Every random
+draw is made from the round key with the exact keying of the
+single-device path and then *sliced*, never re-keyed per shard:
 
 * fading: ``kh, kx = split(key)``; ``h = sample_fading(kh, cfg, (N,))``
   is the full draw on every shard; shard s uses rows
@@ -34,10 +48,19 @@ round key with the exact keying of the single-device path and then
   are independent of the padded length — specs built with different
   ``shards`` (hence different padding) agree on every real entry.
 
-Hence jnp, pallas and pallas_sharded consume literally the same noise,
-and differ only by float32 summation order (psum of P partial sums vs
-one in-kernel reduction) — parity holds to ~1e-7 relative, tested at
-1e-5 (tests/test_shard_roundstep.py, repro.launch.shard_check).
+Hence jnp, pallas and pallas_sharded consume literally the same noise
+and differ only by float32 summation order (reduce-scatter of P partial
+sums vs one in-kernel reduction) — multi-round trajectory parity holds
+to ~1e-7 relative, tested at 1e-5 over >= 5 rounds
+(tests/test_shard_roundstep.py, repro.launch.shard_check).
+
+``shard_round_step`` keeps the PR-2 pytree-in/pytree-out signature for
+drop-in use by ``make_round_step(backend="pallas_sharded")``: it packs
+at the call boundary, runs the resident body once, and materialises
+pytrees on the way out (an ``all_gather`` per call — inherent to a
+pytree-per-round API; the masked-psum regather is gone from the
+codebase). Multi-round loops should hold a ``SlabTrainState`` and use
+the step/runner instead.
 """
 
 from __future__ import annotations
@@ -50,13 +73,14 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
-                                 pack_state_slabs, slab_update_slabs,
-                                 unpack_state_slabs)
+from repro.core.adaptive import AdaptiveConfig, slab_update_slabs
 from repro.core.channel import OTAChannelConfig, cms_transform, sample_fading
 from repro.core.fl import FLConfig, RoundMetrics, _client_update
 from repro.core.ota import _cms_slab_inputs, linear_shard_index
-from repro.core.slab import make_slab_spec, slab_to_tree, stack_to_slab, tree_to_slab
+from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, \
+    stack_to_slab, tree_to_slab
+from repro.core.slab_state import (SlabTrainState, pack_train_state,
+                                   unpack_train_state)
 
 PyTree = Any
 
@@ -70,96 +94,222 @@ def n_client_shards(mesh) -> int:
     return math.prod(mesh.shape[a] for a in client_axes_of(mesh))
 
 
-def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
-                     adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig, mesh,
-                     jit: bool = True):
-    """Build the distributed twin of ``make_round_step(backend="pallas")``.
+def psum_scatter_slab(x: jax.Array, axes: Tuple[str, ...],
+                      dim: int = 0) -> jax.Array:
+    """Reduce-scatter over possibly-several mesh axes, row-major.
 
-    Returns ``round_step(params, opt_state, key, client_batches)`` with
-    the SAME signature and pytree in/out contract as the single-device
-    backends: ``client_batches`` leaves carry the global client axis N
-    up front and are sharded over the mesh's client axes by shard_map;
-    params/opt_state go in and come out as full (replicated) pytrees.
-
-    Per device and per round the body is exactly two fused Pallas
-    launches — ``ota_channel_slab`` over the device's local client rows
-    and ``adaptive_update_slab`` over its slab slice — plus two psums
-    (the MAC superposition and the slice regather).
+    Scattering axis by axis in ``axes`` order splits dimension ``dim``
+    into P = prod(axes sizes) blocks whose linear order matches
+    ``linear_shard_index(axes)`` (first axis major) — the same layout a
+    ``PartitionSpec(axes)`` on that dimension produces. Each device ends
+    with the fully-summed block at its own linear index: the MAC
+    superposition and the slice hand-off in one collective, moving about
+    half the ring traffic of a full ``psum``.
     """
+    for a in axes:
+        x = jax.lax.psum_scatter(x, a, scatter_dimension=dim, tiled=True)
+    return x
+
+
+def all_gather_slab(x: jax.Array, axes: Tuple[str, ...],
+                    dim: int = 0) -> jax.Array:
+    """Inverse of ``psum_scatter_slab``'s layout: concatenate the
+    per-device blocks back to full width (gather minor axis first)."""
+    for a in reversed(axes):
+        x = jax.lax.all_gather(x, a, axis=dim, tiled=True)
+    return x
+
+
+def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
+                     adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
+                     axes: Tuple[str, ...], n_shards: int, spec: SlabSpec):
+    """Per-device resident round: slices in, slices out (call inside
+    ``shard_map``). Exactly one ``ota_channel_slab`` and one
+    ``adaptive_update_slab`` launch per device, one ``all_gather`` (the
+    model broadcast) and one ``psum_scatter`` (the MAC) per round."""
+    n = fl_cfg.n_clients
+    n_local = n // n_shards
+    shard_len = spec.shard_len
+    client_fn = _client_update(loss_fn, fl_cfg)
+    has_cast = any(dt != jnp.float32 for dt in spec.dtypes)
+
+    def round_body(step, w_slice, opt_slices, key, local_batches):
+        idx = linear_shard_index(axes)
+        sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
+                                                    shard_len)
+
+        # --- 1. model broadcast: slices -> full slab -> pytree --------
+        w_full = all_gather_slab(w_slice, axes)
+        params = slab_to_tree(spec, w_full)
+
+        # --- 2. local client compute + fused partial MAC --------------
+        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
+                                                               local_batches)
+        kh, kx = jax.random.split(key)
+        h = sample_fading(kh, channel_cfg, (n,))
+        h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
+        g_stack = stack_to_slab(spec, grads)              # (n_local, padded)
+        from repro.kernels.ota_channel import ota_channel_slab
+        zeros = jnp.zeros((spec.padded,), jnp.float32)
+        partial = ota_channel_slab(
+            g_stack, h_loc, zeros, jnp.ones_like(zeros),
+            alpha=channel_cfg.alpha, scale=0.0, n_total=n,
+            interpret=channel_cfg.interpret)
+        clean_part = jnp.sum(g_stack, axis=0)
+
+        # --- 3. the superposition: reduce-scatter == MAC + slice ------
+        both = psum_scatter_slab(jnp.stack([partial, clean_part]), axes,
+                                 dim=1)                   # (2, shard_len)
+        g_slice, clean_slice = both[0], both[1]
+
+        # --- 4. interference, synthesized on this slice only ----------
+        if channel_cfg.interference:
+            # Full-width per-leaf draws (identical to the single-device
+            # backends — PRNG is compute, not comms), CMS transform on
+            # the slice; added once, post-reduce — the server's single
+            # RF front end.
+            u, e = _cms_slab_inputs(kx, spec)
+            g_slice = g_slice + channel_cfg.xi_scale * cms_transform(
+                sl(u), sl(e), channel_cfg.alpha)
+
+        # --- 5. fused server update on the RESIDENT slices ------------
+        if has_cast:
+            # Non-f32 leaves round-trip through their storage dtype each
+            # round on every other backend; mirror that here for parity.
+            w_slice = sl(tree_to_slab(spec, params))
+        new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slice, opt_slices,
+                                           w_slice)
+
+        # Norms from per-slice squared sums: no full-width regather.
+        metrics = RoundMetrics(
+            loss=jax.lax.pmean(jnp.mean(losses), axes),
+            grad_norm=jnp.sqrt(jax.lax.psum(
+                jnp.sum(jnp.square(clean_slice)), axes)) / n,
+            noisy_grad_norm=jnp.sqrt(jax.lax.psum(
+                jnp.sum(jnp.square(g_slice)), axes)),
+            fading_mean=jnp.mean(h),
+        )
+        return step + 1, w_new, new_opt, metrics
+
+    return round_body
+
+
+def _validate_mesh(fl_cfg: FLConfig, mesh) -> Tuple[Tuple[str, ...], int]:
     axes = client_axes_of(mesh)
     if not axes:
         raise ValueError("mesh has no client-carrying axes (all axes are "
-                         "'model'); shard_round_step needs at least one")
+                         "'model'); the sharded slab engine needs at least "
+                         "one")
     n_shards = n_client_shards(mesh)
     n = fl_cfg.n_clients
     if n % n_shards != 0:
         raise ValueError(
             f"n_clients={n} must be divisible by the mesh's client-shard "
             f"count {n_shards} (axes {axes} of mesh shape {dict(mesh.shape)})")
-    n_local = n // n_shards
-    client_fn = _client_update(loss_fn, fl_cfg)
+    return axes, n_shards
 
-    def body(params, opt_state: ServerOptState, key, local_batches):
-        # --- local client compute: N/P clients on this device ---------
-        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
-                                                               local_batches)
+
+def _check_spec_shards(spec: SlabSpec, n_shards: int) -> None:
+    if spec.shards != n_shards:
+        raise ValueError(
+            f"SlabTrainState was laid out for shards={spec.shards} but the "
+            f"mesh has {n_shards} client shards; build the state with "
+            f"init_train_state(..., shards={n_shards})")
+
+
+def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
+                         adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
+                         mesh, jit: bool = True):
+    """One resident round over ``mesh``: ``step(state, key, client_batches)
+    -> (state, metrics)`` where ``state`` is a ``SlabTrainState`` whose
+    slabs live sharded over the mesh's client axes (``P(axes)`` on dim 0
+    — globally they keep their full (padded,) shapes, so checkpoints and
+    boundary conversions are mesh-agnostic).
+
+    ``client_batches`` leaves carry the global client axis N up front.
+    No full-model regather happens: the round ends with the updated
+    slices in place.
+    """
+    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+
+    def step(state: SlabTrainState, key, client_batches):
+        _check_spec_shards(state.spec, n_shards)
+        body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                axes, n_shards, state.spec)
+        sharded = shard_map(
+            body, mesh,
+            in_specs=(P(), P(axes), P(axes), P(), P(axes)),
+            out_specs=(P(), P(axes), P(axes), P()))
+        new_step, w, opt, m = sharded(state.step, state.w, state.opt, key,
+                                      client_batches)
+        return SlabTrainState(new_step, w, tuple(opt), state.spec), m
+
+    return jax.jit(step) if jit else step
+
+
+def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
+                           adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
+                           mesh, jit: bool = True):
+    """R resident rounds as ONE ``jax.lax.scan`` inside ``shard_map``:
+    ``run(state, keys, client_batches) -> (state, metrics)`` with
+    ``keys`` a (R,) key array and ``client_batches`` leaves shaped
+    (R, N, ...). The scanned body is the same per-device resident round
+    as ``make_shard_slab_step`` — state slices are the carry, so the
+    whole R-round trajectory executes with zero full-model regathers and
+    zero host round trips; metrics come back stacked (R,).
+    """
+    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+
+    def run(state: SlabTrainState, keys, client_batches):
+        _check_spec_shards(state.spec, n_shards)
+        body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                axes, n_shards, state.spec)
+
+        def scan_rounds(step0, w_slice, opt_slices, keys, batches):
+            def scanned(carry, xs):
+                step, w, opt = carry
+                key, batch = xs
+                step, w, opt, m = body(step, w, opt, key, batch)
+                return (step, w, opt), m
+
+            (step, w, opt), ms = jax.lax.scan(
+                scanned, (step0, w_slice, opt_slices), (keys, batches))
+            return step, w, opt, ms
+
+        sharded = shard_map(
+            scan_rounds, mesh,
+            in_specs=(P(), P(axes), P(axes), P(), P(None, axes)),
+            out_specs=(P(), P(axes), P(axes), P()))
+        new_step, w, opt, ms = sharded(state.step, state.w, state.opt, keys,
+                                       client_batches)
+        return SlabTrainState(new_step, w, tuple(opt), state.spec), ms
+
+    return jax.jit(run) if jit else run
+
+
+def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
+                     adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig, mesh,
+                     jit: bool = True):
+    """PR-2-compatible pytree API over the resident engine.
+
+    ``round_step(params, opt_state, key, client_batches)`` with full
+    (replicated) pytrees in and out — the signature
+    ``make_round_step(backend="pallas_sharded")`` promises. Internally
+    it packs to a ``SlabTrainState`` at the call boundary, runs the
+    resident round once, and materialises pytrees on the way out. The
+    per-call boundary conversion is inherent to a pytree-per-round API;
+    multi-round training should keep the ``SlabTrainState`` resident via
+    ``make_shard_slab_step``/``make_shard_slab_runner`` instead.
+    """
+    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+    inner = make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
+                                 mesh, jit=False)
+
+    def round_step(params, opt_state, key, client_batches):
         spec = make_slab_spec(params, shards=n_shards)
-        shard_len = spec.shard_len
-        idx = linear_shard_index(axes)
-
-        # --- PRNG: full draws from the round key, sliced per shard ----
-        kh, kx = jax.random.split(key)
-        h = sample_fading(kh, channel_cfg, (n,))
-        h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
-
-        # --- launch 1: fused partial MAC over the local client rows ---
-        g_loc_stack = stack_to_slab(spec, grads)          # (n_local, padded)
-        from repro.kernels.ota_channel import ota_channel_slab
-        zeros = jnp.zeros((spec.padded,), jnp.float32)
-        partial = ota_channel_slab(
-            g_loc_stack, h_loc, zeros, jnp.ones_like(zeros),
-            alpha=channel_cfg.alpha, scale=0.0, n_total=n,
-            interpret=channel_cfg.interpret)
-        clean_part = jnp.sum(g_loc_stack, axis=0)
-
-        # --- the superposition: ONE cross-client psum == the MAC ------
-        summed = jax.lax.psum(jnp.stack([partial, clean_part]), axes)
-        g_slab, clean_sum = summed[0], summed[1]
-        if channel_cfg.interference:
-            # Identical draws to the single-device backends (per-leaf
-            # keying is padding-independent); added once, post-psum —
-            # the server's single RF front end.
-            u, e = _cms_slab_inputs(kx, spec)
-            g_slab = g_slab + channel_cfg.xi_scale * cms_transform(
-                u, e, channel_cfg.alpha)
-
-        # --- launch 2: fused server update on this device's slice -----
-        start = idx * shard_len
-        sl = lambda s: jax.lax.dynamic_slice_in_dim(s, start, shard_len)
-        w_slab = tree_to_slab(spec, params)
-        state_slabs = pack_state_slabs(adaptive_cfg, spec, opt_state)
-        new_slices, w_slice = slab_update_slabs(
-            adaptive_cfg, sl(g_slab), tuple(sl(s) for s in state_slabs),
-            sl(w_slab))
-
-        # --- regather the updated slices (masked psum == all_gather) --
-        rows = jnp.stack(list(new_slices) + [w_slice])     # (k+1, shard_len)
-        full = jnp.zeros((rows.shape[0], spec.padded), jnp.float32)
-        full = jax.lax.psum(
-            jax.lax.dynamic_update_slice(full, rows, (0, start)), axes)
-        new_params = slab_to_tree(spec, full[-1])
-        new_state = unpack_state_slabs(adaptive_cfg, spec, opt_state,
-                                       tuple(full[:-1]))
-
-        metrics = RoundMetrics(
-            loss=jax.lax.pmean(jnp.mean(losses), axes),
-            grad_norm=jnp.sqrt(jnp.sum(jnp.square(clean_sum / n))),
-            noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
-            fading_mean=jnp.mean(h),
-        )
+        state = pack_train_state(adaptive_cfg, spec, params, opt_state)
+        state, metrics = inner(state, key, client_batches)
+        new_params, new_state = unpack_train_state(adaptive_cfg, state)
         return new_params, new_state, metrics
 
-    step = shard_map(body, mesh,
-                     in_specs=(P(), P(), P(), P(axes)),
-                     out_specs=(P(), P(), P()))
-    return jax.jit(step) if jit else step
+    return jax.jit(round_step) if jit else round_step

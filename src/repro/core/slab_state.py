@@ -1,0 +1,157 @@
+"""Slab-resident training state: the model + optimizer state as slabs.
+
+The ADOTA server update (Eqs. 8-11) is a pure *slab* computation —
+Delta/nu/w are flat vectors updated once per round — so the multi-round
+loop should never leave slab form. ``SlabTrainState`` is that resident
+state: the parameter slab, the optimizer-state slabs (in
+``state_slab_rows`` order) and the round counter, with the static
+``SlabSpec`` riding along as pytree aux data (so jit caches on the
+layout, and every function taking a state knows its slab geometry
+without a side channel).
+
+Pytrees are materialised only at the *boundaries* of training:
+
+* **init** — ``init_train_state`` / ``pack_train_state`` flatten the
+  freshly initialised params (and, for pack, an existing
+  ``ServerOptState``) into slabs once;
+* **eval / metrics / checkpoint** — ``unpack_train_state`` restores
+  ``(params, ServerOptState)`` exactly as the per-round pytree API
+  would have produced them (params in their original leaf dtypes,
+  state in f32, placeholder leaves for modes that carry no
+  delta/nu), so evaluation code and the npz checkpointer are agnostic
+  to which loop produced the state.
+
+Inside the loop (``repro.core.fl.make_slab_round_step``,
+``repro.core.shard.make_shard_slab_step``) the state stays a slab; under
+a mesh each device keeps only its ``spec.shard_len`` slice of every slab
+(true ZeRO: optimizer state never moves between devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
+                                 pack_state_slabs, state_slab_rows)
+from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
+                             tree_to_slab, zeros_slab)
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SlabTrainState:
+    """Resident training state of the slab engine.
+
+    ``w`` is the (spec.padded,) f32 parameter slab; ``opt`` the
+    optimizer-state slabs in ``state_slab_rows(cfg)`` order (same
+    layout/padding as ``w``); ``step`` the int32 round counter. Under
+    the sharded engine the arrays are the SAME global shapes but live
+    sharded over the mesh's client axes (each device holds one
+    ``spec.shard_len`` slice); the pytree structure is identical either
+    way, so checkpoints and boundary conversions are mesh-agnostic.
+
+    ``spec`` is static aux data: two states with different layouts are
+    different pytree types to jit, and it never becomes a traced value.
+    """
+
+    step: jax.Array
+    w: jax.Array
+    opt: Tuple[jax.Array, ...]
+    spec: SlabSpec
+
+    def tree_flatten(self):
+        return (self.step, self.w, self.opt), self.spec
+
+    @classmethod
+    def tree_unflatten(cls, spec, children):
+        step, w, opt = children
+        return cls(step=step, w=w, opt=tuple(opt), spec=spec)
+
+
+def init_train_state(cfg: AdaptiveConfig, params: PyTree,
+                     spec: SlabSpec | None = None,
+                     shards: int = 1) -> SlabTrainState:
+    """Fresh resident state: params packed once, optimizer slabs zero.
+
+    Matches ``make_server_optimizer(cfg).init`` for every registered
+    optimizer (all init their delta/nu trees to zeros). Pass ``spec``
+    to reuse a prebuilt layout, or ``shards`` to build one with the
+    shard-aligned padding rule.
+    """
+    if spec is None:
+        spec = make_slab_spec(params, shards=shards)
+    n_rows = len(state_slab_rows(cfg))
+    return SlabTrainState(step=jnp.zeros((), jnp.int32),
+                          w=tree_to_slab(spec, params),
+                          opt=tuple(zeros_slab(spec) for _ in range(n_rows)),
+                          spec=spec)
+
+
+def pack_train_state(cfg: AdaptiveConfig, spec: SlabSpec, params: PyTree,
+                     state: ServerOptState) -> SlabTrainState:
+    """Boundary: flatten an existing ``(params, ServerOptState)`` pair."""
+    return SlabTrainState(step=jnp.asarray(state.step, jnp.int32),
+                          w=tree_to_slab(spec, params),
+                          opt=pack_state_slabs(cfg, spec, state),
+                          spec=spec)
+
+
+def unpack_train_state(cfg: AdaptiveConfig, state: SlabTrainState
+                       ) -> Tuple[PyTree, ServerOptState]:
+    """Boundary: materialise ``(params, ServerOptState)`` pytrees.
+
+    Params come back in their original leaf dtypes, optimizer state in
+    f32 (``cast=False``). Modes that carry no delta/nu slabs get the
+    scalar-zero placeholders their ``init`` uses, so the result is
+    structurally identical to what the per-round pytree API returns.
+    """
+    spec = state.spec
+    rows = dict(zip(state_slab_rows(cfg), state.opt))
+    zero = jnp.zeros((), jnp.float32)
+    delta = (slab_to_tree(spec, rows["delta"], cast=False)
+             if "delta" in rows else zero)
+    if "vmax" in rows:
+        nu = {"v": slab_to_tree(spec, rows["nu"], cast=False),
+              "vmax": slab_to_tree(spec, rows["vmax"], cast=False)}
+    elif "nu" in rows:
+        nu = slab_to_tree(spec, rows["nu"], cast=False)
+    else:
+        nu = zero
+    params = slab_to_tree(spec, state.w)
+    return params, ServerOptState(step=state.step, delta=delta, nu=nu)
+
+
+def spec_meta(spec: SlabSpec) -> dict:
+    """JSON-serialisable fingerprint of a slab layout — stored beside
+    checkpoints so resume can verify the current model produces the SAME
+    layout (no silent re-packing drift when shapes/dtypes/shards change).
+    """
+    return {"total": spec.total, "padded": spec.padded,
+            "shards": spec.shards,
+            "shapes": [list(s) for s in spec.shapes],
+            "dtypes": [str(d) for d in spec.dtypes],
+            "offsets": list(spec.offsets),
+            # The treedef catches drifts the leaf metadata cannot: two
+            # same-shaped leaves renamed or reordered flatten to
+            # identical shapes/dtypes/offsets but would silently swap
+            # their slab segments on resume.
+            "treedef": str(spec.treedef)}
+
+
+def check_spec_meta(spec: SlabSpec, meta: dict, where: str = "") -> None:
+    """Raise if ``spec`` does not reproduce the checkpointed layout."""
+    current = spec_meta(spec)
+    if current != meta:
+        diff = [k for k in current if current[k] != meta.get(k)]
+        raise ValueError(
+            f"slab layout mismatch{' in ' + where if where else ''}: "
+            f"checkpoint was written with a different {'/'.join(diff)} "
+            f"(ckpt {[meta.get(k) for k in diff]!r} vs current "
+            f"{[current[k] for k in diff]!r}); resuming would re-pack "
+            "state into a different layout")

@@ -1,18 +1,31 @@
-"""Cross-backend parity check of the sharded slab engine (CLI).
+"""Multi-round trajectory parity check of the slab-resident engine (CLI).
 
-Runs full ADOTA rounds on the jnp reference backend, the single-device
-pallas slab engine, and the mesh-distributed ``pallas_sharded`` engine
-on one or more client-mesh shapes, then reports the maximum deviation of
-params / optimizer state / metrics. Also asserts seeded determinism:
-the sharded round run twice with the same key must be bitwise equal.
+Runs R full ADOTA rounds three ways and reports the maximum end-of-
+trajectory deviation of params / optimizer state / metrics:
 
-This is the executable form of the sharded-engine acceptance contract
-(all three backends consume identical PRNG draws and differ only by f32
+* the per-round jnp pytree reference (``make_round_step``, Python loop);
+* the slab-RESIDENT single-device pallas loop (``make_slab_round_runner``,
+  one ``jax.lax.scan`` over the ``SlabTrainState``);
+* the slab-resident ``pallas_sharded`` loop on one or more client-mesh
+  shapes (scan *inside* ``shard_map`` — each device carries only its
+  slab slices; no full-model regather in the scanned body).
+
+The surviving pytree-per-round API (``make_round_step(
+backend="pallas_sharded")``, now a boundary wrapper over the resident
+body) is also exercised on every mesh for a subset of optimizers that
+covers every state-slab row count (0/1/2/3), so the pack -> resident
+round -> unpack boundary keeps real multi-device coverage.
+
+Also asserts seeded determinism: the sharded trajectory run twice with
+the same keys must be bitwise equal.
+
+This is the executable form of the resident-engine acceptance contract
+(all three loops consume identical PRNG draws and differ only by f32
 summation order); tests/test_shard_roundstep.py runs it as a subprocess
 so the main pytest process keeps its real single-device view.
 
     PYTHONPATH=src python -m repro.launch.shard_check \
-        --meshes 2 4,2 --optimizers adam_ota fedavgm --tol 1e-5
+        --meshes 1 2 4,2 --rounds 5 --tol 1e-5
 
 The XLA flag below MUST precede any jax import (jax locks the device
 count at first backend init); at least 8 host devices are forced, or
@@ -34,8 +47,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                        init_server, make_round_step)
+                        init_server, init_train_state, make_round_step,
+                        make_slab_round_runner, unpack_train_state)
 from repro.launch.mesh import make_client_mesh
+
+ALL_OPTIMIZERS = ["adagrad_ota", "adam_ota", "amsgrad_ota", "yogi_ota",
+                  "fedavgm", "fedavg"]
+
+# One optimizer per state-slab row count (3/2/1/0): enough to cover
+# every pack/unpack shape of the pytree-per-round boundary wrapper.
+PERROUND_OPTIMIZERS = ("amsgrad_ota", "adam_ota", "fedavgm", "fedavg")
 
 
 def _max_dev(a, b) -> float:
@@ -50,27 +71,70 @@ def _max_dev(a, b) -> float:
     return dev
 
 
-def _run(backend: str, mesh, params, batches, ch, ad, fl, rounds: int):
-    rs = make_round_step(_loss_fn, ch, ad, fl, backend=backend, mesh=mesh)
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def _round_keys(rounds: int):
+    return jnp.stack([jax.random.fold_in(jax.random.key(7), t)
+                      for t in range(rounds)])
+
+
+def _run_ref(params, batches, ch, ad, fl, rounds: int):
+    """Per-round jnp pytree reference trajectory."""
+    rs = make_round_step(_loss_fn, ch, ad, fl, backend="jnp")
     p, s = params, init_server(params, ad)
     for t in range(rounds):
         p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(7), t), batches)
     return p, s, m
 
 
-def _loss_fn(p, batch):
-    return sum(jnp.mean((x - t) ** 2)
-               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+def _run_perround(mesh, params, batches, ch, ad, fl, rounds: int):
+    """Pytree-per-round API trajectory (the PR-2-compatible boundary
+    wrapper) — full pytrees in and out every round."""
+    rs = make_round_step(_loss_fn, ch, ad, fl, backend="pallas_sharded",
+                         mesh=mesh)
+    p, s = params, init_server(params, ad)
+    for t in range(rounds):
+        p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(7), t), batches)
+    return p, s, m
+
+
+def _run_resident(backend, mesh, n_shards, params, batches, ch, ad, fl,
+                  rounds: int):
+    """Slab-resident trajectory: one scanned dispatch over R rounds."""
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend=backend,
+                                 mesh=mesh)
+    state = init_train_state(ad, params, shards=n_shards)
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * rounds), batches)
+    state, ms = run(state, _round_keys(rounds), stacked)
+    p, s = unpack_train_state(ad, state)
+    m_last = jax.tree.map(lambda x: x[-1], ms)
+    return p, s, m_last
+
+
+def _devs(ref, out, tol):
+    (p_ref, s_ref, m_ref), (p, s, m) = ref, out
+    devs = {
+        "params": _max_dev(p_ref, p),
+        "delta": _max_dev(s_ref.delta, s.delta),
+        "nu": _max_dev(s_ref.nu, s.nu),
+        "loss": abs(float(m_ref.loss) - float(m.loss)),
+        "|g_t|": abs(float(m_ref.noisy_grad_norm)
+                     - float(m.noisy_grad_norm))
+        / max(abs(float(m_ref.noisy_grad_norm)), 1.0),
+    }
+    return devs, max(devs.values()) <= tol
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--meshes", nargs="+", default=["2", "4,2"],
-                    help="client-mesh shapes, e.g. --meshes 2 4,2")
-    ap.add_argument("--optimizers", nargs="+",
-                    default=["adam_ota", "fedavgm"])
+    ap.add_argument("--meshes", nargs="+", default=["1", "2", "4,2"],
+                    help="client-mesh shapes, e.g. --meshes 1 2 4,2")
+    ap.add_argument("--optimizers", nargs="+", default=ALL_OPTIMIZERS)
     ap.add_argument("--clients", type=int, default=8)
-    ap.add_argument("--rounds", type=positive_int, default=2)
+    ap.add_argument("--rounds", type=positive_int, default=5)
     ap.add_argument("--tol", type=float, default=1e-5)
     args = ap.parse_args(argv)
 
@@ -88,40 +152,40 @@ def main(argv=None) -> int:
     failures = 0
     for opt in args.optimizers:
         ad = AdaptiveConfig(optimizer=opt, lr=0.05, alpha=1.5, beta2=0.3)
-        p_ref, s_ref, m_ref = _run("jnp", None, params, batches, ch, ad, fl,
-                                   args.rounds)
-        p_slab, _, _ = _run("pallas", None, params, batches, ch, ad, fl,
+        ref = _run_ref(params, batches, ch, ad, fl, args.rounds)
+        out = _run_resident("pallas", None, 1, params, batches, ch, ad, fl,
                             args.rounds)
-        dev = _max_dev(p_ref, p_slab)
-        print(f"{opt:12s} pallas            dev={dev:.2e}")
-        failures += dev > args.tol
+        devs, ok = _devs(ref, out, args.tol)
+        failures += not ok
+        print(f"{opt:12s} resident pallas   "
+              + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
+              + ("  OK" if ok else "  FAIL"))
         for mesh_str in args.meshes:
             shape = tuple(int(x) for x in mesh_str.split(","))
             mesh = make_client_mesh(shape)
-            p_s, s_s, m_s = _run("pallas_sharded", mesh, params, batches, ch,
-                                 ad, fl, args.rounds)
-            devs = {
-                "params": _max_dev(p_ref, p_s),
-                "delta": _max_dev(s_ref.delta, s_s.delta),
-                "nu": _max_dev(s_ref.nu, s_s.nu),
-                "loss": abs(float(m_ref.loss) - float(m_s.loss)),
-                "|g_t|": abs(float(m_ref.noisy_grad_norm)
-                             - float(m_s.noisy_grad_norm))
-                / max(abs(float(m_ref.noisy_grad_norm)), 1.0),
-            }
-            worst = max(devs.values())
-            ok = worst <= args.tol
+            n_shards = int(np.prod(shape))
+            out = _run_resident("pallas_sharded", mesh, n_shards, params,
+                                batches, ch, ad, fl, args.rounds)
+            devs, ok = _devs(ref, out, args.tol)
             failures += not ok
-            print(f"{opt:12s} sharded mesh={mesh_str:5s} "
+            print(f"{opt:12s} resident mesh={mesh_str:5s} "
                   + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
                   + ("  OK" if ok else "  FAIL"))
-            # Seeded determinism: the identical run must be bitwise equal.
-            p_s2, s_s2, m_s2 = _run("pallas_sharded", mesh, params, batches,
-                                    ch, ad, fl, args.rounds)
-            for x, y in zip(jax.tree.leaves((p_s, s_s)),
-                            jax.tree.leaves((p_s2, s_s2))):
+            if opt in PERROUND_OPTIMIZERS:
+                out_pr = _run_perround(mesh, params, batches, ch, ad, fl,
+                                       args.rounds)
+                devs, ok = _devs(ref, out_pr, args.tol)
+                failures += not ok
+                print(f"{opt:12s} perround mesh={mesh_str:5s} "
+                      + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
+                      + ("  OK" if ok else "  FAIL"))
+            # Seeded determinism: the identical trajectory must be
+            # bitwise equal on rerun.
+            out2 = _run_resident("pallas_sharded", mesh, n_shards, params,
+                                 batches, ch, ad, fl, args.rounds)
+            for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
                 if not np.array_equal(np.asarray(x), np.asarray(y)):
-                    print(f"{opt:12s} sharded mesh={mesh_str}: "
+                    print(f"{opt:12s} resident mesh={mesh_str}: "
                           "NONDETERMINISTIC rerun")
                     failures += 1
                     break

@@ -4,7 +4,16 @@ Runs ADOTA-FL on an assigned architecture's REDUCED variant (CPU) or the
 full config (TPU pod, same code path): clients hold Dirichlet-partitioned
 shards of a synthetic token stream, each round computes client gradients,
 passes them through the simulated OTA MAC, and applies the adaptive
-server update. Checkpoints every --ckpt-every rounds.
+server update.
+
+The training state lives as a slab-resident ``SlabTrainState`` across
+rounds (PR 3): params + optimizer-state slabs, sharded over the mesh
+under ``--backend pallas_sharded``, with rounds dispatched as
+``jax.lax.scan`` chunks of ``--scan-rounds``. Checkpoints
+(``--ckpt-dir``, every ``--ckpt-every`` rounds) store the slabs raw
+with a layout fingerprint; ``--resume`` continues bitwise-identically
+from the latest one (all round randomness is keyed by absolute round
+index, so the resumed trajectory equals the uninterrupted one).
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
         --preset tiny --rounds 100
@@ -16,6 +25,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
 import time
 
@@ -26,7 +36,8 @@ import numpy as np
 import repro.checkpoint as ckpt
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                        init_server, make_round_step, run_rounds)
+                        init_train_state, make_slab_round_runner,
+                        make_slab_spec, run_rounds_slab)
 from repro.data import dirichlet_partition, token_stream
 from repro.models.model import ModelConfig, build_model
 
@@ -78,9 +89,21 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --ckpt-dir "
+                         "(bitwise-identical continuation: round keys are "
+                         "derived from the absolute round index)")
+    ap.add_argument("--scan-rounds", type=int, default=8,
+                    help="rounds fused into one jax.lax.scan dispatch over "
+                         "the resident slab state (clipped to log/ckpt "
+                         "boundaries)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--history-out", default=None)
     args = ap.parse_args()
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume needs --ckpt-dir")
+    if args.scan_rounds < 1:
+        ap.error("--scan-rounds must be >= 1")
 
     mesh = None
     if args.mesh is not None and args.backend != "pallas_sharded":
@@ -88,8 +111,6 @@ def main() -> None:
                  f"(got --backend {args.backend}); it would be silently "
                  f"ignored on a single-device backend")
     if args.backend == "pallas_sharded":
-        import math
-
         from repro.launch.hostdev import force_host_devices
         try:
             mesh_shape = tuple(int(x) for x in (args.mesh or "2").split(","))
@@ -116,9 +137,12 @@ def main() -> None:
     domain = (starts_all // (len(toks) // 16)).astype(np.int64)  # 16 domains
     parts = dirichlet_partition(domain, args.clients, args.dir,
                                 seed=args.seed, min_per_client=args.batch)
-    rng = np.random.default_rng(args.seed)
 
     def batch_fn(t, key):
+        # Keyed by the ABSOLUTE round index (not by call count): a
+        # resumed process must draw the same batches for round t as the
+        # uninterrupted one, or --resume could not be bitwise-identical.
+        rng = np.random.default_rng((args.seed, t))
         out = np.empty((args.clients, args.batch, args.seq), np.int32)
         for c, p in enumerate(parts):
             pick = rng.choice(p, size=args.batch, replace=len(p) < args.batch)
@@ -133,43 +157,53 @@ def main() -> None:
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
                         alpha=args.alpha, beta2=0.3, backend=args.backend,
                         interpret=interpret)
+    n_shards = 1
     if args.backend == "pallas_sharded":
         from repro.launch.mesh import make_client_mesh
         mesh = make_client_mesh(mesh_shape)
+        n_shards = math.prod(mesh_shape)
         print(f"client mesh {dict(mesh.shape)} "
               f"({len(jax.devices())} devices visible)")
-    rs = make_round_step(lambda p, b: model.loss_fn(p, b), ch, ad,
-                         FLConfig(n_clients=args.clients), mesh=mesh)
+    run_chunk = make_slab_round_runner(lambda p, b: model.loss_fn(p, b), ch,
+                                       ad, FLConfig(n_clients=args.clients),
+                                       mesh=mesh)
     params = model.init(jax.random.key(args.seed))
-    state = init_server(params, ad)
+    spec = make_slab_spec(params, shards=n_shards)
+    state = init_train_state(ad, params, spec=spec)
+    del params   # resident from here on; pytrees only at boundaries
 
     start_round = 0
-    if args.ckpt_dir:
+    if args.resume:
         latest = ckpt.latest_round(args.ckpt_dir)
-        if latest:
-            tree = ckpt.load(latest, {"params": params, "state": state,
-                                      "round": jnp.asarray(0)})
-            params, state = tree["params"], tree["state"]
-            start_round = int(tree["round"])
+        if latest is None:
+            print(f"no checkpoint under {args.ckpt_dir}; starting fresh")
+        else:
+            state, _ = ckpt.load_slab_state(latest, spec)
+            start_round = int(state.step)
             print(f"resumed from {latest} at round {start_round}")
 
     t0 = time.time()
-    history = []
-    for t in range(start_round, args.rounds):
-        key = jax.random.fold_in(jax.random.key(args.seed + 1), t)
-        params, state, m = rs(params, state, key, batch_fn(t, None))
-        rec = {"round": t, "loss": float(m.loss),
-               "grad_norm": float(m.grad_norm)}
-        history.append(rec)
-        if (t + 1) % args.log_every == 0:
+    base_key = jax.random.key(args.seed + 1)
+
+    def chunk_hook(t, st, history):
+        # run_rounds_slab clips chunks to the align periods, so every
+        # log/checkpoint multiple lands exactly on a chunk boundary.
+        if args.log_every and t % args.log_every == 0:
+            rec = history[-1]
             dt = time.time() - t0
-            print(f"round {t+1:5d}  loss {rec['loss']:.4f}  "
-                  f"|g| {rec['grad_norm']:.3e}  ({dt/ (t - start_round + 1):.2f}s/round)",
-                  flush=True)
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            ckpt.save(os.path.join(args.ckpt_dir, f"round_{t+1}.npz"),
-                      {"params": params, "state": state,
-                       "round": jnp.asarray(t + 1)})
+            print(f"round {t:5d}  loss {rec['loss']:.4f}  "
+                  f"|g| {rec['grad_norm']:.3e}  "
+                  f"({dt / (t - start_round):.2f}s/round)", flush=True)
+        if args.ckpt_dir and args.ckpt_every and t % args.ckpt_every == 0:
+            ckpt.save_slab_state(os.path.join(args.ckpt_dir,
+                                              f"round_{t}.npz"), st)
+
+    state, history = run_rounds_slab(
+        run_chunk, state, None, batch_fn, args.rounds,
+        chunk=args.scan_rounds,
+        key_fn=lambda t: jax.random.fold_in(base_key, t),
+        start_round=start_round, chunk_hook=chunk_hook,
+        align=(args.log_every, args.ckpt_every if args.ckpt_dir else 0))
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

@@ -1,11 +1,13 @@
 """Sharded slab engine: backend="pallas_sharded" parity and contracts.
 
 In-process tests run on a (1,)-mesh (the pytest process keeps jax's real
-single-device view — see conftest.py); the multi-device acceptance —
-parity with the jnp backend at 1e-5 on full rounds for mesh shapes (2,)
-and (4, 2) and two optimizers, plus bitwise rerun determinism — runs
-``repro.launch.shard_check`` in a subprocess that forces 8 host devices
-before jax initialises.
+single-device view — see conftest.py), covering both the per-round
+pytree API and the slab-RESIDENT multi-round loop (scan inside
+shard_map, all six optimizers). The multi-device acceptance — resident
+trajectory parity with the per-round jnp reference at 1e-5 over 5 full
+rounds for ALL six optimizers on mesh shapes (1,), (2,) and (4, 2),
+plus bitwise rerun determinism — runs ``repro.launch.shard_check`` in a
+subprocess that forces 8 host devices before jax initialises.
 """
 
 import dataclasses
@@ -20,7 +22,8 @@ import pytest
 
 from repro.compat import make_auto_mesh
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                        init_server, make_round_step)
+                        init_server, init_train_state, make_round_step,
+                        make_slab_round_runner, unpack_train_state)
 from repro.core.shard import client_axes_of, n_client_shards
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -81,6 +84,54 @@ def test_single_shard_mesh_matches_jnp(optimizer):
                                float(m_s.noisy_grad_norm), rtol=1e-4)
     np.testing.assert_allclose(float(m_r.grad_norm), float(m_s.grad_norm),
                                rtol=1e-4)
+
+
+@pytest.mark.parametrize("optimizer", ["adagrad_ota", "adam_ota",
+                                       "amsgrad_ota", "yogi_ota",
+                                       "fedavgm", "fedavg"])
+def test_resident_trajectory_matches_jnp_single_shard_mesh(optimizer):
+    """Multi-round trajectory parity of the slab-RESIDENT loop (scan
+    inside shard_map, state carried as slab slices — no regather in the
+    scanned body) vs the per-round jnp pytree reference, 5 rounds, all
+    six optimizers, on the in-process (1,)-mesh. Multi-device meshes are
+    covered by the shard_check acceptance below."""
+    params = _params(jax.random.key(4))
+    n, rounds = 4, 5
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(5), (n,) + p.shape),
+        params)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer=optimizer, lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=n)
+
+    rs = make_round_step(_loss_fn, ch, ad, fl, backend="jnp")
+    p_ref, s_ref = params, init_server(params, ad)
+    for t in range(rounds):
+        p_ref, s_ref, m_ref = rs(p_ref, s_ref,
+                                 jax.random.fold_in(jax.random.key(6), t),
+                                 batches)
+
+    mesh = make_auto_mesh((1,), ("data",))
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl,
+                                 backend="pallas_sharded", mesh=mesh)
+    st = init_train_state(ad, params, shards=1)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(6), t)
+                      for t in range(rounds)])
+    st, ms = run(st, keys, jax.tree.map(
+        lambda b: jnp.stack([b] * rounds), batches))
+    p_res, s_res = unpack_train_state(ad, st)
+
+    _assert_trees_close(p_ref, p_res, 1e-5)
+    _assert_trees_close(s_ref.delta, s_res.delta, 1e-5)
+    _assert_trees_close(s_ref.nu, s_res.nu, 1e-5)
+    assert int(st.step) == rounds
+    assert ms.loss.shape == (rounds,)
+    np.testing.assert_allclose(float(m_ref.loss), float(ms.loss[-1]),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m_ref.grad_norm),
+                               float(ms.grad_norm[-1]), rtol=1e-4)
+    np.testing.assert_allclose(float(m_ref.noisy_grad_norm),
+                               float(ms.noisy_grad_norm[-1]), rtol=1e-4)
 
 
 def test_two_launches_per_device_per_round(monkeypatch):
@@ -157,17 +208,18 @@ def test_configs_accept_sharded_backend():
 
 
 def test_multi_device_parity_acceptance():
-    """ACCEPTANCE: pallas_sharded matches jnp at 1e-5 on full rounds for
-    mesh shapes (2,) and (4, 2) and two optimizers, and reruns are
-    bitwise deterministic — checked on 8 forced host devices in a
-    subprocess (repro.launch.shard_check)."""
+    """ACCEPTANCE: the slab-resident trajectories (single-device pallas
+    and pallas_sharded on mesh shapes (1,), (2,) and (4, 2)) match the
+    per-round jnp reference at 1e-5 over 5 full rounds for ALL six
+    optimizers, and sharded reruns are bitwise deterministic — checked
+    on 8 forced host devices in a subprocess
+    (repro.launch.shard_check)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.shard_check",
-         "--meshes", "2", "4,2", "--optimizers", "adam_ota", "fedavgm",
-         "--tol", "1e-5"],
+         "--meshes", "1", "2", "4,2", "--rounds", "5", "--tol", "1e-5"],
         capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=900)
     assert out.returncode == 0, out.stdout + out.stderr
     assert "PARITY OK" in out.stdout, out.stdout

@@ -1,0 +1,254 @@
+"""Slab-resident training state: boundary conversions, the resident
+round loops, and SlabTrainState checkpointing.
+
+The multi-round contracts (PR 3):
+
+* ``pack_train_state`` / ``unpack_train_state`` round-trip exactly for
+  every optimizer (params in original dtypes, state in f32, placeholder
+  leaves preserved);
+* the resident slab loop (``make_slab_round_runner`` +
+  ``run_rounds_slab``) reproduces the per-round pytree driver's
+  trajectory from the same key (identical PRNG draws, f32 rounding);
+* ``save_slab_state`` -> ``load_slab_state`` -> continue is
+  bitwise-identical to the uninterrupted run (even across different
+  scan-chunk boundaries), and a drifted slab layout is refused.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint as ckpt
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        init_server, init_train_state, make_round_step,
+                        make_slab_round_runner, make_slab_round_step,
+                        make_slab_spec, pack_train_state, run_rounds,
+                        run_rounds_slab, unpack_train_state)
+
+ALL_OPTIMIZERS = ["adagrad_ota", "adam_ota", "amsgrad_ota", "yogi_ota",
+                  "fedavgm", "fedavg"]
+
+SHAPES = [(3, 45), (130,), (1,), (257,)]
+
+
+def _params(key):
+    ks = jax.random.split(key, len(SHAPES))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, SHAPES))}
+
+
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def _assert_trees_equal(a, b, bitwise=True, tol=0.0):
+    assert jax.tree.structure(a) == jax.tree.structure(b), (
+        jax.tree.structure(a), jax.tree.structure(b))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if bitwise:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32),
+                                       rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("optimizer", ALL_OPTIMIZERS)
+def test_pack_unpack_round_trip(optimizer):
+    params = _params(jax.random.key(0))
+    ad = AdaptiveConfig(optimizer=optimizer)
+    # run one real jnp update so the packed state holds non-trivial
+    # values (and the placeholder leaves their canonical zeros)
+    from repro.core import make_server_optimizer
+    g = jax.tree.map(lambda p: jax.random.normal(jax.random.key(9), p.shape),
+                     params)
+    params, state = make_server_optimizer(ad).update(
+        g, init_server(params, ad), params)
+    spec = make_slab_spec(params)
+    st = pack_train_state(ad, spec, params, state)
+    p2, s2 = unpack_train_state(ad, st)
+    _assert_trees_equal(params, p2)
+    _assert_trees_equal(state, s2)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(s2)):
+        assert a.dtype == b.dtype
+
+
+@pytest.mark.parametrize("optimizer", ALL_OPTIMIZERS)
+def test_init_train_state_matches_init_server(optimizer):
+    params = _params(jax.random.key(1))
+    ad = AdaptiveConfig(optimizer=optimizer)
+    st = init_train_state(ad, params)
+    p2, s2 = unpack_train_state(ad, st)
+    _assert_trees_equal(params, p2)
+    _assert_trees_equal(init_server(params, ad), s2)
+
+
+def test_run_rounds_slab_matches_run_rounds():
+    """The slab-resident host driver reproduces the pytree driver's
+    trajectory from the same key (identical PRNG keying contract)."""
+    params = _params(jax.random.key(2))
+    n = 4
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=n)
+
+    def batch_fn(t, key):
+        return jax.tree.map(
+            lambda p: jax.random.normal(jax.random.fold_in(key, 0),
+                                        (n,) + p.shape), params)
+
+    rs = make_round_step(_loss_fn, ch, ad, fl, backend="jnp")
+    p_ref, s_ref, hist_ref = run_rounds(rs, params, init_server(params, ad),
+                                        jax.random.key(11), batch_fn, 5)
+
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend="pallas")
+    st, hist = run_rounds_slab(run, init_train_state(ad, params),
+                               jax.random.key(11), batch_fn, 5, chunk=2)
+    p_res, s_res = unpack_train_state(ad, st)
+    _assert_trees_equal(p_ref, p_res, bitwise=False, tol=1e-5)
+    _assert_trees_equal(s_ref.delta, s_res.delta, bitwise=False, tol=1e-5)
+    assert [h["round"] for h in hist] == [h["round"] for h in hist_ref]
+    for a, b in zip(hist, hist_ref):
+        np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-5)
+        np.testing.assert_allclose(a["grad_norm"], b["grad_norm"], rtol=1e-4)
+
+
+@pytest.mark.parametrize("optimizer", ["adam_ota", "amsgrad_ota", "fedavg"])
+def test_checkpoint_resume_is_bitwise(optimizer, tmp_path):
+    """save -> load -> continue == uninterrupted, bitwise, even though
+    the resumed run scans with different chunk boundaries."""
+    params = _params(jax.random.key(3))
+    n = 2
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer=optimizer, lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=n)
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend="pallas")
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(5), t)
+                      for t in range(4)])
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(4), (4, n) + p.shape),
+        params)
+
+    # uninterrupted: one scanned chunk of 4 rounds
+    st_full, _ = run(init_train_state(ad, params), keys, batches)
+
+    # interrupted at round 2, checkpointed, resumed in chunks of 1
+    first = jax.tree.map(lambda x: x[:2], batches)
+    st_half, _ = run(init_train_state(ad, params), keys[:2], first)
+    path = os.path.join(tmp_path, "round_2.npz")
+    ckpt.save_slab_state(path, st_half, extra={"note": np.int32(7)})
+    st_loaded, extra = ckpt.load_slab_state(path, st_half.spec)
+    assert int(extra["note"]) == 7
+    assert int(st_loaded.step) == 2
+    step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="pallas")
+    st = st_loaded
+    for t in (2, 3):
+        st, _ = step(st, keys[t], jax.tree.map(lambda x: x[t], batches))
+
+    _assert_trees_equal((st_full.step, st_full.w, st_full.opt),
+                        (st.step, st.w, st.opt))
+
+
+def test_train_cli_resume_is_bitwise(tmp_path):
+    """launch.train --ckpt-dir/--resume: an interrupted + resumed run
+    produces the same checkpoints and loss curve, bitwise, as an
+    uninterrupted one — across separate processes (this also pins the
+    host-side contract that batch draws are keyed by the absolute round
+    index, not by call count)."""
+    repo_root = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                             ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(repo_root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    base = ["--preset", "tiny", "--rounds", "4", "--clients", "2",
+            "--batch", "1", "--seq", "16", "--seed", "3",
+            "--log-every", "1000", "--scan-rounds", "3",
+            "--ckpt-every", "2"]
+
+    def train(extra):
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", *base, *extra],
+            capture_output=True, text=True, cwd=repo_root, env=env,
+            timeout=600)
+        assert res.returncode == 0, res.stdout + res.stderr
+        return res.stdout
+
+    full_dir, part_dir = str(tmp_path / "full"), str(tmp_path / "part")
+    train(["--ckpt-dir", full_dir,
+           "--history-out", str(tmp_path / "h_full.json")])
+    train(["--ckpt-dir", part_dir, "--rounds", "2"])
+    out = train(["--ckpt-dir", part_dir, "--resume",
+                 "--history-out", str(tmp_path / "h_resumed.json")])
+    assert "resumed from" in out and "at round 2" in out
+
+    a = np.load(os.path.join(full_dir, "round_4.npz"))
+    b = np.load(os.path.join(part_dir, "round_4.npz"))
+    assert set(a.files) == set(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k])
+    with open(tmp_path / "h_full.json") as f:
+        h_full = json.load(f)
+    with open(tmp_path / "h_resumed.json") as f:
+        h_res = json.load(f)
+    assert [r["round"] for r in h_res] == [2, 3]
+    for x, y in zip(h_full[2:], h_res):
+        assert x["loss"] == y["loss"] and x["grad_norm"] == y["grad_norm"]
+
+
+def test_load_slab_state_refuses_drifted_layout(tmp_path):
+    params = _params(jax.random.key(6))
+    ad = AdaptiveConfig(optimizer="adam_ota")
+    st = init_train_state(ad, params)
+    path = os.path.join(tmp_path, "round_1.npz")
+    ckpt.save_slab_state(path, st)
+    # same tree, different shard-aligned padding -> different layout
+    drifted = make_slab_spec(params, shards=4)
+    with pytest.raises(ValueError, match="layout mismatch"):
+        ckpt.load_slab_state(path, drifted)
+    # and a different model entirely
+    other = make_slab_spec({"w": jnp.zeros((8, 8))})
+    with pytest.raises(ValueError, match="layout mismatch"):
+        ckpt.load_slab_state(path, other)
+    # renamed keys with IDENTICAL shapes/dtypes/offsets: only the
+    # treedef differs, and resuming would silently swap slab segments
+    renamed = make_slab_spec({f"q{i}": v for i, (k, v) in
+                              enumerate(sorted(params.items()))})
+    with pytest.raises(ValueError, match="layout mismatch"):
+        ckpt.load_slab_state(path, renamed)
+
+
+def test_slab_state_is_a_pytree():
+    params = _params(jax.random.key(7))
+    ad = AdaptiveConfig(optimizer="adam_ota")
+    st = init_train_state(ad, params)
+    doubled = jax.tree.map(lambda x: x * 2, st)
+    assert isinstance(doubled, type(st))
+    assert doubled.spec == st.spec
+    np.testing.assert_array_equal(np.asarray(doubled.w),
+                                  2 * np.asarray(st.w))
+    # jit caches on the static spec aux data
+    f = jax.jit(lambda s: s.w.sum())
+    f(st)
+
+
+def test_mesh_shard_mismatch_is_rejected():
+    """A state laid out for P shards cannot run on a Q-shard mesh."""
+    from repro.compat import make_auto_mesh
+    params = _params(jax.random.key(8))
+    ad = AdaptiveConfig(optimizer="adam_ota")
+    ch, fl = OTAChannelConfig(), FLConfig(n_clients=2)
+    step = make_slab_round_step(_loss_fn, ch, ad, fl,
+                                backend="pallas_sharded",
+                                mesh=make_auto_mesh((1,), ("data",)))
+    st = init_train_state(ad, params, shards=2)   # wrong layout for (1,)
+    batches = jax.tree.map(
+        lambda p: jnp.zeros((2,) + p.shape), params)
+    with pytest.raises(ValueError, match="shards"):
+        step(st, jax.random.key(0), batches)

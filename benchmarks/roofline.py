@@ -17,8 +17,6 @@ from __future__ import annotations
 
 import glob
 import json
-import math
-import os
 from typing import Dict, List, Optional
 
 PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip

@@ -10,6 +10,8 @@ CSV (one line per benchmark record).
 from __future__ import annotations
 
 import argparse
+import datetime
+import hashlib
 import json
 import os
 import subprocess
@@ -21,6 +23,38 @@ from benchmarks import kernel_bench, paper_figs  # noqa: E402
 
 
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Every bench the harness knows; --only must name one of these.
+BENCH_NAMES = ("fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
+               "beyond_yogi", "kernels", "round_step", "train_loop")
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO_ROOT,
+                             timeout=10)
+        return out.stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def bench_meta(quick: bool, config: dict) -> dict:
+    """Provenance stamp for the tracked BENCH_*.json artifacts: git SHA
+    + UTC date make a record attributable to a PR, and the fingerprint
+    (a hash of the bench configuration + the software/platform that
+    produced it) makes cross-PR comparisons refuse-on-drift — two runs
+    are comparable iff their fingerprints match."""
+    import jax
+    cfg = dict(config, quick=quick, jax=jax.__version__,
+               jax_backend=jax.default_backend(),
+               python=".".join(map(str, sys.version_info[:3])))
+    fp = hashlib.sha256(
+        json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
+    return {"git_sha": _git_sha(),
+            "date": datetime.datetime.now(datetime.timezone.utc)
+                        .strftime("%Y-%m-%dT%H:%M:%SZ"),
+            "config": cfg, "config_fingerprint": fp}
 
 
 def _csv(name: str, us: float, derived: str) -> None:
@@ -47,15 +81,17 @@ def _bench_subprocess(module: str, argv: list) -> list:
 
 
 def _write_bench_json(filename: str, records: list, quick: bool,
-                      out_dir: str) -> None:
+                      out_dir: str, config: dict) -> None:
     """Tracked artifacts live at the repo root; a --quick run is
     reduced-fidelity, so it writes under ``out_dir`` instead of
-    clobbering them."""
+    clobbering them. The payload is ``{"meta": ..., "records": [...]}``
+    — see ``bench_meta`` for the provenance contract."""
     for r in records:
         _csv(r["name"], r["us_per_round"], r["derived"])
     dest = out_dir if quick else REPO_ROOT
     with open(os.path.join(dest, filename), "w") as f:
-        json.dump(records, f, indent=2)
+        json.dump({"meta": bench_meta(quick, config), "records": records},
+                  f, indent=2)
 
 
 def run_round_step_bench(quick: bool, out_dir: str) -> list:
@@ -73,7 +109,9 @@ def run_round_step_bench(quick: bool, out_dir: str) -> list:
     records.extend(_bench_subprocess(
         "benchmarks.shard_bench",
         ["--sizes", *[str(s) for s in sizes], "--iters", str(iters)]))
-    _write_bench_json("BENCH_round_step.json", records, quick, out_dir)
+    _write_bench_json("BENCH_round_step.json", records, quick, out_dir,
+                      {"bench": "round_step", "sizes": list(sizes),
+                       "iters": iters})
     return records
 
 
@@ -90,7 +128,9 @@ def run_train_loop_bench(quick: bool, out_dir: str) -> list:
         "benchmarks.train_loop_bench",
         ["--sizes", *[str(s) for s in sizes], "--rounds", str(rounds),
          "--iters", str(iters)])
-    _write_bench_json("BENCH_train_loop.json", records, quick, out_dir)
+    _write_bench_json("BENCH_train_loop.json", records, quick, out_dir,
+                      {"bench": "train_loop", "sizes": list(sizes),
+                       "rounds": rounds, "iters": iters})
     return records
 
 
@@ -116,6 +156,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/bench")
     args = ap.parse_args()
+    if args.only and args.only not in BENCH_NAMES:
+        ap.error(f"unknown bench name {args.only!r} for --only; "
+                 f"valid names: {', '.join(BENCH_NAMES)}")
     os.makedirs(args.out, exist_ok=True)
 
     print("name,us_per_call,derived")

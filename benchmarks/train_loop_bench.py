@@ -20,23 +20,33 @@ Times R full ADOTA rounds through four loop structures:
 
 Wall time on this CPU container measures Pallas interpret mode (the
 Python kernel loop), so the hardware-relevant columns are the derived
-bytes models, per device and per round (f32 words x 4; ring-collective
-cost ~= payload for reduce-scatter/all-gather, 2x for all-reduce):
+bytes models, per device and per round (ring-collective cost ~= payload
+for reduce-scatter/all-gather/all-to-all, 2x for all-reduce). The MAC
+collective — the uplink — is broken out in its own
+``uplink_bytes_per_round`` column, since it is the term the uplink
+payload format (``--uplink``) scales:
 
-    comms resident : d (gather w) + 2d (reduce-scatter of [g, clean])
-                     = 3d
-    comms perround : resident + (k+1)d boundary materialisation of the
-                     k state slabs + params the pytree API gathers
-                     every call = 6d for adam (k = 2)
-    hbm   resident : MAC (N/P + 2)d + fused update 7(d/P) (4 reads +
-                     3 writes, same model as shard_bench) + d unflatten
-    hbm   perround : resident + 2(k+1)d boundary pack/unpack traffic
+    uplink f32     : reduce-scatter of [g, clean] = 2d f32 words
+                     = 8d bytes
+    uplink int8    : all-to-all of 2 int8 payload rows + 2 per-128-
+                     block f32 scale rows = 2d + d/16 bytes  (~3.9x
+                     fewer than f32)
+    comms resident : 4d (gather w, always f32) + uplink
+    comms perround : resident + 4(k+1)d boundary materialisation of
+                     the k state slabs + params the pytree API gathers
+                     every call
+    hbm   resident : 4x [MAC (N/P + 2)d + fused update 7(d/P) (4 reads
+                     + 3 writes, same model as shard_bench) + d
+                     unflatten]
+    hbm   perround : resident + 8(k+1)d boundary pack/unpack traffic
 
 So for adam the shipped per-round pytree loop moves 2x the collective
-bytes and ~1.5x the HBM bytes of the resident loop. (The PR-2
-implementation this PR deleted — full psum of [g, clean] plus a
-masked-psum regather of every row — moved 2*2d + 2(k+1)d = 10d words,
-3.3x the resident loop; it no longer exists to time.)
+bytes of the resident loop, and the int8 uplink cuts the resident
+loop's MAC bytes ~3.9x (total collective bytes ~2.0x, the f32 model
+broadcast being the survivor). (The PR-2 implementation PR 3 deleted —
+full psum of [g, clean] plus a masked-psum regather of every row —
+moved 2*2d + 2(k+1)d = 10d f32 words, 3.3x the resident loop; it no
+longer exists to time.)
 
     PYTHONPATH=src python -m benchmarks.train_loop_bench --sizes 16384
 """
@@ -57,23 +67,34 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
-                resident: bool) -> dict:
-    """Per-device, per-round f32 traffic models (bytes).
+                resident: bool, uplink: str = "f32") -> dict:
+    """Per-device, per-round traffic models (bytes).
 
     ``state_rows`` is the optimizer-slab count (2 for adam: delta, nu);
     the per-round pytree API regathers/repacks those plus the params row.
+    ``uplink`` sets the MAC wire format: the f32 reduce-scatter carries
+    2 rows of d 4-byte words, the int8 all-to-all carries 2 rows of d
+    1-byte codewords + 2 rows of d/128 4-byte scales.
     """
     d, p = n_params, n_dev
     boundary_rows = state_rows + 1
-    if resident:
-        comms = (d + 2 * d) if p > 1 else 0
-        hbm = d * (n_clients // p + 2) + 7 * d // p + d
+    if p == 1:
+        mac = 0
+    elif uplink == "int8":
+        mac = 2 * d + 2 * (d // 128) * 4
     else:
-        comms = (d + 2 * d + boundary_rows * d) if p > 1 else 0
-        hbm = (d * (n_clients // p + 2) + 7 * d // p + d
-               + 2 * boundary_rows * d)
-    return {"comms_bytes_per_round": 4 * comms,
-            "hbm_bytes_est": 4 * hbm}
+        mac = 2 * d * 4
+    gather = 4 * d if p > 1 else 0
+    if resident:
+        comms = gather + mac
+        hbm = 4 * (d * (n_clients // p + 2) + 7 * d // p + d)
+    else:
+        comms = gather + mac + (4 * boundary_rows * d if p > 1 else 0)
+        hbm = 4 * (d * (n_clients // p + 2) + 7 * d // p + d
+                   + 2 * boundary_rows * d)
+    return {"comms_bytes_per_round": comms,
+            "uplink_bytes_per_round": mac,
+            "hbm_bytes_est": hbm}
 
 
 def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
@@ -82,12 +103,14 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     import jax.numpy as jnp
     from benchmarks.kernel_bench import _round_step_case
     from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                            init_server, init_train_state,
+                            UplinkConfig, init_server, init_train_state,
                             make_round_step, make_slab_round_runner)
     from repro.launch.mesh import make_client_mesh
 
     params, loss_fn, batches = _round_step_case(n_params, n_clients)
-    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    channels = {u: OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                                    uplink=UplinkConfig(mode=u))
+                for u in ("f32", "int8")}
     ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
     fl = FLConfig(n_clients=n_clients)
     k_rows = 2   # adam: delta, nu
@@ -99,18 +122,19 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
         n_dev *= s
     records = []
 
-    def record(name, backend, variant, us_total, p):
+    def record(name, backend, variant, us_total, p, uplink):
         us_round = us_total / rounds
         byt = _loop_bytes(n_params, n_clients, p, k_rows,
-                          variant == "resident")
+                          variant == "resident", uplink)
         records.append(dict(
-            name=name, backend=backend, variant=variant, n_params=n_params,
-            n_clients=n_clients, rounds=rounds,
+            name=name, backend=backend, variant=variant, uplink=uplink,
+            n_params=n_params, n_clients=n_clients, rounds=rounds,
             mesh="x".join(str(s) for s in mesh_shape) if p > 1 else "1",
             us_per_round=us_round, us_per_call=us_round,
             rounds_per_sec=1e6 / us_round, **byt,
             derived=(f"rounds_per_sec={1e6 / us_round:.2f};"
                      f"comms_bytes={byt['comms_bytes_per_round']};"
+                     f"uplink_bytes={byt['uplink_bytes_per_round']};"
                      f"hbm_bytes={byt['hbm_bytes_est']}")))
 
     def timeit(fn):
@@ -124,16 +148,23 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     for backend, mesh, p in (("pallas", None, 1),
                              ("pallas_sharded", make_client_mesh(mesh_shape),
                               n_dev)):
-        # resident: R rounds, one scanned dispatch, state stays slabs
-        run = make_slab_round_runner(loss_fn, ch, ad, fl, backend=backend,
-                                     mesh=mesh)
-        st0 = init_train_state(ad, params, shards=p)
-        us = timeit(lambda: run(st0, keys, stacked))
-        record(f"train_loop_{backend}_resident_{n_params}", backend,
-               "resident", us, p)
+        # resident: R rounds, one scanned dispatch, state stays slabs;
+        # timed per uplink format (the int8 column is what shows the
+        # ~4x MAC-byte cut on the sharded mesh).
+        for uplink in ("f32", "int8"):
+            run = make_slab_round_runner(loss_fn, channels[uplink], ad, fl,
+                                         backend=backend, mesh=mesh)
+            st0 = init_train_state(ad, params, shards=p)
+            us = timeit(lambda: run(st0, keys, stacked))
+            suffix = "" if uplink == "f32" else "_int8"
+            record(f"train_loop_{backend}_resident{suffix}_{n_params}",
+                   backend, "resident", us, p, uplink)
 
         # per-round pytree API: pack/convert at every round boundary
-        rs = make_round_step(loss_fn, ch, ad, fl, backend=backend, mesh=mesh)
+        # (f32 only — the boundary-materialisation cost it isolates is
+        # uplink-independent)
+        rs = make_round_step(loss_fn, channels["f32"], ad, fl,
+                             backend=backend, mesh=mesh)
         s0 = init_server(params, ad)
 
         def loop(rs=rs, s0=s0):
@@ -144,7 +175,7 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
 
         us = timeit(loop)
         record(f"train_loop_{backend}_perround_{n_params}", backend,
-               "perround", us, p)
+               "perround", us, p, "f32")
     return records
 
 

@@ -1,0 +1,62 @@
+"""The int8-quantized over-the-air MAC: adam_ota convergence is
+preserved when the uplink carries int8 payloads + per-128-block f32
+scales instead of raw f32 — at ~4x fewer wire bytes per round.
+
+Runs the same ADOTA task twice (identical round keys, so both
+trajectories see the same fading and interference draws) and prints the
+loss/accuracy side by side with the per-round MAC payload sizes.
+
+    PYTHONPATH=src python examples/quantized_uplink.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, init_server, make_round_step,
+                        make_slab_spec, run_rounds)
+from repro.data import FederatedBatcher, gaussian_mixture
+from repro.models.vision import accuracy, logistic_regression
+
+N_CLIENTS = 20
+ROUNDS = 60
+
+
+def train(uplink: str):
+    data = gaussian_mixture(4000, 32, 10, seed=0)
+    model = logistic_regression(32, 10)
+    batcher = FederatedBatcher(data, N_CLIENTS, 16, dir_alpha=0.1)
+
+    channel = OTAChannelConfig(alpha=1.5, xi_scale=0.5,   # strong interference
+                               uplink=UplinkConfig(mode=uplink))
+    server = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5,
+                            beta2=0.3)
+    round_step = make_round_step(model.loss_fn, channel, server,
+                                 FLConfig(n_clients=N_CLIENTS))
+    params = model.init(jax.random.key(0))
+    state = init_server(params, server)
+
+    def batch_fn(t, key):
+        b = batcher(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    params, state, hist = run_rounds(round_step, params, state,
+                                     jax.random.key(1), batch_fn,
+                                     n_rounds=ROUNDS, log_every=20)
+    acc = accuracy(model, params, jnp.asarray(data.x), data.y)
+    spec = make_slab_spec(params)
+    wire = (spec.padded * 1 + (spec.padded // 128) * 4 if uplink == "int8"
+            else spec.padded * 4)
+    print(f"uplink={uplink:5s} final loss {hist[-1]['loss']:.4f}  "
+          f"acc {acc:.4f}  MAC payload {wire} B/round")
+    return hist[-1]["loss"], acc
+
+
+if __name__ == "__main__":
+    print("== analog f32 uplink (paper Eq. 7) ==")
+    loss_f32, acc_f32 = train("f32")
+    print("== int8 uplink (quantize-on-write MAC) ==")
+    loss_i8, acc_i8 = train("int8")
+    print(f"\naccuracy delta under the quantized MAC: "
+          f"{(acc_i8 - acc_f32) * 100:+.2f} pts "
+          "(rounding noise is tiny next to the channel noise)")

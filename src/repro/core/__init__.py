@@ -4,15 +4,17 @@ from repro.core.adaptive import (AdaptiveConfig, ServerOptimizer, ServerOptState
                                  adagrad_ota, adam_ota, amsgrad_ota,
                                  apply_slab_update, fedavg, fedavgm,
                                  make_server_optimizer, yogi_ota)
-from repro.core.channel import (OTAChannelConfig, cms_inputs, cms_transform,
-                                sample_alpha_stable, sample_fading,
-                                sample_interference, upsilon)
+from repro.core.channel import (OTAChannelConfig, UplinkConfig, cms_inputs,
+                                cms_transform, sample_alpha_stable,
+                                sample_fading, sample_interference, sr_inputs,
+                                upsilon)
 from repro.core.fl import (FLConfig, RoundMetrics, init_server,
                            make_round_step, make_sharded_round_step,
                            make_slab_round_runner, make_slab_round_step,
                            run_rounds, run_rounds_slab)
 from repro.core.ota import (add_interference, faded_loss_weights,
-                            ota_aggregate_slab, ota_aggregate_stacked, ota_psum)
+                            ota_aggregate_slab, ota_aggregate_stacked,
+                            ota_psum, uplink_sr_slab_inputs)
 from repro.core.shard import (client_axes_of, n_client_shards,
                               shard_round_step)
 from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
@@ -24,12 +26,13 @@ from repro.core.tail_index import hill_estimate, log_moment_estimate
 __all__ = [
     "AdaptiveConfig", "ServerOptimizer", "ServerOptState", "adagrad_ota",
     "adam_ota", "fedavg", "fedavgm", "make_server_optimizer", "yogi_ota",
-    "amsgrad_ota", "apply_slab_update", "OTAChannelConfig", "cms_inputs",
-    "cms_transform", "sample_alpha_stable", "sample_fading",
-    "sample_interference", "upsilon", "FLConfig", "RoundMetrics",
+    "amsgrad_ota", "apply_slab_update", "OTAChannelConfig", "UplinkConfig",
+    "cms_inputs", "cms_transform", "sample_alpha_stable", "sample_fading",
+    "sample_interference", "sr_inputs", "upsilon", "FLConfig", "RoundMetrics",
     "init_server", "make_round_step", "make_sharded_round_step", "run_rounds",
     "add_interference", "faded_loss_weights", "ota_aggregate_slab",
-    "ota_aggregate_stacked", "ota_psum", "SlabSpec", "make_slab_spec",
+    "ota_aggregate_stacked", "ota_psum", "uplink_sr_slab_inputs",
+    "SlabSpec", "make_slab_spec",
     "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",
     "hill_estimate", "log_moment_estimate", "client_axes_of",
     "n_client_shards", "shard_round_step", "SlabTrainState",

@@ -96,8 +96,10 @@ class AdaptiveConfig:
                                   # distributed over a device mesh
                                   # (repro.core.shard) — outside shard_map
                                   # this behaves like "pallas".
-    interpret: bool = True        # Pallas interpret mode (True on CPU;
-                                  # set False on real TPU).
+    interpret: Optional[bool] = None   # Pallas interpret mode; None (the
+                                       # default) auto-selects from the
+                                       # platform (compiled on TPU only;
+                                       # see repro.kernels.interpret).
 
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas", "pallas_sharded"):

@@ -16,10 +16,82 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class UplinkConfig:
+    """Static configuration of the uplink payload format (the MAC wire).
+
+    The uplink pipeline runs in five explicit stages — transmit power
+    control -> quantize -> MAC superposition -> interference injection ->
+    receiver dequantize/scale — and this config owns the *quantize /
+    dequantize* stages:
+
+    * ``mode == "f32"`` (default): the payload is the raw float32 faded
+      partial sum — exactly today's analog-OTA behaviour, bit for bit.
+      The quantize/dequantize stages are identity.
+    * ``mode == "int8"``: each transmitter quantizes its faded partial
+      sum to int8 with one float32 scale per ``block`` consecutive slab
+      entries (symmetric, scale = blockwise max|x| / 127), so the MAC
+      collective carries ~4x fewer bytes (d int8 + d/block f32 vs d
+      f32). The receiver dequantizes before the interference is applied
+      (the server's RF front end is analog either way).
+
+    Attributes:
+      mode: "f32" | "int8".
+      block: slab entries per quantization scale. Must equal the kernel
+        lane width (128): the transmit kernel computes scales on lane-
+        aligned tiles, and the shard-aligned slab padding guarantees
+        every per-device slice is a whole number of blocks.
+      stochastic_rounding: round ``x/scale`` stochastically
+        (``floor(x/s + r)`` with r ~ U[0,1), unbiased — the draws come
+        from the round key under the shared PRNG contract, so all
+        backends make identical rounding decisions) instead of
+        round-to-nearest.
+    """
+
+    mode: str = "f32"
+    block: int = 128
+    stochastic_rounding: bool = True
+
+    def __post_init__(self):
+        if self.mode not in ("f32", "int8"):
+            raise ValueError(f'unknown uplink mode {self.mode!r}; '
+                             'options: "f32", "int8"')
+        if self.block != 128:
+            raise ValueError(
+                f"uplink block must be 128 (the kernel lane width the "
+                f"transmit epilogue tiles scales over), got {self.block}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode != "f32"
+
+
+# Domain separator folded into the round key for the stochastic-rounding
+# uniforms — keeps them independent of the fading (kh) and interference
+# (kx) sub-draws, so enabling the int8 uplink cannot perturb any f32
+# draw (the f32 path stays bitwise-identical).
+SR_FOLD = 0x5A8
+
+
+def sr_inputs(key: jax.Array, shape: Tuple[int, ...],
+              dtype=jnp.float32) -> jax.Array:
+    """Uniform [0, 1) draws for the transmit quantizer's stochastic
+    rounding, keyed off the ROUND key (``fold_in(key, SR_FOLD)``).
+
+    This is the only random input of the quantize stage; like the CMS
+    (u, e) draws it is produced upstream of the kernel, so the jnp and
+    pallas backends consume literally identical rounding decisions.
+    The sharded engine folds each device's linear shard index in on top
+    (every device quantizes a different partial sum, so the draws are
+    per-transmitter, like the fading)."""
+    return jax.random.uniform(jax.random.fold_in(key, SR_FOLD), shape,
+                              dtype=dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +110,9 @@ class OTAChannelConfig:
         Rayleigh the std-dev is determined by the mean
         (sigma = mu * sqrt(4/pi - 1)); this field is ignored then.
       interference: if False, xi_t == 0 (fading-only ablation).
+      uplink: payload format of the MAC uplink (``UplinkConfig``; a bare
+        mode string like ``"int8"`` is accepted and wrapped). Defaults
+        to the f32 analog uplink — existing configs are untouched.
     """
 
     alpha: float = 1.5
@@ -60,8 +135,13 @@ class OTAChannelConfig:
                                     # MAC + cross-client psum over a mesh
                                     # (repro.core.shard) — outside
                                     # shard_map this behaves like "pallas".
-    interpret: bool = True          # Pallas interpret mode (True on CPU;
-                                    # set False on real TPU).
+    interpret: Optional[bool] = None  # Pallas interpret mode; None (the
+                                      # default) auto-selects from the
+                                      # platform — compiled on TPU,
+                                      # interpreted everywhere else
+                                      # (repro.kernels.interpret, env
+                                      # override REPRO_PALLAS_INTERPRET).
+    uplink: UplinkConfig = UplinkConfig()
 
     def __post_init__(self):
         if not (1.0 < self.alpha <= 2.0):
@@ -70,6 +150,8 @@ class OTAChannelConfig:
             raise ValueError(f"unknown fading model: {self.fading}")
         if self.backend not in ("jnp", "pallas", "pallas_sharded"):
             raise ValueError(f"unknown channel backend: {self.backend}")
+        if isinstance(self.uplink, str):
+            object.__setattr__(self, "uplink", UplinkConfig(mode=self.uplink))
 
     @property
     def fading_mean(self) -> float:

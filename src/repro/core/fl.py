@@ -24,7 +24,15 @@ PRNG draws).
 slab engine (``repro.core.shard.shard_round_step``): the client axis and
 the slab are partitioned over the mesh's client-carrying axes, each
 device runs the two fused launches on its local clients/slab shard, and
-the OTA superposition is a real cross-client ``psum``.
+the OTA superposition is a real cross-client collective.
+
+Every backend routes the MAC through the staged uplink pipeline
+(``OTAChannelConfig.uplink``, see ``repro.core.ota``): transmit power
+control -> quantize -> superposition -> interference -> receiver
+dequantize. At the default ``uplink="f32"`` the rounds are
+bitwise-identical to the pre-pipeline code; ``uplink="int8"`` carries
+int8 payloads + per-block f32 scales over the MAC (~4x fewer collective
+bytes on the sharded mesh).
 
 ``make_sharded_round_step`` is the older per-leaf distributed twin:
 clients map onto (pod, data) shard groups and step 2 becomes the

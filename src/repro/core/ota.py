@@ -32,6 +32,23 @@ interference synthesis in a single read of G. Both backends consume the
 SAME per-leaf PRNG draws (``cms_inputs`` keyed exactly like
 ``add_interference``), so they agree to f32 rounding, not just in
 distribution.
+
+**The uplink pipeline** (``OTAChannelConfig.uplink``, PR 4). The slab
+MAC is staged — transmit power control (folded into the effective
+fading draw) -> quantize -> MAC superposition -> interference injection
+-> receiver dequantize/scale. At ``uplink="f32"`` the quantize /
+dequantize stages are identity and the round still executes the
+original single fused ``ota_channel_slab`` launch, bit for bit. At
+``uplink="int8"`` the transmitter quantizes its faded partial sum to an
+int8 payload + per-128-block f32 scales in a fused quantize-on-write
+epilogue (``ota_transmit_slab``) — stochastic rounding draws come from
+the round key via ``channel.sr_inputs``, part of the shared PRNG
+contract — and the receiver dequantizes and injects the interference
+(``ota_receive_slab``). The jnp backend runs the op-mirrored ``ref``
+implementations over the same slab layout and the same draws, so jnp
+and pallas agree to within ONE quantization step per entry (f32
+summation-order differences can flip individual stochastic-rounding
+decisions; see ``kernels.ref.ota_transmit_ref``).
 """
 
 from __future__ import annotations
@@ -42,9 +59,8 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import (OTAChannelConfig, cms_inputs,
-                                sample_alpha_stable, sample_fading,
-                                sample_interference)
+from repro.core.channel import (OTAChannelConfig, cms_inputs, sample_fading,
+                                sample_interference, sr_inputs)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
 
 PyTree = Any
@@ -91,30 +107,82 @@ def _cms_slab_inputs(kx: jax.Array, spec: SlabSpec
     return u, e
 
 
+def uplink_sr_slab_inputs(key: jax.Array, spec: SlabSpec,
+                          shard_index=0) -> jax.Array:
+    """Stochastic-rounding uniforms for one transmitter's payloads.
+
+    Keyed from the ROUND key: the transmitter's linear shard index is
+    folded in first (each device quantizes a different partial sum, so
+    the draws are per-transmitter, like the fading; the single-device
+    engines are transmitter 0, which makes the (1,)-mesh consume the
+    exact same draws as the unsharded backends), then
+    ``channel.sr_inputs``'s domain separator. Returns (2, spec.padded)
+    f32 in [0, 1) — row 0 rounds the noisy faded payload, row 1 the
+    clean diagnostic payload (only the sharded engine transmits the
+    clean sum; single-device callers use row 0 and keep the shapes of
+    the draw identical across engines)."""
+    return sr_inputs(jax.random.fold_in(key, shard_index),
+                     (2, spec.padded))
+
+
+def _interference_slab_inputs(kx: jax.Array, cfg: OTAChannelConfig,
+                              spec: SlabSpec
+                              ) -> Tuple[jax.Array, jax.Array, float]:
+    """(u, e, scale) of the interference-injection stage; the disabled
+    channel degenerates to the (0, 1, 0.0) fixed point (xi == 0)."""
+    if cfg.interference:
+        u, e = _cms_slab_inputs(kx, spec)
+        return u, e, cfg.xi_scale
+    return (jnp.zeros((spec.padded,), jnp.float32),
+            jnp.ones((spec.padded,), jnp.float32), 0.0)
+
+
 def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
                        client_grads: PyTree, spec: SlabSpec
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Slab-engine OTA MAC: one fused kernel over the stacked gradients.
+    """Slab-engine OTA MAC — the staged uplink pipeline, single device.
 
     ``spec`` is the slab layout of a SINGLE client's gradient (== the
     model parameters). Returns ``(g_slab, h, grads_slab)``: the noisy
     aggregate as a (spec.padded,) f32 slab (zero tail), the fading draw
     (N,), and the stacked (N, spec.padded) f32 gradient slab (returned so
     callers can derive clean-gradient statistics without re-stacking).
-    """
-    from repro.kernels.ota_channel import ota_channel_slab
 
+    ``uplink="f32"`` executes the original single fused
+    ``ota_channel_slab`` launch (bitwise-identical to the pre-pipeline
+    code). ``uplink="int8"`` stages it: fused transmit with
+    quantize-on-write (one transmitter — the whole MAC payload is
+    quantized once), then fused receive (dequantize + interference).
+    The jnp backend runs the op-exact ``kernels.ref`` mirrors instead,
+    over the same slab layout and the same draws.
+    """
     n = jax.tree.leaves(client_grads)[0].shape[0]
     kh, kx = jax.random.split(key)
     h = sample_fading(kh, cfg, (n,))
     grads_slab = stack_to_slab(spec, client_grads)
-    if cfg.interference:
-        u, e = _cms_slab_inputs(kx, spec)
-        scale = cfg.xi_scale
-    else:
-        u = jnp.zeros((spec.padded,), jnp.float32)
-        e = jnp.ones((spec.padded,), jnp.float32)
-        scale = 0.0
+    u, e, scale = _interference_slab_inputs(kx, cfg, spec)
+
+    if cfg.uplink.quantized:
+        stochastic = cfg.uplink.stochastic_rounding
+        r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        if cfg.backend == "jnp":
+            from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
+            q, s = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
+                                    stochastic=stochastic)
+            g_slab = ota_receive_ref(q[None], s[None], u, e,
+                                     alpha=cfg.alpha, scale=scale)
+        else:
+            from repro.kernels.ota_channel import (ota_receive_slab,
+                                                   ota_transmit_slab)
+            q, s = ota_transmit_slab(grads_slab, h, quantize=True, r=r,
+                                     stochastic=stochastic,
+                                     interpret=cfg.interpret)
+            g_slab = ota_receive_slab(q[None], s[None], u, e,
+                                      alpha=cfg.alpha, scale=scale,
+                                      interpret=cfg.interpret)
+        return g_slab, h, grads_slab
+
+    from repro.kernels.ota_channel import ota_channel_slab
     g_slab = ota_channel_slab(grads_slab, h, u, e, alpha=cfg.alpha,
                               scale=scale, interpret=cfg.interpret)
     return g_slab, h, grads_slab
@@ -127,6 +195,9 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
     Dispatches on ``cfg.backend``: the jnp path maps the faded sum over
     leaves and adds per-leaf interference; the pallas path routes through
     ``ota_aggregate_slab`` (one fused kernel) and restores the pytree.
+    A quantized uplink routes through the slab pipeline on EVERY backend
+    (the payload/scale layout is a slab concept; the jnp backend uses
+    the op-exact ``kernels.ref`` mirrors inside ``ota_aggregate_slab``).
 
     Args:
       key: PRNG key for this communication round.
@@ -138,7 +209,7 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
       (g_t, h): the noisy aggregated gradient pytree (leaf shape (...)) and
       the fading draw h of shape (N,) (returned for logging/analysis).
     """
-    if cfg.backend in ("pallas", "pallas_sharded"):
+    if cfg.backend in ("pallas", "pallas_sharded") or cfg.uplink.quantized:
         spec = make_slab_spec(jax.tree.map(
             lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype),
             client_grads))
@@ -188,7 +259,18 @@ def ota_psum(local_grad: PyTree, key: jax.Array, cfg: OTAChannelConfig,
     realises the superposition; the interference is sampled from the
     *round* key (not the shard key) and hence is identical on all shards,
     exactly like the single RF front end of the server.
+
+    This legacy per-leaf collective predates the staged uplink pipeline
+    and only speaks the analog f32 wire; the quantized uplink is a slab
+    concept (per-128-block payload/scale layout) and lives in
+    ``repro.core.shard``. Refuse rather than silently run f32.
     """
+    if cfg.uplink.quantized:
+        raise NotImplementedError(
+            "ota_psum / make_sharded_round_step do not implement the "
+            f"quantized uplink (uplink={cfg.uplink.mode!r}); use the "
+            "slab engine (backend='pallas_sharded', repro.core.shard) "
+            "for the int8 MAC")
     axis_names = tuple(axis_names)
     n = math.prod(jax.lax.psum(1, a) for a in axis_names)
     idx = linear_shard_index(axis_names)

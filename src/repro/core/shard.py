@@ -17,16 +17,24 @@ Steady-state round, per device (``make_shard_slab_step`` /
    full-model collective left in the loop; ~1 slab of ring traffic vs
    the 2(k+1) slabs the PR-2 masked-psum regather moved).
 2. The device's N/P local clients compute gradients on the materialised
-   pytree; ONE fused ``ota_channel_slab`` launch forms the faded
+   pytree; ONE fused ``ota_transmit_slab`` launch forms the faded
    partial sum ``(1/N) sum_{n local} h_n G_n`` over the full slab
-   width.
-3. ``psum_scatter`` completes the MAC *and* delivers each device only
-   its own slab slice of the superposition (half the ring traffic of
-   the full psum the PR-2 path used, and no full-width result anywhere).
-4. The CMS interference is synthesized per slab slice: the (u, e)
-   draws are made at full width from the SAME per-leaf keying as the
-   single-device backends (PRNG is compute, not communication), then
-   sliced, and the branch-free CMS transform runs on the slice only.
+   width (at ``uplink="int8"`` the launch ends in the quantize-on-write
+   epilogue: int8 payload + one f32 scale per 128 entries).
+3. The MAC superposition: at ``uplink="f32"`` a ``psum_scatter``
+   completes the MAC *and* delivers each device only its own slab slice
+   (half the ring traffic of the full psum the PR-2 path used, no
+   full-width result anywhere). At ``uplink="int8"`` the wire carries
+   the quantized payloads instead — an ``all_to_all`` hands every
+   device the P payload blocks addressed to its slice (~4x fewer bytes;
+   int8 codewords with per-transmitter scales cannot be summed on the
+   wire, so the reduction happens after dequantization in step 4).
+4. The receive stage, on this slice only: dequantize + superpose the P
+   payload rows (int8; f32 arrives already summed) and inject the CMS
+   interference. The (u, e) draws are made at full width from the SAME
+   per-leaf keying as the single-device backends (PRNG is compute, not
+   communication), then sliced; the branch-free CMS transform runs on
+   the slice only.
 5. ONE fused ``adaptive_update_slab`` launch updates the device's
    resident w/Delta/nu slices in place. Nothing is regathered: the
    next round starts from the slices.
@@ -47,12 +55,23 @@ single-device path and then *sliced*, never re-keyed per shard:
   (``fold_in(kx, leaf_index)``), so the values of every real slab entry
   are independent of the padded length — specs built with different
   ``shards`` (hence different padding) agree on every real entry.
+* stochastic rounding (``uplink="int8"`` only):
+  ``uplink_sr_slab_inputs(key, spec, shard_index)`` — per TRANSMITTER
+  (each device quantizes a different partial sum), the single-device
+  engines being transmitter 0, so the (1,)-mesh consumes exactly the
+  single-device draws.
 
 Hence jnp, pallas and pallas_sharded consume literally the same noise
-and differ only by float32 summation order (reduce-scatter of P partial
-sums vs one in-kernel reduction) — multi-round trajectory parity holds
-to ~1e-7 relative, tested at 1e-5 over >= 5 rounds
-(tests/test_shard_roundstep.py, repro.launch.shard_check).
+and at ``uplink="f32"`` differ only by float32 summation order
+(reduce-scatter of P partial sums vs one in-kernel reduction) —
+multi-round trajectory parity holds to ~1e-7 relative, tested at 1e-5
+over >= 5 rounds (tests/test_shard_roundstep.py,
+repro.launch.shard_check). At ``uplink="int8"`` quantization is
+per-transmitter, so P-shard trajectories agree with the single-device
+quantized engines to quantization-error order (one int8 quantum per
+payload entry per round), not f32 rounding — tested with error bounds
+(tests/test_uplink.py, ``shard_check --uplink int8``); the (1,)-mesh
+remains bitwise-equal to the single-device pallas engine.
 
 ``shard_round_step`` keeps the PR-2 pytree-in/pytree-out signature for
 drop-in use by ``make_round_step(backend="pallas_sharded")``: it packs
@@ -76,7 +95,8 @@ from repro.compat import shard_map
 from repro.core.adaptive import AdaptiveConfig, slab_update_slabs
 from repro.core.channel import OTAChannelConfig, cms_transform, sample_fading
 from repro.core.fl import FLConfig, RoundMetrics, _client_update
-from repro.core.ota import _cms_slab_inputs, linear_shard_index
+from repro.core.ota import (_cms_slab_inputs, _interference_slab_inputs,
+                            linear_shard_index, uplink_sr_slab_inputs)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, \
     stack_to_slab, tree_to_slab
 from repro.core.slab_state import (SlabTrainState, pack_train_state,
@@ -120,18 +140,120 @@ def all_gather_slab(x: jax.Array, axes: Tuple[str, ...],
     return x
 
 
+def exchange_uplink_payload(x: jax.Array, axes: Tuple[str, ...],
+                            axis_sizes: Tuple[int, ...]) -> jax.Array:
+    """The slice hand-off of the quantized MAC: a (possibly multi-axis)
+    ``all_to_all`` on the leading per-destination dimension.
+
+    ``x`` has shape (P, ...) where row p is this transmitter's payload
+    block addressed to client-shard p (``linear_shard_index`` order,
+    first axis major — the same layout ``psum_scatter_slab`` scatters).
+    Returns (P, ...) where row q is the block received FROM shard q:
+    the wire moves the quantized payload bytes, and the *superposition*
+    happens after dequantization on the receiving device — a quantized
+    MAC cannot sum int8 codewords with per-transmitter scales on the
+    wire, so the reduce-scatter decomposes into all-to-all + local
+    dequantized reduction (the receive kernel).
+
+    Chaining per-axis ``all_to_all`` calls on a (A, B, ..., rest) view
+    (axis i split and re-concatenated at position i) routes row
+    (a, b, ...) to mesh coordinate (a, b, ...), matching the row-major
+    linear shard index exactly.
+    """
+    rest = x.shape[1:]
+    x = x.reshape(tuple(axis_sizes) + rest)
+    for i, a in enumerate(axes):
+        x = jax.lax.all_to_all(x, a, split_axis=i, concat_axis=i)
+    return x.reshape((-1,) + rest)
+
+
+def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
+                 h_loc: jax.Array, key: jax.Array, kx: jax.Array,
+                 idx: jax.Array, spec: SlabSpec, axes: Tuple[str, ...],
+                 axis_sizes: Tuple[int, ...], n_total: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """The quantized MAC, per device (call inside ``shard_map``).
+
+    Stages quantize -> superposition -> interference -> dequantize of
+    the uplink pipeline at ``uplink="int8"``:
+
+    1. ONE fused transmit launch per payload quantizes this device's
+       faded partial sum (and the clean diagnostic sum — it rides the
+       same wire, so the grad-norm metric reflects the quantized
+       channel) to int8 with per-128-block f32 scales, stochastic
+       rounding drawn from the round key (shard index folded in — the
+       draws are per-transmitter, like the fading).
+    2. ``exchange_uplink_payload`` hands each device the P payload
+       blocks addressed to its slab slice — the wire carries 1-byte
+       codewords + d/128 scales instead of 4-byte floats (~4x less
+       ring traffic than the f32 ``psum_scatter``).
+    3. ONE fused receive launch per payload dequantizes + superposes
+       the P rows and injects the CMS interference (clean payload:
+       scale 0) on the slice only.
+
+    Returns ``(g_slice, clean_slice)``, both (spec.shard_len,) f32.
+    """
+    from repro.kernels.ota_channel import (LANE, ota_receive_slab,
+                                           ota_transmit_slab)
+
+    n_shards = math.prod(axis_sizes)
+    shard_len = spec.shard_len
+    sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
+                                                shard_len)
+    stochastic = channel_cfg.uplink.stochastic_rounding
+    if stochastic:
+        r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
+        r_noisy, r_clean = r2[0], r2[1]
+    else:
+        r_noisy = r_clean = None
+
+    q_noisy, s_noisy = ota_transmit_slab(
+        g_stack, h_loc, n_total=n_total, quantize=True, r=r_noisy,
+        stochastic=stochastic, interpret=channel_cfg.interpret)
+    ones = jnp.ones((g_stack.shape[0],), jnp.float32)
+    q_clean, s_clean = ota_transmit_slab(
+        g_stack, ones, n_total=1, quantize=True, r=r_clean,
+        stochastic=stochastic, interpret=channel_cfg.interpret)
+
+    # Rows addressed per destination slice, exchanged over the wire.
+    payload = jnp.stack([q_noisy, q_clean]).reshape(
+        2, n_shards, shard_len).transpose(1, 0, 2)        # (P, 2, len)
+    scales = jnp.stack([s_noisy, s_clean]).reshape(
+        2, n_shards, shard_len // LANE).transpose(1, 0, 2)
+    payload = exchange_uplink_payload(payload, axes, axis_sizes)
+    scales = exchange_uplink_payload(scales, axes, axis_sizes)
+
+    # Full-width draws (or the disabled channel's (0, 1, 0.0) fixed
+    # point), sliced — same helper as the single-device engines.
+    u, e, xi_scale = _interference_slab_inputs(kx, channel_cfg, spec)
+    u, e = sl(u), sl(e)
+    g_slice = ota_receive_slab(
+        payload[:, 0], scales[:, 0], u, e, alpha=channel_cfg.alpha,
+        scale=xi_scale, interpret=channel_cfg.interpret)
+    clean_slice = ota_receive_slab(
+        payload[:, 1], scales[:, 1], jnp.zeros_like(u), jnp.ones_like(e),
+        alpha=channel_cfg.alpha, scale=0.0,
+        interpret=channel_cfg.interpret)
+    return g_slice, clean_slice
+
+
 def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                      adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
-                     axes: Tuple[str, ...], n_shards: int, spec: SlabSpec):
+                     axes: Tuple[str, ...], axis_sizes: Tuple[int, ...],
+                     spec: SlabSpec):
     """Per-device resident round: slices in, slices out (call inside
-    ``shard_map``). Exactly one ``ota_channel_slab`` and one
-    ``adaptive_update_slab`` launch per device, one ``all_gather`` (the
-    model broadcast) and one ``psum_scatter`` (the MAC) per round."""
+    ``shard_map``). One transmit and one ``adaptive_update_slab``
+    launch per device, one ``all_gather`` (the model broadcast) and one
+    MAC collective per round — ``psum_scatter`` of the f32 partial sums
+    at ``uplink="f32"``, an ``all_to_all`` of int8 payloads + per-block
+    f32 scales (~4x fewer wire bytes) at ``uplink="int8"``."""
     n = fl_cfg.n_clients
+    n_shards = math.prod(axis_sizes)
     n_local = n // n_shards
     shard_len = spec.shard_len
     client_fn = _client_update(loss_fn, fl_cfg)
     has_cast = any(dt != jnp.float32 for dt in spec.dtypes)
+    uplink = channel_cfg.uplink
 
     def round_body(step, w_slice, opt_slices, key, local_batches):
         idx = linear_shard_index(axes)
@@ -142,35 +264,39 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
         w_full = all_gather_slab(w_slice, axes)
         params = slab_to_tree(spec, w_full)
 
-        # --- 2. local client compute + fused partial MAC --------------
+        # --- 2. local client compute + power control (in h) -----------
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
                                                                local_batches)
         kh, kx = jax.random.split(key)
         h = sample_fading(kh, channel_cfg, (n,))
         h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
         g_stack = stack_to_slab(spec, grads)              # (n_local, padded)
-        from repro.kernels.ota_channel import ota_channel_slab
-        zeros = jnp.zeros((spec.padded,), jnp.float32)
-        partial = ota_channel_slab(
-            g_stack, h_loc, zeros, jnp.ones_like(zeros),
-            alpha=channel_cfg.alpha, scale=0.0, n_total=n,
-            interpret=channel_cfg.interpret)
-        clean_part = jnp.sum(g_stack, axis=0)
 
-        # --- 3. the superposition: reduce-scatter == MAC + slice ------
-        both = psum_scatter_slab(jnp.stack([partial, clean_part]), axes,
-                                 dim=1)                   # (2, shard_len)
-        g_slice, clean_slice = both[0], both[1]
+        if uplink.quantized:
+            g_slice, clean_slice = _int8_uplink(
+                channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
+                axis_sizes, n)
+        else:
+            # Fused transmit: the faded partial sum over the local
+            # client rows, full slab width, analog (f32) wire format.
+            from repro.kernels.ota_channel import ota_transmit_slab
+            partial = ota_transmit_slab(g_stack, h_loc, n_total=n,
+                                        interpret=channel_cfg.interpret)
+            clean_part = jnp.sum(g_stack, axis=0)
 
-        # --- 4. interference, synthesized on this slice only ----------
-        if channel_cfg.interference:
-            # Full-width per-leaf draws (identical to the single-device
-            # backends — PRNG is compute, not comms), CMS transform on
-            # the slice; added once, post-reduce — the server's single
-            # RF front end.
-            u, e = _cms_slab_inputs(kx, spec)
-            g_slice = g_slice + channel_cfg.xi_scale * cms_transform(
-                sl(u), sl(e), channel_cfg.alpha)
+            # The superposition: reduce-scatter == MAC + slice hand-off.
+            both = psum_scatter_slab(jnp.stack([partial, clean_part]),
+                                     axes, dim=1)         # (2, shard_len)
+            g_slice, clean_slice = both[0], both[1]
+
+            # Interference, synthesized on this slice only: full-width
+            # per-leaf draws (identical to the single-device backends —
+            # PRNG is compute, not comms), CMS transform on the slice;
+            # added once, post-reduce — the server's single RF front end.
+            if channel_cfg.interference:
+                u, e = _cms_slab_inputs(kx, spec)
+                g_slice = g_slice + channel_cfg.xi_scale * cms_transform(
+                    sl(u), sl(e), channel_cfg.alpha)
 
         # --- 5. fused server update on the RESIDENT slices ------------
         if has_cast:
@@ -194,7 +320,8 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     return round_body
 
 
-def _validate_mesh(fl_cfg: FLConfig, mesh) -> Tuple[Tuple[str, ...], int]:
+def _validate_mesh(fl_cfg: FLConfig, mesh
+                   ) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
     axes = client_axes_of(mesh)
     if not axes:
         raise ValueError("mesh has no client-carrying axes (all axes are "
@@ -206,7 +333,7 @@ def _validate_mesh(fl_cfg: FLConfig, mesh) -> Tuple[Tuple[str, ...], int]:
         raise ValueError(
             f"n_clients={n} must be divisible by the mesh's client-shard "
             f"count {n_shards} (axes {axes} of mesh shape {dict(mesh.shape)})")
-    return axes, n_shards
+    return axes, tuple(mesh.shape[a] for a in axes)
 
 
 def _check_spec_shards(spec: SlabSpec, n_shards: int) -> None:
@@ -230,12 +357,13 @@ def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
     No full-model regather happens: the round ends with the updated
     slices in place.
     """
-    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+    axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
+    n_shards = math.prod(axis_sizes)
 
     def step(state: SlabTrainState, key, client_batches):
         _check_spec_shards(state.spec, n_shards)
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
-                                axes, n_shards, state.spec)
+                                axes, axis_sizes, state.spec)
         sharded = shard_map(
             body, mesh,
             in_specs=(P(), P(axes), P(axes), P(), P(axes)),
@@ -258,12 +386,13 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
     whole R-round trajectory executes with zero full-model regathers and
     zero host round trips; metrics come back stacked (R,).
     """
-    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+    axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
+    n_shards = math.prod(axis_sizes)
 
     def run(state: SlabTrainState, keys, client_batches):
         _check_spec_shards(state.spec, n_shards)
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
-                                axes, n_shards, state.spec)
+                                axes, axis_sizes, state.spec)
 
         def scan_rounds(step0, w_slice, opt_slices, keys, batches):
             def scanned(carry, xs):
@@ -301,7 +430,8 @@ def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
     multi-round training should keep the ``SlabTrainState`` resident via
     ``make_shard_slab_step``/``make_shard_slab_runner`` instead.
     """
-    axes, n_shards = _validate_mesh(fl_cfg, mesh)
+    axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
+    n_shards = math.prod(axis_sizes)
     inner = make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
                                  mesh, jit=False)
 

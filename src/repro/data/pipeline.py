@@ -8,7 +8,7 @@ round t, the stacked per-client batches expected by
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import numpy as np
 

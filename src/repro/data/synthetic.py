@@ -7,8 +7,6 @@ distribution for the LM tasks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
-
 import numpy as np
 
 

@@ -59,6 +59,7 @@ from jax.experimental import pallas as pl
 # the tree.map reference. (Import is cycle-safe: core.adaptive pulls in
 # this module only lazily, inside apply_slab_update.)
 from repro.core.adaptive import _abs_pow
+from repro.kernels.interpret import resolve_interpret
 
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256     # (256, 128) f32 tile = 128 KiB per operand
@@ -115,7 +116,8 @@ def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
                          beta1: float, beta2: float, alpha: float, eps: float,
                          mode: str, nu_max: Optional[jax.Array] = None,
                          block_rows: int = DEFAULT_BLOCK_ROWS,
-                         interpret: bool = True) -> Tuple[jax.Array, ...]:
+                         interpret: Optional[bool] = None
+                         ) -> Tuple[jax.Array, ...]:
     """Fused server update on a 1-D parameter slab (any length; padded to
     lanes internally).
 
@@ -127,6 +129,7 @@ def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
     """
     if mode not in MODES:
         raise ValueError(f"unknown update mode {mode!r}; options: {MODES}")
+    interpret = resolve_interpret(interpret)
     n = g.shape[0]
     rows = -(-n // LANE)
     rows_pad = -(-rows // block_rows) * block_rows

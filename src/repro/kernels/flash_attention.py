@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -73,9 +75,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     bq: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Sq, H, D); k, v: (B, Sk, K, D) with H % K == 0.
-    Returns (B, Sq, H, D) in q.dtype."""
+    Returns (B, Sq, H, D) in q.dtype. ``interpret=None`` auto-selects
+    Pallas interpret mode from the platform (compiled on TPU only)."""
+    interpret = resolve_interpret(interpret)
     b, sq, h, d = q.shape
     _, sk, kh, _ = k.shape
     assert h % kh == 0

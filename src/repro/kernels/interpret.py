@@ -1,0 +1,52 @@
+"""Pallas interpret-mode policy, shared by every kernel in this package.
+
+The kernels target TPU; everywhere else (the CPU containers the tests
+and CI run on, GPU hosts) they must run in Pallas interpret mode. The
+old hardcoded ``interpret=True`` defaults made compiled TPU runs opt-in
+at every call site; instead the default is now ``None`` = *auto*:
+compiled (``interpret=False``) when jax's default backend is a TPU,
+interpreted otherwise.
+
+Resolution order for ``resolve_interpret(flag)``:
+
+1. an explicit ``True``/``False`` (kernel kwarg or config field) wins;
+2. the ``REPRO_PALLAS_INTERPRET`` environment variable (``1/true/on``
+   or ``0/false/off``) overrides the platform default — the escape
+   hatch for forcing interpret mode on a TPU (kernel debugging) or
+   asserting compiled mode in a launch script;
+3. otherwise ``jax.default_backend() != "tpu"``.
+
+The jax backend query initialises jax's platform on first use, which is
+safe here: resolution happens at kernel-call (trace) time, long after
+any ``--xla_force_host_platform_device_count`` override was installed.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    """Platform/env default: interpret everywhere except on real TPU."""
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        if env.lower() in _TRUE:
+            return True
+        if env.lower() in _FALSE:
+            return False
+        raise ValueError(
+            f"{INTERPRET_ENV}={env!r} is not a boolean; use one of "
+            f"{_TRUE + _FALSE}")
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """An explicit flag wins; ``None`` means auto (env, then platform)."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -1,14 +1,32 @@
-"""Fused OTA-channel Pallas kernel: fading-scaled client-gradient
-reduction + Chambers-Mallows-Stuck alpha-stable interference, one pass.
+"""OTA uplink Pallas kernels: the MAC as a staged transmit/receive pair.
 
-    out[d] = (1/N) * sum_n h[n] * G[n, d] + scale * CMS(u[d], e[d]; alpha)
+The uplink pipeline (paper Eq. 7, restructured in PR 4) is
 
-In the OTA simulator this is the server-side "RF front end": N stacked
-client gradients are combined under per-client fading and the heavy-tail
-interference is synthesized in the same VMEM tile (uniform angles u and
-Exp(1) draws e are produced upstream by the TPU PRNG; the CMS transform
-itself is branch-free VPU math: sin/cos/pow). Memory-bound in G — the
-kernel reads each gradient element exactly once.
+    transmit power control -> quantize -> MAC superposition
+        -> interference injection -> receiver dequantize/scale
+
+and this module owns the kernel stages of it:
+
+* ``ota_transmit_slab`` — the transmitter: the fading-scaled partial
+  reduction ``(1/N) sum_n h[n] * G[n, :]`` over this transmitter's
+  stacked client gradients (power control is upstream, folded into the
+  effective ``h``). With ``quantize=True`` the kernel runs a fused
+  *quantize-on-write epilogue*: each (1, LANE) group of the partial sum
+  gets one f32 scale (symmetric, max|x|/127) and is written as int8
+  with stochastic rounding (``floor(x/s + r)``, r ~ U[0,1) produced
+  upstream so all backends make identical rounding decisions) — the
+  payload leaves the kernel already in wire format, one read of G.
+
+* ``ota_receive_slab`` — the server's RF front end: dequantizes R
+  payload rows (R transmitters after the collective; R == 1 single-
+  device), sums them, and injects the Chambers-Mallows-Stuck
+  alpha-stable interference in the same VMEM tile.
+
+* ``ota_channel_slab`` — the original single-launch fused f32 channel
+  (faded reduction + CMS interference, one pass); still the f32 fast
+  path: splitting it would buy nothing when there is no wire format to
+  stage around, and keeping it guarantees the ``uplink="f32"`` round is
+  bitwise-identical to the pre-pipeline code.
 
 The CMS math is ``repro.core.channel.cms_transform`` — the same guarded
 expression the jnp sampler uses, so kernel and reference agree bitwise
@@ -20,28 +38,40 @@ the same (1, 2] range as ``OTAChannelConfig``.
 
 Grid: 1-D over column blocks of size (N, block_cols); the N reduction
 runs inside the tile (N = clients-per-shard is small, <= a few hundred).
+``interpret=None`` auto-selects Pallas interpret mode from the platform
+(``repro.kernels.interpret``): compiled on TPU, interpreted elsewhere.
 
 Sharded slab engine: when the round is distributed over a device mesh
-(``repro.core.shard``), each device launches this kernel on its LOCAL
-client shard only, passing ``n_total`` = the global client count so the
-1/N normalisation matches the single-device launch; the cross-device
-``psum`` then completes the superposition (the mesh is the multiple-
-access channel). The grid covers just the local rows/columns, so the
-launch cost scales down with the shard, not the model.
+(``repro.core.shard``), each device launches the transmit kernel on its
+LOCAL client shard only, passing ``n_total`` = the global client count
+so the 1/N normalisation matches the single-device launch; the
+cross-device collective then completes the superposition (the mesh is
+the multiple-access channel) and the receive kernel runs on each
+device's slab slice. The grid covers just the local rows/columns, so
+the launch cost scales down with the shard, not the model.
+
+A compiled-TPU variant of the quantize epilogue could draw its rounding
+bits in-kernel (``pltpu.prng_random_bits`` + ``pltpu.stochastic_round``)
+instead of streaming the upstream uniforms; that breaks the cross-
+backend PRNG contract the parity suites pin, so it is left as a
+TPU-perf follow-up.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.channel import cms_transform
+from repro.kernels.interpret import resolve_interpret
 
 LANE = 128
 DEFAULT_BLOCK_COLS = 512
+INT8_MAX = 127.0
 
 
 def _ota_kernel(g_ref, h_ref, u_ref, e_ref, out_ref, *, alpha: float,
@@ -57,10 +87,10 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
                      e: jax.Array, *, alpha: float, scale: float,
                      n_total: int | None = None,
                      block_cols: int = DEFAULT_BLOCK_COLS,
-                     interpret: bool = True) -> jax.Array:
-    """grads: (N, d) stacked client gradients; h: (N,) fading draws;
-    u: (d,) uniform angles in (-pi/2, pi/2); e: (d,) Exp(1) draws.
-    Returns the aggregated noisy gradient (d,) float32.
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Fused f32 channel: grads (N, d) stacked client gradients, h (N,)
+    fading draws, u (d,) uniform angles in (-pi/2, pi/2), e (d,) Exp(1)
+    draws. Returns the aggregated noisy gradient (d,) float32.
 
     ``n_total`` overrides the 1/N normalisation (defaults to the local
     row count N). The sharded engine passes the GLOBAL client count here
@@ -68,6 +98,7 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
     to exactly the single-device aggregate."""
     if not (1.0 < alpha <= 2.0):
         raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
+    interpret = resolve_interpret(interpret)
     n, d = grads.shape
     if n_total is None:
         n_total = n
@@ -92,4 +123,170 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
         out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
         interpret=interpret,
     )(gp, h2, up, ep)
+    return out.reshape(-1)[:d]
+
+
+# ---------------------------------------------------------------------------
+# Staged pipeline kernels: transmit (+ quantize epilogue) and receive.
+# ---------------------------------------------------------------------------
+
+def _tx_kernel(g_ref, h_ref, out_ref, *, n_clients: int):
+    g = g_ref[...].astype(jnp.float32)              # (N, bc)
+    h = h_ref[...].astype(jnp.float32)              # (N, 1)
+    out_ref[...] = jnp.sum(h * g, axis=0, keepdims=True) / n_clients
+
+
+def _tx_quant_kernel(g_ref, h_ref, r_ref, q_ref, s_ref, *, n_clients: int,
+                     stochastic: bool):
+    g = g_ref[...].astype(jnp.float32)              # (N, bc)
+    h = h_ref[...].astype(jnp.float32)              # (N, 1)
+    agg = jnp.sum(h * g, axis=0, keepdims=True) / n_clients   # (1, bc)
+    bc = agg.shape[1]
+    a = agg.reshape(bc // LANE, LANE)
+    maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)       # (nb, 1)
+    # All-zero blocks (the slab's zero tail) keep scale 1 -> payload 0,
+    # so quantization preserves the zero-padding contract exactly.
+    s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
+    y = a / s
+    if stochastic:
+        y = jnp.floor(y + r_ref[...].reshape(bc // LANE, LANE))
+    else:
+        y = jnp.round(y)
+    q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    q_ref[...] = q.reshape(1, bc)
+    s_ref[...] = s.reshape(1, bc // LANE)
+
+
+def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
+                      n_total: int | None = None, quantize: bool = False,
+                      r: Optional[jax.Array] = None, stochastic: bool = True,
+                      block_cols: int = DEFAULT_BLOCK_COLS,
+                      interpret: Optional[bool] = None):
+    """Transmit stage: one fused pass over this transmitter's gradients.
+
+    grads: (N, d) stacked client gradients; h: (N,) effective fading
+    (power control already folded in). Computes the faded partial sum
+    ``(1/n_total) sum_n h[n] grads[n]`` in one read of G.
+
+    ``quantize=False`` returns the f32 partial (d,) — the analog wire.
+    ``quantize=True`` runs the quantize-on-write epilogue and returns
+    ``(payload, scales)``: int8 (d,) and one f32 scale per LANE-wide
+    block ((d // 128,)); ``r`` must then be the (d,) uniform [0, 1)
+    stochastic-rounding draws (``repro.core.channel.sr_inputs``) unless
+    ``stochastic=False`` (round-to-nearest). d must be a multiple of
+    128 in quantized mode — every slab/slice is, by the slab padding
+    contract.
+    """
+    interpret = resolve_interpret(interpret)
+    n, d = grads.shape
+    if n_total is None:
+        n_total = n
+    h2 = h.reshape(n, 1).astype(jnp.float32)
+
+    if not quantize:
+        d_pad = -(-d // block_cols) * block_cols
+        gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
+        out = pl.pallas_call(
+            functools.partial(_tx_kernel, n_clients=n_total),
+            grid=(d_pad // block_cols,),
+            in_specs=[
+                pl.BlockSpec((n, block_cols), lambda i: (0, i)),
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+            interpret=interpret,
+        )(gp, h2)
+        return out.reshape(-1)[:d]
+
+    if d % LANE != 0:
+        raise ValueError(
+            f"quantized transmit needs d to be a multiple of {LANE} "
+            f"(the per-block scale width), got {d}; slabs satisfy this "
+            "by construction")
+    if stochastic and (r is None or r.shape != (d,)):
+        raise ValueError("stochastic rounding needs r of shape "
+                         f"({d},), got {None if r is None else r.shape}")
+    d_pad = -(-d // block_cols) * block_cols
+    gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
+    if r is None:
+        r = jnp.zeros((d,), jnp.float32)
+    rp = jnp.pad(r, (0, d_pad - d)).reshape(1, d_pad)
+
+    q, s = pl.pallas_call(
+        functools.partial(_tx_quant_kernel, n_clients=n_total,
+                          stochastic=stochastic),
+        grid=(d_pad // block_cols,),
+        in_specs=[
+            pl.BlockSpec((n, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((1, block_cols // LANE), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_pad), jnp.int8),
+            jax.ShapeDtypeStruct((1, d_pad // LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gp, h2, rp)
+    return q.reshape(-1)[:d], s.reshape(-1)[:d // LANE]
+
+
+def _rx_kernel(q_ref, s_ref, u_ref, e_ref, out_ref, *, alpha: float,
+               scale: float):
+    q = q_ref[...].astype(jnp.float32)              # (R, bc)
+    s = s_ref[...]                                  # (R, nb)
+    rows, bc = q.shape
+    deq = q.reshape(rows, bc // LANE, LANE) * s[..., None]
+    agg = jnp.sum(deq, axis=0).reshape(1, bc)       # superposed payloads
+    xi = cms_transform(u_ref[...], e_ref[...], alpha)
+    out_ref[...] = agg + scale * xi
+
+
+def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
+                     e: jax.Array, *, alpha: float, scale: float,
+                     block_cols: int = DEFAULT_BLOCK_COLS,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Receive stage: dequantize + superpose R payload rows, then inject
+    the alpha-stable interference — one fused pass.
+
+    payload: (R, d) int8 — R transmitters' wire payloads (after the MAC
+    collective each device holds the R rows addressed to its slice;
+    single-device R == 1); scales: (R, d // 128) f32 per-block scales;
+    u, e: (d,) CMS interference inputs. ``scale == 0`` disables the
+    interference (e.g. for reducing clean-gradient statistics over the
+    same wire). Returns (d,) f32.
+    """
+    if not (1.0 < alpha <= 2.0):
+        raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
+    interpret = resolve_interpret(interpret)
+    rows, d = payload.shape
+    if d % LANE != 0:
+        raise ValueError(f"receive needs d to be a multiple of {LANE}, "
+                         f"got {d}")
+    if scales.shape != (rows, d // LANE):
+        raise ValueError(f"scales must be ({rows}, {d // LANE}), "
+                         f"got {scales.shape}")
+    d_pad = -(-d // block_cols) * block_cols
+    qp = jnp.pad(payload, ((0, 0), (0, d_pad - d)))
+    sp = jnp.pad(scales, ((0, 0), (0, (d_pad - d) // LANE)))
+    up = jnp.pad(u, (0, d_pad - d)).reshape(1, d_pad)
+    ep = jnp.pad(e, (0, d_pad - d), constant_values=1.0).reshape(1, d_pad)
+
+    out = pl.pallas_call(
+        functools.partial(_rx_kernel, alpha=alpha, scale=scale),
+        grid=(d_pad // block_cols,),
+        in_specs=[
+            pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((rows, block_cols // LANE), lambda i: (0, i)),
+            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+        interpret=interpret,
+    )(qp, sp, up, ep)
     return out.reshape(-1)[:d]

@@ -78,6 +78,67 @@ def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
     return agg + scale * xi
 
 
+LANE = 128       # must match repro.kernels.ota_channel.LANE
+INT8_MAX = 127.0
+
+
+def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
+                     n_total: Optional[int] = None, quantize: bool = False,
+                     r: Optional[jax.Array] = None, stochastic: bool = True):
+    """Transmit-stage oracle: faded partial sum, optionally int8-quantized
+    with per-LANE-block f32 scales and stochastic rounding.
+
+    Mirrors ``ota_channel.ota_transmit_slab`` op for op. Note the
+    agreement contract is *one quantization step*, not bitwise: the
+    interpret-mode kernel reduces the faded sum in a (slightly)
+    different f32 order, and a one-ulp difference there can flip an
+    individual ``floor(x/s + r)`` rounding decision, which surfaces as
+    a full quantum (one scale) on that entry. Hence the int8 parity
+    tests assert per-entry error <= the entry's block scale (plus exact
+    equality on the overwhelming majority), not allclose at f32
+    rounding.
+
+    grads: (N, d); h: (N,). Returns (d,) f32, or ``(payload int8 (d,),
+    scales f32 (d // 128,))`` when ``quantize=True``.
+    """
+    n, d = grads.shape
+    if n_total is None:
+        n_total = n
+    h2 = h.reshape(n, 1).astype(jnp.float32)
+    agg = jnp.sum(h2 * grads.astype(jnp.float32), axis=0) / n_total
+    if not quantize:
+        return agg
+    if d % LANE != 0:
+        raise ValueError(f"quantized transmit needs d % {LANE} == 0, got {d}")
+    a = agg.reshape(d // LANE, LANE)
+    maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+    s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
+    y = a / s
+    if stochastic:
+        y = jnp.floor(y + r.reshape(d // LANE, LANE))
+    else:
+        y = jnp.round(y)
+    q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q.reshape(-1), s.reshape(-1)
+
+
+def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,
+                    e: jax.Array, *, alpha: float, scale: float) -> jax.Array:
+    """Receive-stage oracle: dequantize + superpose R int8 payload rows,
+    then add the CMS interference. Mirrors ``ota_channel.ota_receive_slab``
+    (op-exact, see ``ota_transmit_ref`` for why).
+
+    payload: (R, d) int8; scales: (R, d // 128) f32; u, e: (d,).
+    Returns (d,) f32.
+    """
+    rows, d = payload.shape
+    deq = (payload.astype(jnp.float32).reshape(rows, d // LANE, LANE)
+           * scales[..., None])
+    agg = jnp.sum(deq, axis=0).reshape(-1)
+    from repro.core.channel import cms_transform
+    return agg + scale * cms_transform(u, e, alpha)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         window: Optional[int] = None) -> jax.Array:

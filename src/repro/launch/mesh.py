@@ -7,8 +7,6 @@ backend init, and only ``dryrun.py`` sets the 512-host-device XLA flag.
 
 from __future__ import annotations
 
-import jax
-
 from repro.compat import make_auto_mesh
 
 

@@ -24,8 +24,18 @@ This is the executable form of the resident-engine acceptance contract
 summation order); tests/test_shard_roundstep.py runs it as a subprocess
 so the main pytest process keeps its real single-device view.
 
+``--uplink int8`` runs the same trajectories over the QUANTIZED MAC:
+the per-round jnp reference becomes the int8 oracle (op-mirrored ref
+kernels), the (1,)-mesh must stay bitwise-equal to the resident pallas
+engine, reruns must stay bitwise, and P > 1 meshes — which quantize per
+transmitter — must agree to accumulated quantization-error order
+(loose tol; the tight single-round error bounds live in
+tests/test_uplink.py).
+
     PYTHONPATH=src python -m repro.launch.shard_check \
         --meshes 1 2 4,2 --rounds 5 --tol 1e-5
+    PYTHONPATH=src python -m repro.launch.shard_check \
+        --uplink int8 --meshes 1 2 4,2 --rounds 5
 
 The XLA flag below MUST precede any jax import (jax locks the device
 count at first backend init); at least 8 host devices are forced, or
@@ -47,8 +57,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                        init_server, init_train_state, make_round_step,
-                        make_slab_round_runner, unpack_train_state)
+                        UplinkConfig, init_server, init_train_state,
+                        make_round_step, make_slab_round_runner,
+                        unpack_train_state)
 from repro.launch.mesh import make_client_mesh
 
 ALL_OPTIMIZERS = ["adagrad_ota", "adam_ota", "amsgrad_ota", "yogi_ota",
@@ -135,8 +146,22 @@ def main(argv=None) -> int:
     ap.add_argument("--optimizers", nargs="+", default=ALL_OPTIMIZERS)
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rounds", type=positive_int, default=5)
-    ap.add_argument("--tol", type=float, default=1e-5)
+    ap.add_argument("--uplink", default="f32", choices=["f32", "int8"],
+                    help="MAC payload format under test. f32 is the "
+                         "f32-rounding parity contract (tol ~1e-5). int8 "
+                         "compares the quantized engines against the jnp "
+                         "int8 oracle: the (1,)-mesh and the resident "
+                         "pallas engine consume identical draws (near-"
+                         "exact), while P > 1 meshes quantize per "
+                         "transmitter and agree only to accumulated "
+                         "quantization-error order — pass a loose --tol "
+                         "(e.g. 0.25) for those")
+    ap.add_argument("--tol", type=float, default=None,
+                    help="max relative end-of-trajectory deviation "
+                         "(default 1e-5 for --uplink f32, 0.25 for int8)")
     args = ap.parse_args(argv)
+    if args.tol is None:
+        args.tol = 1e-5 if args.uplink == "f32" else 0.25
 
     params = {
         "emb": jax.random.normal(jax.random.key(0), (7, 33)),
@@ -146,9 +171,11 @@ def main(argv=None) -> int:
     batches = jax.tree.map(
         lambda p: jax.random.normal(jax.random.key(3),
                                     (args.clients,) + p.shape), params)
-    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                          uplink=UplinkConfig(mode=args.uplink))
     fl = FLConfig(n_clients=args.clients)
 
+    print(f"uplink={args.uplink} rounds={args.rounds} tol={args.tol:g}")
     failures = 0
     for opt in args.optimizers:
         ad = AdaptiveConfig(optimizer=opt, lr=0.05, alpha=1.5, beta2=0.3)

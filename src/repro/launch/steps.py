@@ -16,7 +16,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

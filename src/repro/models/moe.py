@@ -13,7 +13,7 @@ the sharding constraints (baseline), and §Perf iterates on it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -184,7 +184,6 @@ def _dispatch_local(cfg: MoEConfig, router_k, gate_w, up_w, down_w, xl,
     """Per-shard MoE: tokens local to this data shard, experts local to
     this model shard; contributions from remote experts arrive via the
     psum over the model axis (token activations are replicated there)."""
-    import math as _math
     b, s, d = xl.shape
     t = b * s
     xt = xl.reshape(t, d)

@@ -17,7 +17,6 @@ cache — so rwkv6 takes the long_500k shape natively.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 import jax

@@ -18,7 +18,6 @@ the block body for training. Families:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional, Tuple
 
 import jax
@@ -29,7 +28,7 @@ from repro.models import mla as mla_mod
 from repro.models import moe as moe_mod
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (dense, dense_init, gelu_mlp, gelu_mlp_init,
+from repro.models.layers import (gelu_mlp, gelu_mlp_init,
                                  layernorm, layernorm_init, rmsnorm,
                                  rmsnorm_init, swiglu, swiglu_init)
 

@@ -10,7 +10,7 @@ conv net with the same structural ingredients as ResNet-18 (conv stem,
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple, Tuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ optimizers clients use locally, plus schedules for the server's eta.
 
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Callable, NamedTuple, Tuple
 

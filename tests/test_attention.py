@@ -1,15 +1,13 @@
 """Attention paths: chunked online-softmax == full, window masks, MLA."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.models.attention import (AttentionConfig, attend, attn_init,
-                                    decode_self_attention, init_kv_cache,
+                                    decode_self_attention,
                                     prefill_kv_cache, self_attention)
 
 

@@ -14,8 +14,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.core.adaptive as adaptive_mod
-import repro.core.ota as ota_mod
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
                         init_server, make_round_step, make_server_optimizer,
                         ota_aggregate_stacked)

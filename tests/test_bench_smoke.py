@@ -35,7 +35,14 @@ def test_quick_bench_writes_valid_round_step_json(tmp_path):
     bench_path = os.path.join(out_dir, "BENCH_round_step.json")
     assert os.path.exists(bench_path), os.listdir(out_dir)
     with open(bench_path) as f:
-        records = json.load(f)
+        payload = json.load(f)
+    # provenance stamp: the perf trajectory must be attributable
+    meta = payload["meta"]
+    assert set(meta) >= {"git_sha", "date", "config", "config_fingerprint"}
+    assert meta["git_sha"] and meta["date"].endswith("Z")
+    assert len(meta["config_fingerprint"]) == 16
+    assert meta["config"]["quick"] is True
+    records = payload["records"]
     assert isinstance(records, list) and records
 
     by_backend = {}
@@ -58,3 +65,16 @@ def test_quick_bench_writes_valid_round_step_json(tmp_path):
     # (it writes under --out instead) — guard the path logic.
     with open(os.path.join(REPO_ROOT, "BENCH_round_step.json")) as f:
         json.load(f)   # still valid JSON, untouched by this run
+
+
+def test_only_rejects_unknown_bench_name(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick",
+         "--only", "round_stpe", "--out", str(tmp_path / "bench")],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=300)
+    assert res.returncode != 0
+    assert "unknown bench name 'round_stpe'" in res.stderr
+    assert "round_step" in res.stderr   # the valid names are listed

@@ -1,13 +1,17 @@
 """OTA channel statistics: alpha-stable sampler, fading, Upsilon."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.channel import (OTAChannelConfig, sample_alpha_stable,
-                                sample_fading, sample_interference, upsilon)
+from repro.core import ota_aggregate_stacked
+from repro.core.channel import (OTAChannelConfig, UplinkConfig,
+                                sample_alpha_stable, sample_fading,
+                                sample_interference, upsilon)
 from repro.core.tail_index import log_moment_estimate
 
 N = 200_000
@@ -96,3 +100,27 @@ def test_power_control_truncated_inversion():
     assert set(vals.tolist()) <= {0.0, 1.0}
     # Rayleigh(mean 1): P[h < 0.2] ~ 3%; most clients transmit.
     assert 0.9 < float(h.mean()) <= 1.0
+
+
+@pytest.mark.parametrize("uplink", ["f32", "int8"])
+def test_power_control_parity_jnp_vs_pallas(uplink):
+    """Truncated channel inversion flows identically through the slab
+    pipeline: the pallas backend (and the quantized uplink) must see the
+    exact 0/1 effective fading the jnp path sees, on both uplinks.
+    Use enough clients that a deep fade (h == 0) actually occurs."""
+    n = 64
+    grads = {f"p{i}": jax.random.normal(jax.random.key(60 + i), (n,) + s)
+             for i, s in enumerate([(7, 19), (257,), (1,)])}
+    cfg = OTAChannelConfig(fading="rayleigh", power_control=True,
+                           pc_threshold=0.6, alpha=1.5, xi_scale=0.1,
+                           uplink=UplinkConfig(mode=uplink))
+    key = jax.random.key(11)
+    g_ref, h_ref = ota_aggregate_stacked(key, cfg, grads)
+    g_slab, h_slab = ota_aggregate_stacked(
+        key, dataclasses.replace(cfg, backend="pallas"), grads)
+    np.testing.assert_array_equal(np.asarray(h_ref), np.asarray(h_slab))
+    assert set(np.unique(np.asarray(h_ref)).tolist()) == {0.0, 1.0}
+    tol = 1e-5 if uplink == "f32" else 5e-3   # int8: one quantum/entry
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_slab)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol, atol=tol)

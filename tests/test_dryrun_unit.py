@@ -1,7 +1,6 @@
 """Dry-run machinery units (no 512-device flag needed here): HLO
 collective parsing, shape adjustment, optimizers/configs wiring."""
 
-import pytest
 
 from repro.launch.dryrun import _shape_bytes, collective_bytes
 from repro.launch.specs import (INPUT_SHAPES, LONG_CONTEXT_WINDOW,

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
                         init_server, make_round_step, run_rounds)

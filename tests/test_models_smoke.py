@@ -2,7 +2,6 @@
 forward + one train-grad step + one decode step on CPU; shapes + no NaNs.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

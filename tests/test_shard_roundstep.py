@@ -141,9 +141,9 @@ def test_two_launches_per_device_per_round(monkeypatch):
     from repro.kernels import ota_channel as oc_mod
 
     calls = {"ota": 0, "update": 0}
-    real_ota, real_upd = oc_mod.ota_channel_slab, au_mod.adaptive_update_slab
+    real_ota, real_upd = oc_mod.ota_transmit_slab, au_mod.adaptive_update_slab
     monkeypatch.setattr(
-        oc_mod, "ota_channel_slab",
+        oc_mod, "ota_transmit_slab",
         lambda *a, **k: (calls.__setitem__("ota", calls["ota"] + 1),
                          real_ota(*a, **k))[1])
     monkeypatch.setattr(
@@ -162,6 +162,47 @@ def test_two_launches_per_device_per_round(monkeypatch):
                          mesh=make_auto_mesh((1,), ("data",)))
     rs(params, init_server(params, ad), jax.random.key(0), batches)
     assert calls == {"ota": 1, "update": 1}, calls
+
+
+@pytest.mark.parametrize("uplink", ["f32", "int8"])
+def test_power_control_on_sharded_backend(uplink):
+    """Satellite: truncated channel inversion (power_control +
+    pc_threshold) on the pallas_sharded backend — the effective 0/1
+    fading must flow through the sharded transmit/MAC exactly like the
+    jnp reference (1e-5 at f32; one quantization step at int8)."""
+    from repro.core import UplinkConfig
+    params = _params(jax.random.key(7))
+    n = 8   # enough clients that a truncated (h == 0) draw occurs
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(8), (n,) + p.shape),
+        params)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1, fading="rayleigh",
+                          power_control=True, pc_threshold=0.6,
+                          uplink=UplinkConfig(mode=uplink))
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=n)
+
+    outs = {}
+    for backend, mesh_arg in (("jnp", None),
+                              ("pallas_sharded",
+                               make_auto_mesh((1,), ("data",)))):
+        rs = make_round_step(_loss_fn, ch, ad, fl, backend=backend,
+                             mesh=mesh_arg)
+        p, s = params, init_server(params, ad)
+        for t in range(2):
+            p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(12), t),
+                         batches)
+        outs[backend] = (p, s, m)
+    p_r, s_r, m_r = outs["jnp"]
+    p_s, s_s, m_s = outs["pallas_sharded"]
+    tol = 1e-5 if uplink == "f32" else 5e-3
+    _assert_trees_close(p_r, p_s, tol)
+    _assert_trees_close(s_r.delta, s_s.delta, tol)
+    _assert_trees_close(s_r.nu, s_s.nu, tol)
+    # the truncated-inversion fading is 0/1 and identical on both paths
+    np.testing.assert_allclose(float(m_r.fading_mean),
+                               float(m_s.fading_mean), rtol=1e-6)
+    assert 0.0 < float(m_r.fading_mean) < 1.0   # some client WAS silenced
 
 
 def test_sharded_backend_validation():

@@ -89,7 +89,6 @@ def test_fsdp_shards_more():
 def test_cache_partition_specs():
     from repro.compat import make_auto_mesh
     from repro.launch.specs import cache_partition_spec
-    import jax.numpy as jnp
     cfg = get_config("qwen3-14b")
     model = build_model(cfg)
     import functools

@@ -84,8 +84,7 @@ def test_wkv_chunked_matches_naive(s, chunk):
 
 def test_rwkv_full_block_decode_matches_forward():
     """Integration: rwkv block forward == prefill + stepwise decode."""
-    from repro.models.rwkv import (channel_mix_decode, channel_mix_forward,
-                                   channel_mix_init, init_rwkv_cache,
+    from repro.models.rwkv import (init_rwkv_cache,
                                    time_mix_decode, time_mix_forward,
                                    time_mix_init)
     cfg = RWKVConfig(d_model=16, n_heads=2, d_ff=32, lora_rank=8, chunk=4)

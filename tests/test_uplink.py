@@ -1,0 +1,303 @@
+"""The staged uplink pipeline and the int8-quantized OTA MAC.
+
+Contract under test (see ``repro.core.ota`` / ``repro.kernels.ota_channel``):
+
+* ``uplink="f32"`` is the identity pipeline — covered by the existing
+  parity suites, which must pass unchanged.
+* ``uplink="int8"``: the transmit quantize-on-write epilogue produces
+  int8 payloads with per-128-block f32 scales; the per-entry
+  dequantization error is bounded by the entry's block scale
+  (``blockmax / 127``); stochastic rounding is unbiased; the zero
+  padding tail survives the wire exactly; and jnp / pallas /
+  pallas_sharded agree under the shared PRNG contract — jnp vs pallas
+  to within one quantization step per entry (f32 summation-order
+  differences may flip individual rounding decisions), the sharded
+  engine to accumulated quantization-error order (per-transmitter
+  quantization), with the (1,)-mesh bitwise-equal to the single-device
+  pallas engine (exercised via ``shard_check --uplink int8``).
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, init_server, make_round_step,
+                        make_slab_spec, ota_aggregate_stacked, ota_psum,
+                        uplink_sr_slab_inputs)
+from repro.core.slab import stack_to_slab
+from repro.kernels.ota_channel import (LANE, ota_receive_slab,
+                                       ota_transmit_slab)
+from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+SHAPES = [(3, 45), (130,), (1,), (257,)]
+N = 9
+
+
+def _stacked_grads(key=40, dtype=jnp.float32):
+    return {f"p{i}": jax.random.normal(jax.random.key(key + i), (N,) + s,
+                                       dtype)
+            for i, s in enumerate(SHAPES)}
+
+
+def _slab_case():
+    grads = _stacked_grads()
+    spec = make_slab_spec(jax.tree.map(
+        lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype), grads))
+    gs = stack_to_slab(spec, grads)
+    h = jnp.abs(jax.random.normal(jax.random.key(1), (N,))) + 0.5
+    r = uplink_sr_slab_inputs(jax.random.key(2), spec)[0]
+    return spec, gs, h, r
+
+
+def test_uplink_config_validation():
+    assert UplinkConfig().mode == "f32"
+    assert not UplinkConfig().quantized
+    assert UplinkConfig(mode="int8").quantized
+    with pytest.raises(ValueError):
+        UplinkConfig(mode="fp8")
+    with pytest.raises(ValueError):
+        UplinkConfig(block=64)
+    # a bare mode string on the channel config is coerced
+    cfg = OTAChannelConfig(uplink="int8")
+    assert isinstance(cfg.uplink, UplinkConfig) and cfg.uplink.mode == "int8"
+    # and the default leaves existing configs untouched
+    assert OTAChannelConfig().uplink == UplinkConfig()
+
+
+def test_legacy_psum_path_refuses_quantized_uplink():
+    """The pre-pipeline per-leaf collective only speaks the analog f32
+    wire; a quantized config must refuse loudly, not silently run f32."""
+    cfg = OTAChannelConfig(uplink="int8")
+    with pytest.raises(NotImplementedError, match="quantized uplink"):
+        ota_psum({"w": jnp.ones((4,))}, jax.random.key(0), cfg, ("data",))
+
+
+def test_quantization_error_bounded_by_block_scale():
+    """|dequant(quant(x)) - x| <= the entry's block scale, elementwise
+    (stochastic floor moves x/s by < 1)."""
+    spec, gs, h, r = _slab_case()
+    partial = ota_transmit_ref(gs, h)
+    q, s = ota_transmit_ref(gs, h, quantize=True, r=r)
+    deq = ota_receive_ref(q[None], s[None], jnp.zeros_like(partial),
+                          jnp.ones_like(partial), alpha=1.5, scale=0.0)
+    bound = np.repeat(np.asarray(s), LANE)
+    err = np.abs(np.asarray(deq) - np.asarray(partial))
+    assert np.all(err <= bound * (1 + 1e-6) + 1e-12), float(np.max(err / bound))
+    # the error is not trivially zero (quantization actually happened)
+    assert float(np.max(err)) > 0
+
+
+def test_zero_tail_survives_the_wire():
+    """The slab's zero padding tail quantizes to payload 0 / scale 1 and
+    dequantizes back to exactly 0 — the slab norm contract holds."""
+    spec, gs, h, r = _slab_case()
+    assert spec.padded > spec.total
+    for impl in (ota_transmit_ref, ota_transmit_slab):
+        q, s = impl(gs, h, quantize=True, r=r)
+        q, s = np.asarray(q), np.asarray(s)
+        assert np.all(q[spec.total:] == 0)
+        full_blocks = -(-spec.total // LANE)   # tail blocks past all leaves
+        assert np.all(s[full_blocks:] == 1.0)
+
+
+def test_transmit_kernel_matches_ref_within_one_quantum():
+    """Kernel vs op-mirrored oracle: scales agree to f32 rounding and
+    payloads differ by at most 1 codeword on (rarely) flipped rounding
+    decisions."""
+    spec, gs, h, r = _slab_case()
+    qk, sk = ota_transmit_slab(gs, h, quantize=True, r=r)
+    qr, sr = ota_transmit_ref(gs, h, quantize=True, r=r)
+    assert qk.dtype == jnp.int8 and sk.shape == (spec.padded // LANE,)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    dq = np.abs(np.asarray(qk, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= 1
+    assert float(np.mean(dq != 0)) < 0.01
+
+
+def test_receive_kernel_matches_ref():
+    rows, d = 4, 6 * LANE
+    q = jax.random.randint(jax.random.key(3), (rows, d), -127, 128,
+                           dtype=jnp.int8)
+    s = jnp.abs(jax.random.normal(jax.random.key(4), (rows, d // LANE))) + 0.1
+    u = jax.random.uniform(jax.random.key(5), (d,), minval=-1.5, maxval=1.5)
+    e = jnp.abs(jax.random.normal(jax.random.key(6), (d,))) + 0.1
+    out_k = ota_receive_slab(q, s, u, e, alpha=1.5, scale=0.3)
+    out_r = ota_receive_ref(q, s, u, e, alpha=1.5, scale=0.3)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_stochastic_rounding_is_unbiased():
+    """E[dequant] == x over the rounding draws (the transmit epilogue's
+    floor(x/s + r) with r ~ U[0,1) is unbiased)."""
+    d = 2 * LANE
+    x = jax.random.normal(jax.random.key(8), (1, d))
+    reps = 400
+    acc = np.zeros((d,), np.float64)
+    for k in range(reps):
+        r = jax.random.uniform(jax.random.key(1000 + k), (d,))
+        q, s = ota_transmit_ref(x, jnp.ones((1,)), quantize=True, r=r)
+        acc += np.repeat(np.asarray(s), LANE) * np.asarray(q, np.float64)
+    mean = acc / reps
+    scale = np.repeat(np.asarray(
+        ota_transmit_ref(x, jnp.ones((1,)), quantize=True,
+                         r=jnp.zeros((d,)))[1]), LANE)
+    # SE of the mean of U(-s/2-ish, s/2-ish) errors ~ s / sqrt(12 reps)
+    tol = 5.0 * scale / np.sqrt(12 * reps)
+    assert np.all(np.abs(mean - np.asarray(x[0], np.float64)) <= tol)
+
+
+def test_deterministic_rounding_mode():
+    """stochastic_rounding=False rounds to nearest and needs no draws."""
+    spec, gs, h, _ = _slab_case()
+    qk, sk = ota_transmit_slab(gs, h, quantize=True, stochastic=False)
+    qr, sr = ota_transmit_ref(gs, h, quantize=True, stochastic=False)
+    np.testing.assert_allclose(np.asarray(sk), np.asarray(sr), rtol=1e-6)
+    assert np.abs(np.asarray(qk, np.int32)
+                  - np.asarray(qr, np.int32)).max() <= 1
+    cfg = OTAChannelConfig(
+        alpha=1.5, xi_scale=0.1,
+        uplink=UplinkConfig(mode="int8", stochastic_rounding=False))
+    g1, _ = ota_aggregate_stacked(jax.random.key(0), cfg, _stacked_grads())
+    g2, _ = ota_aggregate_stacked(jax.random.key(0), cfg, _stacked_grads())
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("interference", [True, False])
+def test_int8_aggregate_error_bound_jnp_and_pallas(interference):
+    """Backend-level acceptance: against the f32 slab aggregate with the
+    SAME draws, the int8 uplink's error is the transmit quantization
+    error — bounded per entry by its block scale — on both single-device
+    backends."""
+    grads = _stacked_grads()
+    key = jax.random.key(7)
+    cfg = OTAChannelConfig(alpha=1.5, xi_scale=0.2, interference=interference,
+                           backend="pallas")
+    c8 = dataclasses.replace(cfg, uplink=UplinkConfig(mode="int8"))
+    g_f32, _ = ota_aggregate_stacked(key, cfg, grads)
+
+    spec, gs, h, r = None, None, None, None
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        g8, h8 = ota_aggregate_stacked(
+            key, dataclasses.replace(c8, backend=backend), grads)
+        outs[backend] = g8
+        # recompute the per-block scales this aggregate used
+        spec = make_slab_spec(jax.tree.map(
+            lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype), grads))
+        gs = stack_to_slab(spec, grads)
+        _, s = ota_transmit_ref(gs, h8, quantize=True,
+                                r=uplink_sr_slab_inputs(key, spec)[0])
+        bound = np.repeat(np.asarray(s), LANE)
+        flat8 = np.concatenate([np.asarray(x).ravel()
+                                for x in jax.tree.leaves(g8)])
+        flat32 = np.concatenate([np.asarray(x).ravel()
+                                 for x in jax.tree.leaves(g_f32)])
+        err = np.abs(flat8 - flat32)
+        # + a few ulps of the result: the heavy-tail interference term
+        # can dwarf the payload, and f32/int8 add it in separate ops.
+        slack = 4 * np.spacing(np.abs(flat32, dtype=np.float32))
+        assert np.all(err <= bound[:spec.total] * (1 + 1e-5) + slack + 1e-7), \
+            backend
+
+    # jnp vs pallas: same draws, same layout -> within one quantum/entry
+    for a, b in zip(jax.tree.leaves(outs["jnp"]), jax.tree.leaves(outs["pallas"])):
+        a, b = np.asarray(a), np.asarray(b)
+        assert np.max(np.abs(a - b)) <= float(np.max(np.asarray(s))) + 1e-6
+
+
+def test_round_step_int8_jnp_pallas_close():
+    """A full adam_ota round over the quantized MAC: jnp and pallas land
+    within (lr-scaled) quantization-step distance."""
+    params = {f"p{i}": jax.random.normal(jax.random.key(2 + i), s)
+              for i, s in enumerate(SHAPES)}
+
+    def loss_fn(p, batch):
+        return sum(jnp.mean((x - b) ** 2)
+                   for x, b in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+    n = 6
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3), (n,) + p.shape), params)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                          uplink=UplinkConfig(mode="int8"))
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=n)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        rs = make_round_step(loss_fn, ch, ad, fl, backend=backend)
+        p, s = params, init_server(params, ad)
+        for t in range(2):
+            p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(9), t),
+                         batches)
+        outs[backend] = (p, s, m)
+    p_j, s_j, m_j = outs["jnp"]
+    p_p, s_p, m_p = outs["pallas"]
+    for a, b in zip(jax.tree.leaves(p_j), jax.tree.leaves(p_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3,
+                                   rtol=1e-4)
+    np.testing.assert_allclose(float(m_j.loss), float(m_p.loss), rtol=1e-6)
+
+
+def test_adam_ota_convergence_preserved_under_int8():
+    """The headline capability: adam_ota still converges when the MAC
+    carries the quantized payload (examples/quantized_uplink.py is the
+    full-size version of this check)."""
+    from repro.data import FederatedBatcher, gaussian_mixture
+    from repro.models.vision import logistic_regression
+
+    n_clients = 10
+    data = gaussian_mixture(1500, 16, 4, seed=0)
+    model = logistic_regression(16, 4)
+    batcher = FederatedBatcher(data, n_clients, 16, dir_alpha=0.5)
+    fl = FLConfig(n_clients=n_clients)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+
+    def batch_fn(t):
+        b = batcher(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    finals = {}
+    for mode in ("f32", "int8"):
+        ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                              uplink=UplinkConfig(mode=mode))
+        rs = make_round_step(model.loss_fn, ch, ad, fl)
+        p = model.init(jax.random.key(0))
+        s = init_server(p, ad)
+        losses = []
+        for t in range(30):
+            p, s, m = rs(p, s, jax.random.fold_in(jax.random.key(1), t),
+                         batch_fn(t))
+            losses.append(float(m.loss))
+        finals[mode] = (losses[0], np.mean(losses[-5:]))
+    for mode, (first, last) in finals.items():
+        assert last < 0.7 * first, (mode, first, last)
+    # quantization must not visibly hurt the optimisation (doing better
+    # is fine — the rounding noise is tiny next to the channel noise)
+    assert finals["int8"][1] <= 1.5 * finals["f32"][1] + 1e-3, finals
+
+
+def test_int8_multi_device_acceptance():
+    """shard_check --uplink int8 on 8 forced host devices: jnp int8
+    oracle vs resident pallas (near-exact), meshes (1,)/(2,)/(4,2)
+    within accumulated quantization error, bitwise rerun determinism."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.shard_check", "--uplink",
+         "int8", "--optimizers", "adam_ota", "fedavg", "--rounds", "3",
+         "--meshes", "1", "2", "4,2"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=1200)
+    assert res.returncode == 0, res.stdout[-3000:] + res.stderr[-2000:]
+    assert "PARITY OK" in res.stdout

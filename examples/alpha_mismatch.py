@@ -1,0 +1,89 @@
+"""Alpha mismatch: what tracking the tail index online buys (PR 5).
+
+The ADOTA stepsize divides by the nu-accumulator's alpha-ROOT, so the
+optimizer's assumed tail index shapes every update (and the convergence
+rate itself, Theorem 1: O(ln T / T^{1-1/alpha})). Yang et al. show
+mis-modeling the interference law degrades A-OTA training; this
+experiment measures that mismatch and its online correction on a
+heavy-tailed channel (true alpha = 1.2):
+
+* ``matched``    — the server magically knows alpha = 1.2;
+* ``mismatched`` — the server assumes Gaussian interference (alpha = 2,
+  what you would assume with no tail knowledge);
+* ``tracked``    — ``alpha = "auto"``: the closed loop estimates alpha
+  from the log-moment pilot statistics the OTA kernel epilogue reduces
+  every round, EMA-resident in the slab state, fed back into the fused
+  update as a traced scalar.
+
+Expected: ``tracked`` converges to the matched trajectory (alpha_hat
+within ~0.05 of 1.2 after 80 rounds) with no oracle knowledge, while
+the Gaussian assumption trails on final loss.
+
+    PYTHONPATH=src python examples/alpha_mismatch.py [--rounds 80]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        init_train_state, make_slab_round_runner,
+                        run_rounds_slab, unpack_train_state)
+from repro.data import FederatedBatcher, gaussian_mixture
+from repro.models.vision import accuracy, logistic_regression
+
+TRUE_ALPHA = 1.2
+
+
+def train(alpha_opt, rounds: int):
+    n_clients = 20
+    data = gaussian_mixture(4000, 32, 10, seed=0)
+    model = logistic_regression(32, 10)
+    batcher = FederatedBatcher(data, n_clients, 16, dir_alpha=0.1)
+
+    channel = OTAChannelConfig(alpha=TRUE_ALPHA, xi_scale=0.3)
+    server = AdaptiveConfig(optimizer="adagrad_ota", lr=0.05,
+                            alpha=alpha_opt, beta2=0.3)
+    run = make_slab_round_runner(model.loss_fn, channel, server,
+                                 FLConfig(n_clients=n_clients),
+                                 backend="pallas")
+
+    def batch_fn(t, key):
+        b = batcher(t)
+        return {"x": jnp.asarray(b["x"]), "y": jnp.asarray(b["y"])}
+
+    state = init_train_state(server, model.init(jax.random.key(0)))
+    state, hist = run_rounds_slab(run, state, jax.random.key(1), batch_fn,
+                                  rounds, chunk=8)
+    params, _ = unpack_train_state(server, state)
+    acc = accuracy(model, params, jnp.asarray(data.x), data.y)
+    name = "auto" if alpha_opt == "auto" else f"{alpha_opt:.1f}"
+    print(f"  alpha_opt={name:5s} final loss {hist[-1]['loss']:.4f}  "
+          f"acc {acc:.4f}  alpha_hat {hist[-1]['alpha_hat']:.4f}")
+    return hist[-1]["loss"], acc, hist[-1]["alpha_hat"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=80)
+    args = ap.parse_args()
+
+    print(f"== AdaGrad-OTA on a true-alpha={TRUE_ALPHA} channel ==")
+    loss_m, acc_m, _ = train(TRUE_ALPHA, args.rounds)      # matched oracle
+    loss_g, acc_g, _ = train(2.0, args.rounds)             # Gaussian guess
+    loss_t, acc_t, a_hat = train("auto", args.rounds)      # closed loop
+
+    err = abs(a_hat - TRUE_ALPHA)
+    print(f"\ntracked alpha_hat = {a_hat:.4f} (true {TRUE_ALPHA}, "
+          f"err {err:.4f})")
+    print(f"loss: matched {loss_m:.4f} | tracked {loss_t:.4f} | "
+          f"gaussian-assumed {loss_g:.4f}")
+    recovered = abs(loss_t - loss_m) <= max(
+        0.5 * abs(loss_g - loss_m), 0.02)
+    print("tracking recovers the matched trajectory:",
+          "OK" if recovered else "VIOLATED")
+
+
+if __name__ == "__main__":
+    main()

@@ -99,6 +99,7 @@ def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None
     """
     from repro.core.slab_state import spec_meta
     arrays = {"step": np.asarray(state.step), "w": np.asarray(state.w),
+              "alpha_hat": np.asarray(state.alpha_hat),
               "spec_meta": np.asarray(json.dumps(spec_meta(state.spec)))}
     for i, slab in enumerate(state.opt):
         arrays[f"opt_{i}"] = np.asarray(slab)
@@ -127,6 +128,10 @@ def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
         w=jnp.asarray(stored["w"], jnp.float32),
         opt=tuple(jnp.asarray(stored[f"opt_{i}"], jnp.float32)
                   for i in range(n_opt)),
+        # pre-alpha-loop checkpoints carry no tracker state: resume with
+        # the unseeded sentinel (the next tracked round re-seeds the EMA)
+        alpha_hat=jnp.asarray(stored.get("alpha_hat", np.zeros(())),
+                              jnp.float32),
         spec=spec)
     extra = {k[2:]: v for k, v in stored.items() if k.startswith("x_")}
     return state, extra

@@ -13,6 +13,7 @@ from repro.core.fl import (FLConfig, RoundMetrics, init_server,
                            make_slab_round_runner, make_slab_round_step,
                            run_rounds, run_rounds_slab)
 from repro.core.ota import (add_interference, faded_loss_weights,
+                            interference_log_moment_stats,
                             ota_aggregate_slab, ota_aggregate_stacked,
                             ota_psum, uplink_sr_slab_inputs)
 from repro.core.shard import (client_axes_of, n_client_shards,
@@ -21,7 +22,9 @@ from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
                              stack_to_slab, tree_to_slab, zeros_slab)
 from repro.core.slab_state import (SlabTrainState, init_train_state,
                                    pack_train_state, unpack_train_state)
-from repro.core.tail_index import hill_estimate, log_moment_estimate
+from repro.core.tail_index import (alpha_from_log_moments, effective_alpha,
+                                   hill_estimate, log_moment_estimate,
+                                   log_moment_stats, update_alpha_ema)
 
 __all__ = [
     "AdaptiveConfig", "ServerOptimizer", "ServerOptState", "adagrad_ota",
@@ -34,7 +37,9 @@ __all__ = [
     "ota_aggregate_stacked", "ota_psum", "uplink_sr_slab_inputs",
     "SlabSpec", "make_slab_spec",
     "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",
-    "hill_estimate", "log_moment_estimate", "client_axes_of",
+    "hill_estimate", "log_moment_estimate", "alpha_from_log_moments",
+    "log_moment_stats", "update_alpha_ema", "effective_alpha",
+    "interference_log_moment_stats", "client_axes_of",
     "n_client_shards", "shard_round_step", "SlabTrainState",
     "init_train_state", "pack_train_state", "unpack_train_state",
     "make_slab_round_step", "make_slab_round_runner", "run_rounds_slab",

@@ -56,7 +56,10 @@ class ServerOptState(NamedTuple):
 
 class ServerOptimizer(NamedTuple):
     init: Callable[[PyTree], ServerOptState]
-    update: Callable[[PyTree, ServerOptState, PyTree], tuple]
+    # update(g, state, params, alpha=None): ``alpha`` optionally overrides
+    # the config's tail index with a traced scalar — the closed-loop
+    # tracked estimate. None (the default) keeps the static cfg.alpha.
+    update: Callable[..., tuple]
     name: str
 
 
@@ -86,7 +89,18 @@ class AdaptiveConfig:
     lr: float = 1e-2              # eta
     beta1: float = 0.9            # momentum on Delta_t
     beta2: float = 0.3            # Adam-OTA amortization (paper fig.4 best: 0.3)
-    alpha: float = 1.5            # interference tail index used in v-update
+    alpha: Any = 1.5              # interference tail index used in v-update:
+                                  # a float (the server assumes it knows the
+                                  # channel's tail) or "auto" — the closed
+                                  # estimation loop (paper Remark 3): the
+                                  # slab-resident loops estimate alpha online
+                                  # from the fused pilot statistics, carry
+                                  # the EMA in SlabTrainState.alpha_hat and
+                                  # feed it back into the update as a traced
+                                  # scalar. Float configs are bitwise-
+                                  # unchanged.
+    alpha_ema: float = 0.1        # EMA weight of the per-round log-moment
+                                  # estimate when alpha == "auto"
     eps: float = 1e-8             # ill-conditioning guard (inside the root)
     momentum: float = 0.9         # FedAvgM server momentum
     backend: str = "jnp"          # "jnp": per-leaf tree.map reference;
@@ -104,6 +118,33 @@ class AdaptiveConfig:
     def __post_init__(self):
         if self.backend not in ("jnp", "pallas", "pallas_sharded"):
             raise ValueError(f"unknown optimizer backend: {self.backend}")
+        if isinstance(self.alpha, str) and self.alpha != "auto":
+            raise ValueError(
+                f'alpha must be a float tail index or "auto" (online '
+                f'tracking), got {self.alpha!r}')
+        if not (0.0 < self.alpha_ema <= 1.0):
+            raise ValueError(
+                f"alpha_ema must be in (0, 1], got {self.alpha_ema}")
+
+    @property
+    def track_alpha(self) -> bool:
+        """True when the optimizer's tail index is estimated online."""
+        return self.alpha == "auto"
+
+    def resolve_alpha(self, alpha):
+        """The alpha this update actually uses: an explicit (possibly
+        traced) override wins; otherwise the static config float. A
+        tracking config with no override is a contract violation — the
+        caller was supposed to thread the resident ``alpha_hat`` in."""
+        if alpha is not None:
+            return alpha
+        if self.track_alpha:
+            raise ValueError(
+                'AdaptiveConfig.alpha == "auto" needs the tracked alpha '
+                'threaded into the update (the slab-resident loops do '
+                'this; the per-round pytree API has no resident alpha_hat '
+                'to carry the EMA across rounds)')
+        return self.alpha
 
 
 def _apply_update(params: PyTree, delta: PyTree, nu: PyTree, lr, alpha, eps) -> PyTree:
@@ -123,12 +164,13 @@ def adagrad_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
             nu=_zeros_like_tree(params, jnp.float32),
         )
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
+        a = cfg.resolve_alpha(alpha)
         delta = jax.tree.map(
             lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
             state.delta, g)
-        nu = jax.tree.map(lambda v, d: v + _abs_pow(d, cfg.alpha), state.nu, delta)
-        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        nu = jax.tree.map(lambda v, d: v + _abs_pow(d, a), state.nu, delta)
+        new_params = _apply_update(params, delta, nu, cfg.lr, a, cfg.eps)
         return new_params, ServerOptState(state.step + 1, delta, nu)
 
     return ServerOptimizer(init, update, "adagrad_ota")
@@ -144,14 +186,15 @@ def adam_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
             nu=_zeros_like_tree(params, jnp.float32),
         )
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
+        a = cfg.resolve_alpha(alpha)
         delta = jax.tree.map(
             lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
             state.delta, g)
         nu = jax.tree.map(
-            lambda v, d: cfg.beta2 * v + (1.0 - cfg.beta2) * _abs_pow(d, cfg.alpha),
+            lambda v, d: cfg.beta2 * v + (1.0 - cfg.beta2) * _abs_pow(d, a),
             state.nu, delta)
-        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        new_params = _apply_update(params, delta, nu, cfg.lr, a, cfg.eps)
         return new_params, ServerOptState(state.step + 1, delta, nu)
 
     return ServerOptimizer(init, update, "adam_ota")
@@ -170,15 +213,16 @@ def amsgrad_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
                               nu={"v": z, "vmax": _zeros_like_tree(
                                   params, jnp.float32)})
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
+        a = cfg.resolve_alpha(alpha)
         delta = jax.tree.map(
             lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
             state.delta, g)
         v = jax.tree.map(
-            lambda v_, d: cfg.beta2 * v_ + (1.0 - cfg.beta2) * _abs_pow(d, cfg.alpha),
+            lambda v_, d: cfg.beta2 * v_ + (1.0 - cfg.beta2) * _abs_pow(d, a),
             state.nu["v"], delta)
         vmax = jax.tree.map(jnp.maximum, state.nu["vmax"], v)
-        new_params = _apply_update(params, delta, vmax, cfg.lr, cfg.alpha,
+        new_params = _apply_update(params, delta, vmax, cfg.lr, a,
                                    cfg.eps)
         return new_params, ServerOptState(state.step + 1, delta,
                                           {"v": v, "vmax": vmax})
@@ -202,17 +246,18 @@ def yogi_ota(cfg: AdaptiveConfig) -> ServerOptimizer:
             nu=_zeros_like_tree(params, jnp.float32),
         )
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
+        a = cfg.resolve_alpha(alpha)
         delta = jax.tree.map(
             lambda d, gi: cfg.beta1 * d + (1.0 - cfg.beta1) * gi.astype(jnp.float32),
             state.delta, g)
 
         def vupd(v, d):
-            da = _abs_pow(d, cfg.alpha)
+            da = _abs_pow(d, a)
             return v - (1.0 - cfg.beta2) * jnp.sign(v - da) * da
 
         nu = jax.tree.map(vupd, state.nu, delta)
-        new_params = _apply_update(params, delta, nu, cfg.lr, cfg.alpha, cfg.eps)
+        new_params = _apply_update(params, delta, nu, cfg.lr, a, cfg.eps)
         return new_params, ServerOptState(state.step + 1, delta, nu)
 
     return ServerOptimizer(init, update, "yogi_ota")
@@ -228,7 +273,9 @@ def fedavgm(cfg: AdaptiveConfig) -> ServerOptimizer:
             nu=jnp.zeros((), jnp.float32),   # unused
         )
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
+        # alpha accepted for interface uniformity; momentum SGD never
+        # uses the tail index.
         delta = jax.tree.map(
             lambda d, gi: cfg.momentum * d + gi.astype(jnp.float32), state.delta, g)
         new_params = jax.tree.map(
@@ -248,7 +295,7 @@ def fedavg(cfg: AdaptiveConfig) -> ServerOptimizer:
             nu=jnp.zeros((), jnp.float32),
         )
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
         new_params = jax.tree.map(
             lambda w, gi: (w - cfg.lr * gi).astype(w.dtype), params, g)
         return new_params, ServerOptState(state.step + 1, state.delta, state.nu)
@@ -340,20 +387,24 @@ def unpack_state_slabs(cfg: AdaptiveConfig, spec: SlabSpec,
 
 
 def slab_update_slabs(cfg: AdaptiveConfig, g_slab: jax.Array,
-                      state_slabs: Tuple[jax.Array, ...], w_slab: jax.Array
+                      state_slabs: Tuple[jax.Array, ...], w_slab: jax.Array,
+                      alpha=None
                       ) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
     """ONE fused ``adaptive_update_slab`` launch on raw 1-D slabs.
 
     ``state_slabs`` is in ``state_slab_rows`` order; the slabs may be the
     full model or any lane-aligned slice of it (the sharded engine passes
-    each device's local slab shard). Returns ``(new_state_slabs, w')``.
+    each device's local slab shard). ``alpha`` optionally overrides
+    ``cfg.alpha`` with the tracked traced scalar (mandatory when
+    ``cfg.alpha == "auto"``). Returns ``(new_state_slabs, w')``.
     """
     from repro.kernels.adaptive_update import adaptive_update_slab
 
     mode = _SLAB_MODES[cfg.optimizer]
+    a = 2.0 if mode in ("momentum", "sgd") else cfg.resolve_alpha(alpha)
     kw = dict(lr=cfg.lr,
               beta1=cfg.momentum if mode == "momentum" else cfg.beta1,
-              beta2=cfg.beta2, alpha=cfg.alpha, eps=cfg.eps, mode=mode,
+              beta2=cfg.beta2, alpha=a, eps=cfg.eps, mode=mode,
               interpret=cfg.interpret)
     if mode == "sgd":
         (w_n,) = adaptive_update_slab(g_slab, None, None, w_slab, **kw)
@@ -373,7 +424,7 @@ def slab_update_slabs(cfg: AdaptiveConfig, g_slab: jax.Array,
 
 
 def apply_slab_update(cfg: AdaptiveConfig, spec: SlabSpec, g_slab: jax.Array,
-                      state: ServerOptState, params: PyTree):
+                      state: ServerOptState, params: PyTree, alpha=None):
     """Slab-engine server update: ONE fused kernel over the whole model.
 
     ``g_slab`` is the (spec.padded,) f32 aggregated gradient — typically
@@ -382,11 +433,12 @@ def apply_slab_update(cfg: AdaptiveConfig, spec: SlabSpec, g_slab: jax.Array,
     and optimizer state are flattened in, updated by a single
     ``adaptive_update_slab`` call, and restored to their pytree forms
     (params to their original dtypes, state to f32), so the result is
-    interchangeable with the jnp backend's.
+    interchangeable with the jnp backend's. ``alpha`` optionally
+    overrides ``cfg.alpha`` with the tracked traced scalar.
     """
     w_s = tree_to_slab(spec, params)
     new_slabs, w_n = slab_update_slabs(cfg, g_slab, pack_state_slabs(
-        cfg, spec, state), w_s)
+        cfg, spec, state), w_s, alpha=alpha)
     new_params = slab_to_tree(spec, w_n)
     return new_params, unpack_state_slabs(cfg, spec, state, new_slabs)
 
@@ -394,10 +446,10 @@ def apply_slab_update(cfg: AdaptiveConfig, spec: SlabSpec, g_slab: jax.Array,
 def _make_slab_update(cfg: AdaptiveConfig):
     """Tree-in/tree-out update that routes through ``apply_slab_update``."""
 
-    def update(g, state, params):
+    def update(g, state, params, alpha=None):
         spec = make_slab_spec(params)
         return apply_slab_update(cfg, spec, tree_to_slab(spec, g), state,
-                                 params)
+                                 params, alpha=alpha)
 
     return update
 

@@ -154,11 +154,40 @@ class OTAChannelConfig:
             object.__setattr__(self, "uplink", UplinkConfig(mode=self.uplink))
 
     @property
+    def pc_transmit_prob(self) -> float:
+        """P(h >= pc_threshold) under the raw fading law — the Bernoulli
+        success probability of the truncated-channel-inversion effective
+        fading (``power_control=True`` maps h to 1{h >= threshold})."""
+        t = self.pc_threshold
+        if self.fading == "none":
+            return 1.0 if 1.0 >= t else 0.0
+        if self.fading == "rayleigh":
+            # Rayleigh(s) with mean mu_c has s = mu_c / sqrt(pi/2);
+            # P(h >= t) = exp(-t^2 / (2 s^2)).
+            s = self.mu_c / math.sqrt(math.pi / 2.0)
+            return math.exp(-(t**2) / (2.0 * s**2))
+        # Gaussian fading: P(h >= t) = Q((t - mu) / sigma).
+        return 0.5 * math.erfc((t - self.mu_c) / (self.sigma_c * math.sqrt(2.0)))
+
+    @property
     def fading_mean(self) -> float:
+        """Mean of the EFFECTIVE fading the MAC applies. With power
+        control the transmitter inverts its channel and deep fades stay
+        silent, so the effective h is Bernoulli(p) with
+        p = P(h >= pc_threshold): mean p — NOT mu_c (the old value, a
+        bug: it ignored truncated inversion entirely)."""
+        if self.power_control:
+            return self.pc_transmit_prob
         return 1.0 if self.fading == "none" else self.mu_c
 
     @property
     def fading_var(self) -> float:
+        """Variance of the effective fading; Bernoulli p(1-p) under
+        power control (was the raw Rayleigh/Gaussian variance — wrong
+        once truncated inversion rewrites h to 0/1)."""
+        if self.power_control:
+            p = self.pc_transmit_prob
+            return p * (1.0 - p)
         if self.fading == "none":
             return 0.0
         if self.fading == "rayleigh":
@@ -279,7 +308,12 @@ def interference_alpha_moment(cfg: OTAChannelConfig, d: int) -> float:
 def upsilon(cfg: OTAChannelConfig, d: int, n_clients: int, grad_bound: float) -> float:
     """The theory constant Upsilon of Theorem 1 (Eq. 22).
 
-        Upsilon = 4G + d^{1-a/2} (mu_c^2 + sigma_c^2)^{a/2} C^a / N^{a/2}
+        Upsilon = 4G + d^{1-a/2} E[h^2]^{a/2} C^a / N^{a/2}
+
+    ``E[h^2] = fading_mean^2 + fading_var`` is the second moment of the
+    EFFECTIVE fading, so with ``power_control=True`` it is the Bernoulli
+    transmit probability p (h is 0/1 after truncated inversion), not the
+    raw Rayleigh moment.
     """
     a = cfg.alpha
     g = interference_alpha_moment(cfg, d) if cfg.interference else 0.0

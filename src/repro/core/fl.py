@@ -65,6 +65,7 @@ from repro.core.ota import ota_aggregate_slab, ota_aggregate_stacked, ota_psum
 from repro.core.slab import make_slab_spec, slab_to_tree, tree_to_slab
 from repro.core.slab_state import (SlabTrainState, pack_train_state,
                                    unpack_train_state)
+from repro.core.tail_index import effective_alpha, update_alpha_ema
 
 PyTree = Any
 LossFn = Callable[[PyTree, Any], jax.Array]   # (params, batch) -> scalar
@@ -82,6 +83,11 @@ class RoundMetrics(NamedTuple):
     grad_norm: jax.Array          # L2 norm of the clean aggregated gradient
     noisy_grad_norm: jax.Array    # L2 norm of g_t after the channel
     fading_mean: jax.Array        # mean of this round's h draw
+    alpha_hat: jax.Array          # the tail index the server update used:
+                                  # the resident EMA of the fused log-moment
+                                  # estimate under alpha == "auto" (0.0
+                                  # until first seeded), else the static
+                                  # config float
 
 
 def _tree_l2(t: PyTree) -> jax.Array:
@@ -165,6 +171,13 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
     """
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
+    if adaptive_cfg.track_alpha:
+        raise ValueError(
+            'AdaptiveConfig.alpha == "auto" needs the slab-resident loop '
+            '(make_slab_round_step / make_slab_round_runner, or '
+            'launch.train --track-alpha): the per-round pytree API has no '
+            'resident alpha_hat to carry the estimator EMA across rounds')
+    alpha_const = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
     if backend == "pallas_sharded":
         from repro.core.shard import shard_round_step
         if mesh is None:
@@ -190,6 +203,7 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             grad_norm=_tree_l2(clean),
             noisy_grad_norm=_tree_l2(g_t),
             fading_mean=jnp.mean(h),
+            alpha_hat=alpha_const,
         )
         return new_params, new_state, metrics
 
@@ -197,8 +211,8 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params, client_batches)
         spec = make_slab_spec(params)
         # Kernel launch 1: fused fading reduction + interference synthesis.
-        g_slab, h, grads_slab = ota_aggregate_slab(key, channel_cfg, grads,
-                                                   spec)
+        g_slab, h, grads_slab, _ = ota_aggregate_slab(key, channel_cfg,
+                                                      grads, spec)
         # Kernel launch 2: fused server update, g_t still in slab form.
         new_params, new_state = apply_slab_update(adaptive_cfg, spec, g_slab,
                                                   opt_state, params)
@@ -209,6 +223,7 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                 jnp.mean(grads_slab, axis=0)))),
             noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
             fading_mean=jnp.mean(h),
+            alpha_hat=alpha_const,
         )
         return new_params, new_state, metrics
 
@@ -262,19 +277,52 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             f'mesh= was given but the resolved backend is "{backend}", '
             'which runs single-device and would silently ignore it; use '
             'backend="pallas_sharded" for distributed rounds')
+    track = adaptive_cfg.track_alpha
+    client_fn = _client_update(loss_fn, fl_cfg)
     if backend == "jnp":
-        inner = make_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
-                                jit=False, backend="jnp")
+        if not track:
+            inner = make_round_step(loss_fn, channel_cfg, adaptive_cfg,
+                                    fl_cfg, jit=False, backend="jnp")
+
+            def step(state: SlabTrainState, key, client_batches):
+                params, opt_state = unpack_train_state(adaptive_cfg, state)
+                p, s, m = inner(params, opt_state, key, client_batches)
+                return pack_train_state(adaptive_cfg, state.spec, p, s,
+                                        alpha_hat=state.alpha_hat), m
+
+            return jax.jit(step) if jit else step
+
+        # The tracked jnp reference: the per-leaf round with the closed
+        # alpha loop — stats from the per-leaf mirror of the kernel
+        # epilogues, the same resident EMA, the per-leaf update consuming
+        # the tracked alpha as a traced scalar. This is the parity oracle
+        # the tracked pallas/pallas_sharded engines are tested against.
+        server_opt = make_server_optimizer(adaptive_cfg)
 
         def step(state: SlabTrainState, key, client_batches):
             params, opt_state = unpack_train_state(adaptive_cfg, state)
-            p, s, m = inner(params, opt_state, key, client_batches)
-            return pack_train_state(adaptive_cfg, state.spec, p, s), m
+            grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(
+                params, client_batches)
+            g_t, h, stats = ota_aggregate_stacked(key, channel_cfg, grads,
+                                                  pilot_stats=True)
+            alpha_hat = update_alpha_ema(state.alpha_hat, stats,
+                                         adaptive_cfg.alpha_ema)
+            clean = jax.tree.map(lambda g: jnp.mean(g, axis=0), grads)
+            new_params, new_state = server_opt.update(
+                g_t, opt_state, params, alpha=effective_alpha(alpha_hat))
+            metrics = RoundMetrics(
+                loss=jnp.mean(losses),
+                grad_norm=_tree_l2(clean),
+                noisy_grad_norm=_tree_l2(g_t),
+                fading_mean=jnp.mean(h),
+                alpha_hat=alpha_hat,
+            )
+            return pack_train_state(adaptive_cfg, state.spec, new_params,
+                                    new_state, alpha_hat=alpha_hat), metrics
 
         return jax.jit(step) if jit else step
 
     from repro.core.adaptive import slab_update_slabs
-    client_fn = _client_update(loss_fn, fl_cfg)
 
     def step(state: SlabTrainState, key, client_batches):
         spec = state.spec
@@ -283,25 +331,38 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         params = slab_to_tree(spec, state.w)
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
                                                                client_batches)
-        # Kernel launch 1: fused fading reduction + interference.
-        g_slab, h, grads_slab = ota_aggregate_slab(key, channel_cfg, grads,
-                                                   spec)
+        # Kernel launch 1: fused fading reduction + interference (with
+        # the pilot-stats epilogue when the alpha loop is closed).
+        g_slab, h, grads_slab, stats = ota_aggregate_slab(
+            key, channel_cfg, grads, spec, pilot_stats=track)
+        if track:
+            alpha_hat = update_alpha_ema(state.alpha_hat, stats,
+                                         adaptive_cfg.alpha_ema)
+            alpha_arg = effective_alpha(alpha_hat)
+            alpha_metric = alpha_hat
+        else:
+            alpha_hat = state.alpha_hat
+            alpha_arg = None
+            alpha_metric = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
         w_in = state.w
         if any(dt != jnp.float32 for dt in spec.dtypes):
             # Non-f32 leaves round-trip through their storage dtype each
             # round on the pytree backends; mirror that for parity.
             w_in = tree_to_slab(spec, params)
-        # Kernel launch 2: fused server update on the RESIDENT slabs.
+        # Kernel launch 2: fused server update on the RESIDENT slabs
+        # (the tracked alpha rides in as a traced operand).
         new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slab, state.opt,
-                                           w_in)
+                                           w_in, alpha=alpha_arg)
         metrics = RoundMetrics(
             loss=jnp.mean(losses),
             grad_norm=jnp.sqrt(jnp.sum(jnp.square(
                 jnp.mean(grads_slab, axis=0)))),
             noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
             fading_mean=jnp.mean(h),
+            alpha_hat=alpha_metric,
         )
-        return SlabTrainState(state.step + 1, w_new, new_opt, spec), metrics
+        return SlabTrainState(state.step + 1, w_new, new_opt, alpha_hat,
+                              spec), metrics
 
     return jax.jit(step) if jit else step
 
@@ -395,10 +456,12 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
         loss = jax.device_get(ms.loss)
         gn = jax.device_get(ms.grad_norm)
         ngn = jax.device_get(ms.noisy_grad_norm)
+        ah = jax.device_get(ms.alpha_hat)
         for i in range(r):
             history.append({"round": t + i, "loss": float(loss[i]),
                             "grad_norm": float(gn[i]),
-                            "noisy_grad_norm": float(ngn[i])})
+                            "noisy_grad_norm": float(ngn[i]),
+                            "alpha_hat": float(ah[i])})
         t += r
         if eval_fn is not None and eval_every and t % eval_every == 0:
             params, _ = unpack_train_state(adaptive_cfg, state)
@@ -449,7 +512,8 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
         params, opt_state, m = round_step(params, opt_state, k_round, batches)
         rec = {"round": t, "loss": float(m.loss),
                "grad_norm": float(m.grad_norm),
-               "noisy_grad_norm": float(m.noisy_grad_norm)}
+               "noisy_grad_norm": float(m.noisy_grad_norm),
+               "alpha_hat": float(m.alpha_hat)}
         if eval_fn is not None and eval_every and (t + 1) % eval_every == 0:
             rec.update(eval_fn(params))
         history.append(rec)

@@ -138,15 +138,21 @@ def _interference_slab_inputs(kx: jax.Array, cfg: OTAChannelConfig,
 
 
 def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
-                       client_grads: PyTree, spec: SlabSpec
-                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                       client_grads: PyTree, spec: SlabSpec,
+                       pilot_stats: bool = False):
     """Slab-engine OTA MAC — the staged uplink pipeline, single device.
 
     ``spec`` is the slab layout of a SINGLE client's gradient (== the
-    model parameters). Returns ``(g_slab, h, grads_slab)``: the noisy
-    aggregate as a (spec.padded,) f32 slab (zero tail), the fading draw
-    (N,), and the stacked (N, spec.padded) f32 gradient slab (returned so
-    callers can derive clean-gradient statistics without re-stacking).
+    model parameters). Returns ``(g_slab, h, grads_slab, stats)``: the
+    noisy aggregate as a (spec.padded,) f32 slab (zero tail), the fading
+    draw (N,), the stacked (N, spec.padded) f32 gradient slab (returned
+    so callers can derive clean-gradient statistics without
+    re-stacking), and — with ``pilot_stats=True`` — the (3,) residual
+    log-moment statistics reduced by the receive/channel kernel's fused
+    epilogue (``repro.core.tail_index`` turns them into the online alpha
+    estimate); ``stats`` is None otherwise and the launches are the
+    exact pre-stats ``pallas_call``s (the static-alpha path stays
+    bitwise).
 
     ``uplink="f32"`` executes the original single fused
     ``ota_channel_slab`` launch (bitwise-identical to the pre-pipeline
@@ -161,6 +167,7 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
     h = sample_fading(kh, cfg, (n,))
     grads_slab = stack_to_slab(spec, client_grads)
     u, e, scale = _interference_slab_inputs(kx, cfg, spec)
+    stats = None
 
     if cfg.uplink.quantized:
         stochastic = cfg.uplink.stochastic_rounding
@@ -170,7 +177,8 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
             q, s = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
                                     stochastic=stochastic)
             g_slab = ota_receive_ref(q[None], s[None], u, e,
-                                     alpha=cfg.alpha, scale=scale)
+                                     alpha=cfg.alpha, scale=scale,
+                                     pilot_stats=pilot_stats)
         else:
             from repro.kernels.ota_channel import (ota_receive_slab,
                                                    ota_transmit_slab)
@@ -179,17 +187,71 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
                                      interpret=cfg.interpret)
             g_slab = ota_receive_slab(q[None], s[None], u, e,
                                       alpha=cfg.alpha, scale=scale,
+                                      pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
-        return g_slab, h, grads_slab
+        if pilot_stats:
+            g_slab, stats = g_slab
+        return g_slab, h, grads_slab, stats
 
-    from repro.kernels.ota_channel import ota_channel_slab
-    g_slab = ota_channel_slab(grads_slab, h, u, e, alpha=cfg.alpha,
-                              scale=scale, interpret=cfg.interpret)
-    return g_slab, h, grads_slab
+    if cfg.backend == "jnp":
+        from repro.kernels.ref import ota_channel_ref
+        g_slab = ota_channel_ref(grads_slab, h, u, e, alpha=cfg.alpha,
+                                 scale=scale, pilot_stats=pilot_stats)
+    else:
+        from repro.kernels.ota_channel import ota_channel_slab
+        g_slab = ota_channel_slab(grads_slab, h, u, e, alpha=cfg.alpha,
+                                  scale=scale, pilot_stats=pilot_stats,
+                                  interpret=cfg.interpret)
+    if pilot_stats:
+        g_slab, stats = g_slab
+    return g_slab, h, grads_slab, stats
+
+
+def interference_log_moment_stats(kx: jax.Array, cfg: OTAChannelConfig,
+                                  tree: PyTree) -> jax.Array:
+    """The per-leaf jnp mirror of the kernels' pilot-stats epilogue.
+
+    Re-draws the interference of this round from the SAME per-leaf keys
+    ``add_interference`` consumed (``fold_in(kx, leaf_index)`` — the
+    shared PRNG contract, so the values are literally the ones already
+    injected) and reduces them to the ``[count, sum log|r|,
+    sum log^2|r|]`` statistics; per-leaf 3-vectors add, exactly like the
+    sharded engine's per-slice psum. Returns zeros when the channel
+    injects no interference. Standalone form; the round hot path uses
+    ``_add_interference_with_stats`` to sample each leaf only once.
+    """
+    from repro.core.tail_index import log_moment_stats
+    if not cfg.interference:
+        return jnp.zeros((3,), jnp.float32)
+    keys = _leaf_keys(kx, tree)
+    stats = jnp.zeros((3,), jnp.float32)
+    for g, k in zip(jax.tree.leaves(tree), jax.tree.leaves(keys)):
+        xi = sample_interference(k, cfg, g.shape, dtype=jnp.float32)
+        stats = stats + log_moment_stats(xi)
+    return stats
+
+
+def _add_interference_with_stats(kx: jax.Array, cfg: OTAChannelConfig,
+                                 grads: PyTree) -> Tuple[PyTree, jax.Array]:
+    """``add_interference`` + the pilot-stats reduction in ONE pass over
+    the per-leaf draws (the tracked jnp round would otherwise synthesize
+    the full interference vector twice)."""
+    from repro.core.tail_index import log_moment_stats
+    if not cfg.interference:
+        return grads, jnp.zeros((3,), jnp.float32)
+    leaves, treedef = jax.tree.flatten(grads)
+    stats = jnp.zeros((3,), jnp.float32)
+    noisy = []
+    for i, g in enumerate(leaves):
+        xi = sample_interference(jax.random.fold_in(kx, i), cfg, g.shape,
+                                 dtype=jnp.float32)
+        noisy.append((g.astype(jnp.float32) + xi).astype(g.dtype))
+        stats = stats + log_moment_stats(xi)
+    return jax.tree.unflatten(treedef, noisy), stats
 
 
 def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
-                          client_grads: PyTree) -> Tuple[PyTree, jax.Array]:
+                          client_grads: PyTree, pilot_stats: bool = False):
     """OTA-aggregate gradients stacked on a leading client axis.
 
     Dispatches on ``cfg.backend``: the jnp path maps the faded sum over
@@ -204,17 +266,25 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
       cfg: channel configuration.
       client_grads: pytree whose leaves have shape (N, ...) — gradient of
         client n at leaf[..., n, ...].
+      pilot_stats: also return the (3,) residual log-moment statistics
+        of this round's interference (fused kernel epilogues on the
+        pallas backends, the per-leaf mirror on jnp) for the online
+        tail-index tracker.
 
     Returns:
       (g_t, h): the noisy aggregated gradient pytree (leaf shape (...)) and
-      the fading draw h of shape (N,) (returned for logging/analysis).
+      the fading draw h of shape (N,) (returned for logging/analysis);
+      ``(g_t, h, stats)`` when ``pilot_stats=True``.
     """
     if cfg.backend in ("pallas", "pallas_sharded") or cfg.uplink.quantized:
         spec = make_slab_spec(jax.tree.map(
             lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype),
             client_grads))
-        g_slab, h, _ = ota_aggregate_slab(key, cfg, client_grads, spec)
-        return slab_to_tree(spec, g_slab), h
+        g_slab, h, _, stats = ota_aggregate_slab(key, cfg, client_grads,
+                                                 spec,
+                                                 pilot_stats=pilot_stats)
+        g_t = slab_to_tree(spec, g_slab)
+        return (g_t, h, stats) if pilot_stats else (g_t, h)
 
     n = jax.tree.leaves(client_grads)[0].shape[0]
     kh, kx = jax.random.split(key)
@@ -225,6 +295,9 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
         return jnp.sum(hb * g, axis=0) / n
 
     g_t = jax.tree.map(agg, client_grads)
+    if pilot_stats:
+        noisy, stats = _add_interference_with_stats(kx, cfg, g_t)
+        return noisy, h, stats
     return add_interference(kx, cfg, g_t), h
 
 

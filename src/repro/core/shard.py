@@ -101,6 +101,8 @@ from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, \
     stack_to_slab, tree_to_slab
 from repro.core.slab_state import (SlabTrainState, pack_train_state,
                                    unpack_train_state)
+from repro.core.tail_index import (effective_alpha, log_moment_stats,
+                                   update_alpha_ema)
 
 PyTree = Any
 
@@ -170,8 +172,8 @@ def exchange_uplink_payload(x: jax.Array, axes: Tuple[str, ...],
 def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
                  h_loc: jax.Array, key: jax.Array, kx: jax.Array,
                  idx: jax.Array, spec: SlabSpec, axes: Tuple[str, ...],
-                 axis_sizes: Tuple[int, ...], n_total: int
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 axis_sizes: Tuple[int, ...], n_total: int,
+                 pilot_stats: bool = False):
     """The quantized MAC, per device (call inside ``shard_map``).
 
     Stages quantize -> superposition -> interference -> dequantize of
@@ -191,7 +193,11 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
        the P rows and injects the CMS interference (clean payload:
        scale 0) on the slice only.
 
-    Returns ``(g_slice, clean_slice)``, both (spec.shard_len,) f32.
+    Returns ``(g_slice, clean_slice, stats)``, the slices
+    (spec.shard_len,) f32 and ``stats`` this device's (3,) residual
+    log-moment epilogue reduction over ITS slice (None unless
+    ``pilot_stats``; the caller psums the 3-vectors — stats are
+    subset-agnostic by the zero-mask contract).
     """
     from repro.kernels.ota_channel import (LANE, ota_receive_slab,
                                            ota_transmit_slab)
@@ -227,14 +233,18 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
     # point), sliced — same helper as the single-device engines.
     u, e, xi_scale = _interference_slab_inputs(kx, channel_cfg, spec)
     u, e = sl(u), sl(e)
+    stats = None
     g_slice = ota_receive_slab(
         payload[:, 0], scales[:, 0], u, e, alpha=channel_cfg.alpha,
-        scale=xi_scale, interpret=channel_cfg.interpret)
+        scale=xi_scale, pilot_stats=pilot_stats,
+        interpret=channel_cfg.interpret)
+    if pilot_stats:
+        g_slice, stats = g_slice
     clean_slice = ota_receive_slab(
         payload[:, 1], scales[:, 1], jnp.zeros_like(u), jnp.ones_like(e),
         alpha=channel_cfg.alpha, scale=0.0,
         interpret=channel_cfg.interpret)
-    return g_slice, clean_slice
+    return g_slice, clean_slice, stats
 
 
 def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
@@ -254,8 +264,9 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     client_fn = _client_update(loss_fn, fl_cfg)
     has_cast = any(dt != jnp.float32 for dt in spec.dtypes)
     uplink = channel_cfg.uplink
+    track = adaptive_cfg.track_alpha
 
-    def round_body(step, w_slice, opt_slices, key, local_batches):
+    def round_body(step, w_slice, opt_slices, alpha_hat, key, local_batches):
         idx = linear_shard_index(axes)
         sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
                                                     shard_len)
@@ -271,11 +282,12 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
         h = sample_fading(kh, channel_cfg, (n,))
         h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
         g_stack = stack_to_slab(spec, grads)              # (n_local, padded)
+        stats = None
 
         if uplink.quantized:
-            g_slice, clean_slice = _int8_uplink(
+            g_slice, clean_slice, stats = _int8_uplink(
                 channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
-                axis_sizes, n)
+                axis_sizes, n, pilot_stats=track)
         else:
             # Fused transmit: the faded partial sum over the local
             # client rows, full slab width, analog (f32) wire format.
@@ -295,8 +307,27 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             # added once, post-reduce — the server's single RF front end.
             if channel_cfg.interference:
                 u, e = _cms_slab_inputs(kx, spec)
-                g_slice = g_slice + channel_cfg.xi_scale * cms_transform(
+                xi_slice = channel_cfg.xi_scale * cms_transform(
                     sl(u), sl(e), channel_cfg.alpha)
+                g_slice = g_slice + xi_slice
+                if track:
+                    # The pilot-stats reduction over this slice's
+                    # residual (the jnp mirror of the kernel epilogue —
+                    # the f32 sharded interference is injected in jnp).
+                    stats = log_moment_stats(xi_slice)
+
+        # --- alpha loop: psum the per-slice stats, fold into the EMA --
+        if track:
+            if stats is None:        # interference disabled: no residual
+                stats = jnp.zeros((3,), jnp.float32)
+            stats = jax.lax.psum(stats, axes)
+            alpha_hat = update_alpha_ema(alpha_hat, stats,
+                                         adaptive_cfg.alpha_ema)
+            alpha_arg = effective_alpha(alpha_hat)
+            alpha_metric = alpha_hat
+        else:
+            alpha_arg = None
+            alpha_metric = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
 
         # --- 5. fused server update on the RESIDENT slices ------------
         if has_cast:
@@ -304,7 +335,7 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             # round on every other backend; mirror that here for parity.
             w_slice = sl(tree_to_slab(spec, params))
         new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slice, opt_slices,
-                                           w_slice)
+                                           w_slice, alpha=alpha_arg)
 
         # Norms from per-slice squared sums: no full-width regather.
         metrics = RoundMetrics(
@@ -314,8 +345,9 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             noisy_grad_norm=jnp.sqrt(jax.lax.psum(
                 jnp.sum(jnp.square(g_slice)), axes)),
             fading_mean=jnp.mean(h),
+            alpha_hat=alpha_metric,
         )
-        return step + 1, w_new, new_opt, metrics
+        return step + 1, w_new, new_opt, alpha_hat, metrics
 
     return round_body
 
@@ -366,11 +398,13 @@ def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
                                 axes, axis_sizes, state.spec)
         sharded = shard_map(
             body, mesh,
-            in_specs=(P(), P(axes), P(axes), P(), P(axes)),
-            out_specs=(P(), P(axes), P(axes), P()))
-        new_step, w, opt, m = sharded(state.step, state.w, state.opt, key,
-                                      client_batches)
-        return SlabTrainState(new_step, w, tuple(opt), state.spec), m
+            in_specs=(P(), P(axes), P(axes), P(), P(), P(axes)),
+            out_specs=(P(), P(axes), P(axes), P(), P()))
+        new_step, w, opt, alpha_hat, m = sharded(
+            state.step, state.w, state.opt, state.alpha_hat, key,
+            client_batches)
+        return SlabTrainState(new_step, w, tuple(opt), alpha_hat,
+                              state.spec), m
 
     return jax.jit(step) if jit else step
 
@@ -394,24 +428,28 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
                                 axes, axis_sizes, state.spec)
 
-        def scan_rounds(step0, w_slice, opt_slices, keys, batches):
+        def scan_rounds(step0, w_slice, opt_slices, alpha0, keys, batches):
             def scanned(carry, xs):
-                step, w, opt = carry
+                step, w, opt, alpha_hat = carry
                 key, batch = xs
-                step, w, opt, m = body(step, w, opt, key, batch)
-                return (step, w, opt), m
+                step, w, opt, alpha_hat, m = body(step, w, opt, alpha_hat,
+                                                  key, batch)
+                return (step, w, opt, alpha_hat), m
 
-            (step, w, opt), ms = jax.lax.scan(
-                scanned, (step0, w_slice, opt_slices), (keys, batches))
-            return step, w, opt, ms
+            (step, w, opt, alpha_hat), ms = jax.lax.scan(
+                scanned, (step0, w_slice, opt_slices, alpha0),
+                (keys, batches))
+            return step, w, opt, alpha_hat, ms
 
         sharded = shard_map(
             scan_rounds, mesh,
-            in_specs=(P(), P(axes), P(axes), P(), P(None, axes)),
-            out_specs=(P(), P(axes), P(axes), P()))
-        new_step, w, opt, ms = sharded(state.step, state.w, state.opt, keys,
-                                       client_batches)
-        return SlabTrainState(new_step, w, tuple(opt), state.spec), ms
+            in_specs=(P(), P(axes), P(axes), P(), P(), P(None, axes)),
+            out_specs=(P(), P(axes), P(axes), P(), P()))
+        new_step, w, opt, alpha_hat, ms = sharded(
+            state.step, state.w, state.opt, state.alpha_hat, keys,
+            client_batches)
+        return SlabTrainState(new_step, w, tuple(opt), alpha_hat,
+                              state.spec), ms
 
     return jax.jit(run) if jit else run
 
@@ -430,6 +468,12 @@ def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
     multi-round training should keep the ``SlabTrainState`` resident via
     ``make_shard_slab_step``/``make_shard_slab_runner`` instead.
     """
+    if adaptive_cfg.track_alpha:
+        raise ValueError(
+            'AdaptiveConfig.alpha == "auto" needs the resident loop '
+            '(make_shard_slab_step / make_shard_slab_runner): the pytree-'
+            'per-round wrapper re-packs the state every call, which would '
+            'reset the estimator EMA each round')
     axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
     n_shards = math.prod(axis_sizes)
     inner = make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,

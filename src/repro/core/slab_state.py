@@ -56,6 +56,15 @@ class SlabTrainState:
     ``spec.shard_len`` slice); the pytree structure is identical either
     way, so checkpoints and boundary conversions are mesh-agnostic.
 
+    ``alpha_hat`` is the resident tail-index telemetry (PR 5): the f32
+    scalar EMA of the per-round log-moment estimate the kernel
+    epilogues reduce, carried across rounds (scan carry, checkpointed,
+    replicated under a mesh). 0.0 is the "not yet seeded" sentinel —
+    alpha lives in (1, 2] — and is what non-tracking configs keep, so
+    the pytree structure is uniform whether or not the estimator runs.
+    It is the first state field that feeds *telemetry* back into the
+    update rule (``AdaptiveConfig.alpha == "auto"``).
+
     ``spec`` is static aux data: two states with different layouts are
     different pytree types to jit, and it never becomes a traced value.
     """
@@ -63,15 +72,17 @@ class SlabTrainState:
     step: jax.Array
     w: jax.Array
     opt: Tuple[jax.Array, ...]
+    alpha_hat: jax.Array
     spec: SlabSpec
 
     def tree_flatten(self):
-        return (self.step, self.w, self.opt), self.spec
+        return (self.step, self.w, self.opt, self.alpha_hat), self.spec
 
     @classmethod
     def tree_unflatten(cls, spec, children):
-        step, w, opt = children
-        return cls(step=step, w=w, opt=tuple(opt), spec=spec)
+        step, w, opt, alpha_hat = children
+        return cls(step=step, w=w, opt=tuple(opt), alpha_hat=alpha_hat,
+                   spec=spec)
 
 
 def init_train_state(cfg: AdaptiveConfig, params: PyTree,
@@ -82,7 +93,8 @@ def init_train_state(cfg: AdaptiveConfig, params: PyTree,
     Matches ``make_server_optimizer(cfg).init`` for every registered
     optimizer (all init their delta/nu trees to zeros). Pass ``spec``
     to reuse a prebuilt layout, or ``shards`` to build one with the
-    shard-aligned padding rule.
+    shard-aligned padding rule. ``alpha_hat`` starts at the unseeded
+    sentinel 0.0 (the first tracked round adopts its raw estimate).
     """
     if spec is None:
         spec = make_slab_spec(params, shards=shards)
@@ -90,15 +102,25 @@ def init_train_state(cfg: AdaptiveConfig, params: PyTree,
     return SlabTrainState(step=jnp.zeros((), jnp.int32),
                           w=tree_to_slab(spec, params),
                           opt=tuple(zeros_slab(spec) for _ in range(n_rows)),
+                          alpha_hat=jnp.zeros((), jnp.float32),
                           spec=spec)
 
 
 def pack_train_state(cfg: AdaptiveConfig, spec: SlabSpec, params: PyTree,
-                     state: ServerOptState) -> SlabTrainState:
-    """Boundary: flatten an existing ``(params, ServerOptState)`` pair."""
+                     state: ServerOptState,
+                     alpha_hat: jax.Array | None = None) -> SlabTrainState:
+    """Boundary: flatten an existing ``(params, ServerOptState)`` pair.
+
+    ``ServerOptState`` carries no tail-index telemetry (it predates the
+    closed alpha loop), so ``alpha_hat`` defaults to the unseeded
+    sentinel; pass an existing scalar to preserve it across a
+    pack/unpack boundary."""
+    if alpha_hat is None:
+        alpha_hat = jnp.zeros((), jnp.float32)
     return SlabTrainState(step=jnp.asarray(state.step, jnp.int32),
                           w=tree_to_slab(spec, params),
                           opt=pack_state_slabs(cfg, spec, state),
+                          alpha_hat=jnp.asarray(alpha_hat, jnp.float32),
                           spec=spec)
 
 

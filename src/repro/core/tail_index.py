@@ -14,6 +14,23 @@ For X ~ S(alpha, beta=0, c, 0):
 
 so  1/alpha^2 = 6 * Var[log|X|] / pi^2 - 1/2, clipped into alpha in (1, 2].
 A Hill-type order-statistics estimator is provided as a cross-check.
+
+**The fused-stats contract (PR 5).** The kernels never materialise the
+interference vector for the estimator; instead the ``ota_channel_slab``
+/ ``ota_receive_slab`` epilogues reduce the pilot residual r (the
+interference actually injected this round) to THREE sufficient
+statistics
+
+    stats = [count, sum log|r|, sum log^2|r|]     over entries r != 0
+
+(the zero mask drops the slab's padding tail and the disabled-channel
+case for free, and makes the statistics subset-agnostic: any pilot
+sub-slice, any shard slice, and the full slab all speak the same
+3-vector, which simply psum-adds across shards).
+``alpha_from_log_moments`` turns the reduced stats into the same
+log-moment estimate ``log_moment_estimate`` computes from raw samples;
+``update_alpha_ema`` folds it into the resident across-round EMA
+``alpha_hat`` carried by ``SlabTrainState``.
 """
 
 from __future__ import annotations
@@ -50,18 +67,94 @@ def hill_estimate(samples: jax.Array, k_frac: float = 0.05) -> jax.Array:
     """Hill estimator of the tail index from the upper order statistics.
 
     alpha_hat = k / sum_{i<k} (log X_(i) - log X_(k)) over the k largest
-    |samples|. Static ``k = max(8, k_frac * n)``. Biased for stable laws at
-    moderate n (the stable tail is only asymptotically Pareto) — used as a
-    sanity cross-check of the log-moment estimator, not in the optimizer.
+    |samples|. Static ``k = max(8, k_frac * n)``, clamped to ``n - 1`` so
+    the ``top_k(x, k + 1)`` order-statistics window always fits (n < 9
+    used to raise inside top_k). Degenerate inputs stay finite instead
+    of raising: all-equal samples (zero log-spacing denominator) clip to
+    the upper bound 4.0 — no tail spread reads as the lightest tail we
+    report — and n == 1 (k == 0, no spacings at all) clips to the lower
+    bound. Biased for stable laws at moderate n (the stable tail is only
+    asymptotically Pareto) — used as a sanity cross-check of the
+    log-moment estimator, not in the optimizer.
     """
     x = jnp.abs(samples.astype(jnp.float32).reshape(-1))
     n = x.shape[0]
-    k = max(8, int(k_frac * n))
+    k = min(max(8, int(k_frac * n)), n - 1)
     top = jax.lax.top_k(x, k + 1)[0]
     top = jnp.maximum(top, jnp.finfo(jnp.float32).tiny)
     logs = jnp.log(top)
-    alpha = k / jnp.sum(logs[:k] - logs[k])
+    denom = jnp.sum(logs[:k] - logs[k])
+    alpha = k / jnp.maximum(denom, jnp.finfo(jnp.float32).tiny)
     return jnp.clip(alpha, 0.5, 4.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue statistics: the closed alpha loop (PR 5).
+# ---------------------------------------------------------------------------
+
+def log_moment_stats(residual: jax.Array) -> jax.Array:
+    """Reduce a pilot residual to the ``[count, sum log|r|, sum log^2|r|]``
+    sufficient statistics over its NONZERO entries.
+
+    This is the jnp mirror of the kernel epilogues' reduction: the
+    zero mask excludes the slab padding tail (the CMS fixed point
+    (u=0, e=1) synthesizes exactly 0 there) and degenerates to
+    ``count == 0`` when the channel injects no interference. Stats from
+    disjoint slices (shards, pilot windows, per-leaf draws) ADD, so the
+    sharded engine psum-reduces them like the RoundMetrics norms.
+    """
+    r = jnp.abs(residual.astype(jnp.float32).reshape(-1))
+    m = r > 0.0
+    logr = jnp.where(m, jnp.log(jnp.maximum(r, jnp.finfo(jnp.float32).tiny)),
+                     0.0)
+    return jnp.stack([jnp.sum(m.astype(jnp.float32)), jnp.sum(logr),
+                      jnp.sum(logr * logr)])
+
+
+def alpha_from_log_moments(stats: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(alpha_hat, scale_hat) from reduced ``[count, sum log|r|,
+    sum log^2|r|]`` statistics — ``log_moment_estimate`` re-expressed on
+    the sufficient statistics so the estimate can be formed from the
+    kernel epilogues' psum-reduced 3-vector without ever materialising
+    the samples. ``count == 0`` (no interference observed) returns the
+    (meaningless) upper-clip values; callers gate on ``stats[0]``.
+    """
+    count = jnp.maximum(stats[0], 1.0)
+    mean = stats[1] / count
+    var = jnp.maximum(stats[2] / count - mean * mean, 0.0)
+    inv_a2 = jnp.maximum(6.0 * var / (math.pi**2) - 0.5, 1e-6)
+    alpha = jnp.clip(1.0 / jnp.sqrt(inv_a2), 1.01, 2.0)
+    scale = jnp.exp(mean - _EULER * (1.0 / alpha - 1.0))
+    return alpha, scale
+
+
+def update_alpha_ema(alpha_hat: jax.Array, stats: jax.Array,
+                     rho: float = 0.1) -> jax.Array:
+    """One resident-EMA step of the online tail-index tracker.
+
+    ``alpha_hat`` is the scalar carried across rounds by
+    ``SlabTrainState`` with 0.0 as the "not yet seeded" sentinel (alpha
+    lives in (1, 2], so 0 is unreachable): the first round with an
+    observable residual adopts the raw estimate, later rounds blend with
+    weight ``rho``, and rounds with no residual (``stats[0] == 0`` —
+    interference disabled) pass the previous value through unchanged.
+    The sentinel convention makes the EMA resume-proof: a restored
+    checkpoint continues the blend exactly where it stopped.
+    """
+    est, _ = alpha_from_log_moments(stats)
+    blended = jnp.where(alpha_hat > 0.0,
+                        (1.0 - rho) * alpha_hat + rho * est, est)
+    return jnp.where(stats[0] > 0.0, blended, alpha_hat)
+
+
+def effective_alpha(alpha_hat: jax.Array) -> jax.Array:
+    """The tail index the update rule consumes under tracking: the EMA
+    once seeded, else the Gaussian endpoint 2.0 — the principled default
+    when no interference has been observed (no heavy tail measured =>
+    assume the lightest admissible one; also exactly right for the
+    interference-free channel, where the estimator never seeds)."""
+    return jnp.where(alpha_hat > 0.0, alpha_hat,
+                     jnp.asarray(2.0, jnp.float32))
 
 
 def estimate_from_gradient_residual(g_clean: jax.Array, g_noisy: jax.Array

@@ -68,7 +68,15 @@ MODES = ("adagrad", "adam", "amsgrad", "yogi", "momentum", "sgd")
 
 
 def _adaptive_update_kernel(*refs, lr: float, beta1: float, beta2: float,
-                            alpha: float, eps: float, mode: str):
+                            alpha, eps: float, mode: str):
+    # alpha is either a static python float (baked into the kernel — the
+    # alpha="static" fast path, bitwise-identical to the pre-runtime-
+    # alpha code) or None, meaning the closed-loop tracked value arrives
+    # as the FIRST operand: a (1, 1) f32 block replicated to every grid
+    # step. Only the alpha-power family reads it.
+    if alpha is None:
+        alpha = refs[0][0, 0]
+        refs = refs[1:]
     g = refs[0][...].astype(jnp.float32)
     if mode == "sgd":
         w_ref, w_out = refs[1:]
@@ -113,7 +121,7 @@ def _adaptive_update_kernel(*refs, lr: float, beta1: float, beta2: float,
 
 def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
                          nu: Optional[jax.Array], w: jax.Array, *, lr: float,
-                         beta1: float, beta2: float, alpha: float, eps: float,
+                         beta1: float, beta2: float, alpha, eps: float,
                          mode: str, nu_max: Optional[jax.Array] = None,
                          block_rows: int = DEFAULT_BLOCK_ROWS,
                          interpret: Optional[bool] = None
@@ -126,10 +134,20 @@ def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
     is the server momentum coefficient (g enters with gain 1). Returns
     the updated slabs in ``(delta', nu', nu_max', w')`` order, dropping
     the entries the mode does not own; ``w'`` is always last.
+
+    ``alpha`` may be a static python float (baked into the kernel — the
+    historical path, bitwise-unchanged) or a traced f32 scalar (a
+    ``jax.Array``): the closed-loop tracked tail index. A traced alpha
+    rides in as one extra (1, 1) operand broadcast to every grid step,
+    so changing the estimate between rounds re-runs, not re-compiles,
+    the kernel. Modes outside the alpha-power family (momentum/sgd)
+    never read alpha and always take the static path.
     """
     if mode not in MODES:
         raise ValueError(f"unknown update mode {mode!r}; options: {MODES}")
     interpret = resolve_interpret(interpret)
+    traced_alpha = (isinstance(alpha, jax.Array)
+                    and mode in ("adagrad", "adam", "amsgrad", "yogi"))
     n = g.shape[0]
     rows = -(-n // LANE)
     rows_pad = -(-rows // block_rows) * block_rows
@@ -154,13 +172,17 @@ def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
 
     grid = (rows_pad // block_rows,)
     blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    in_specs = [blk] * len(ins)
+    if traced_alpha:
+        ins.insert(0, jnp.asarray(alpha, jnp.float32).reshape(1, 1))
+        in_specs.insert(0, pl.BlockSpec((1, 1), lambda i: (0, 0)))
     kernel = functools.partial(
         _adaptive_update_kernel, lr=lr, beta1=beta1, beta2=beta2,
-        alpha=alpha, eps=eps, mode=mode)
+        alpha=None if traced_alpha else alpha, eps=eps, mode=mode)
     outs = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[blk] * len(ins),
+        in_specs=in_specs,
         out_specs=[blk] * (n_state + 1),
         out_shape=[jax.ShapeDtypeStruct((rows_pad, LANE), jnp.float32)
                    ] * n_state

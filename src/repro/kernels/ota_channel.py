@@ -28,6 +28,24 @@ and this module owns the kernel stages of it:
   stage around, and keeping it guarantees the ``uplink="f32"`` round is
   bitwise-identical to the pre-pipeline code.
 
+**Pilot-statistics epilogue** (``pilot_stats=True`` on the two
+interference-injecting launches, PR 5): the online tail-index tracker
+(paper Remark 3, ``repro.core.tail_index``) needs log-moment statistics
+of the interference residual r = xi_scale * xi — which these kernels
+hold in-register anyway. Rather than re-synthesizing the residual in a
+second pass, each grid step reduces its tile to
+``[count, sum log|r|, sum log^2|r|]`` over the NONZERO residual entries
+(the padding tail synthesizes exactly 0 and drops out; a disabled
+channel reduces to count == 0) and writes them into its own row of a
+tiny (grid, LANE) side output; the caller sums the rows. Per-step rows
+instead of cross-step accumulation keep the epilogue trivially correct
+under any grid execution order. The stats are subset-agnostic — a shard
+slice's 3-vector simply psum-adds with its peers' — which is what lets
+the sharded engine reduce them like the RoundMetrics norms. The main
+output is untouched, and with ``pilot_stats=False`` (the default) the
+launch is the exact pre-PR-5 ``pallas_call`` — the static-alpha path
+stays bitwise.
+
 The CMS math is ``repro.core.channel.cms_transform`` — the same guarded
 expression the jnp sampler uses, so kernel and reference agree bitwise
 in interpret mode: angles are clipped strictly inside (-pi/2, pi/2)
@@ -74,20 +92,48 @@ DEFAULT_BLOCK_COLS = 512
 INT8_MAX = 127.0
 
 
-def _ota_kernel(g_ref, h_ref, u_ref, e_ref, out_ref, *, alpha: float,
-                scale: float, n_clients: int):
+def _residual_stats_row(xi: jax.Array, scale: float) -> jax.Array:
+    """The pilot-statistics epilogue, shared by the channel and receive
+    kernels: reduce this tile's interference residual ``r = scale * xi``
+    to one (1, LANE) row ``[count, sum log|r|, sum log^2|r|, 0, ...]``
+    over the nonzero entries (zero-mask == the padding/disabled-channel
+    fixed point). Runs on values already in VMEM/VREGs."""
+    r = jnp.abs(scale * xi.astype(jnp.float32)).reshape(-1)
+    m = r > 0.0
+    logr = jnp.where(m, jnp.log(jnp.maximum(r, jnp.finfo(jnp.float32).tiny)),
+                     0.0)
+    cnt = jnp.sum(m.astype(jnp.float32))
+    s1 = jnp.sum(logr)
+    s2 = jnp.sum(logr * logr)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, LANE), 1)
+    return jnp.where(lane == 0, cnt,
+                     jnp.where(lane == 1, s1,
+                               jnp.where(lane == 2, s2, 0.0)))
+
+
+def _sum_stats_rows(rows: jax.Array) -> jax.Array:
+    """(grid, LANE) per-step stats rows -> the (3,) reduced statistics."""
+    return jnp.sum(rows, axis=0)[:3]
+
+
+def _ota_kernel(*refs, alpha: float, scale: float, n_clients: int,
+                stats: bool):
+    g_ref, h_ref, u_ref, e_ref, out_ref = refs[:5]
     g = g_ref[...].astype(jnp.float32)              # (N, bc)
     h = h_ref[...].astype(jnp.float32)              # (N, 1)
     agg = jnp.sum(h * g, axis=0, keepdims=True) / n_clients   # (1, bc)
     xi = cms_transform(u_ref[...], e_ref[...], alpha)         # (1, bc)
     out_ref[...] = agg + scale * xi
+    if stats:
+        refs[5][...] = _residual_stats_row(xi, scale)
 
 
 def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
                      e: jax.Array, *, alpha: float, scale: float,
                      n_total: int | None = None,
+                     pilot_stats: bool = False,
                      block_cols: int = DEFAULT_BLOCK_COLS,
-                     interpret: Optional[bool] = None) -> jax.Array:
+                     interpret: Optional[bool] = None):
     """Fused f32 channel: grads (N, d) stacked client gradients, h (N,)
     fading draws, u (d,) uniform angles in (-pi/2, pi/2), e (d,) Exp(1)
     draws. Returns the aggregated noisy gradient (d,) float32.
@@ -95,7 +141,11 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
     ``n_total`` overrides the 1/N normalisation (defaults to the local
     row count N). The sharded engine passes the GLOBAL client count here
     while feeding only this shard's rows, so per-shard partial sums psum
-    to exactly the single-device aggregate."""
+    to exactly the single-device aggregate.
+
+    ``pilot_stats=True`` additionally returns the (3,) log-moment
+    statistics of the injected interference residual (the fused
+    epilogue; see the module docstring) as ``(out, stats)``."""
     if not (1.0 < alpha <= 2.0):
         raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
     interpret = resolve_interpret(interpret)
@@ -109,9 +159,15 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
     h2 = h.reshape(n, 1).astype(jnp.float32)
 
     grid = (d_pad // block_cols,)
-    out = pl.pallas_call(
+    out_specs = pl.BlockSpec((1, block_cols), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((1, d_pad), jnp.float32)
+    if pilot_stats:
+        out_specs = [out_specs, pl.BlockSpec((1, LANE), lambda i: (i, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((grid[0], LANE), jnp.float32)]
+    outs = pl.pallas_call(
         functools.partial(_ota_kernel, alpha=alpha, scale=scale,
-                          n_clients=n_total),
+                          n_clients=n_total, stats=pilot_stats),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n, block_cols), lambda i: (0, i)),
@@ -119,11 +175,13 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
             pl.BlockSpec((1, block_cols), lambda i: (0, i)),
             pl.BlockSpec((1, block_cols), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(gp, h2, up, ep)
-    return out.reshape(-1)[:d]
+    if pilot_stats:
+        return outs[0].reshape(-1)[:d], _sum_stats_rows(outs[1])
+    return outs.reshape(-1)[:d]
 
 
 # ---------------------------------------------------------------------------
@@ -235,8 +293,8 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     return q.reshape(-1)[:d], s.reshape(-1)[:d // LANE]
 
 
-def _rx_kernel(q_ref, s_ref, u_ref, e_ref, out_ref, *, alpha: float,
-               scale: float):
+def _rx_kernel(*refs, alpha: float, scale: float, stats: bool):
+    q_ref, s_ref, u_ref, e_ref, out_ref = refs[:5]
     q = q_ref[...].astype(jnp.float32)              # (R, bc)
     s = s_ref[...]                                  # (R, nb)
     rows, bc = q.shape
@@ -244,12 +302,15 @@ def _rx_kernel(q_ref, s_ref, u_ref, e_ref, out_ref, *, alpha: float,
     agg = jnp.sum(deq, axis=0).reshape(1, bc)       # superposed payloads
     xi = cms_transform(u_ref[...], e_ref[...], alpha)
     out_ref[...] = agg + scale * xi
+    if stats:
+        refs[5][...] = _residual_stats_row(xi, scale)
 
 
 def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
                      e: jax.Array, *, alpha: float, scale: float,
+                     pilot_stats: bool = False,
                      block_cols: int = DEFAULT_BLOCK_COLS,
-                     interpret: Optional[bool] = None) -> jax.Array:
+                     interpret: Optional[bool] = None):
     """Receive stage: dequantize + superpose R payload rows, then inject
     the alpha-stable interference — one fused pass.
 
@@ -258,7 +319,10 @@ def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
     single-device R == 1); scales: (R, d // 128) f32 per-block scales;
     u, e: (d,) CMS interference inputs. ``scale == 0`` disables the
     interference (e.g. for reducing clean-gradient statistics over the
-    same wire). Returns (d,) f32.
+    same wire). Returns (d,) f32, or ``(out, stats)`` with the (3,)
+    residual log-moment statistics when ``pilot_stats=True`` (the fused
+    epilogue; on the sharded engine each device reduces its own slice
+    and the 3-vectors psum).
     """
     if not (1.0 < alpha <= 2.0):
         raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
@@ -276,17 +340,27 @@ def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
     up = jnp.pad(u, (0, d_pad - d)).reshape(1, d_pad)
     ep = jnp.pad(e, (0, d_pad - d), constant_values=1.0).reshape(1, d_pad)
 
-    out = pl.pallas_call(
-        functools.partial(_rx_kernel, alpha=alpha, scale=scale),
-        grid=(d_pad // block_cols,),
+    grid = (d_pad // block_cols,)
+    out_specs = pl.BlockSpec((1, block_cols), lambda i: (0, i))
+    out_shape = jax.ShapeDtypeStruct((1, d_pad), jnp.float32)
+    if pilot_stats:
+        out_specs = [out_specs, pl.BlockSpec((1, LANE), lambda i: (i, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((grid[0], LANE), jnp.float32)]
+    outs = pl.pallas_call(
+        functools.partial(_rx_kernel, alpha=alpha, scale=scale,
+                          stats=pilot_stats),
+        grid=grid,
         in_specs=[
             pl.BlockSpec((rows, block_cols), lambda i: (0, i)),
             pl.BlockSpec((rows, block_cols // LANE), lambda i: (0, i)),
             pl.BlockSpec((1, block_cols), lambda i: (0, i)),
             pl.BlockSpec((1, block_cols), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(qp, sp, up, ep)
-    return out.reshape(-1)[:d]
+    if pilot_stats:
+        return outs[0].reshape(-1)[:d], _sum_stats_rows(outs[1])
+    return outs.reshape(-1)[:d]

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 
 def adaptive_update_ref(g: jax.Array, delta, nu, w: jax.Array, *, lr: float,
-                        beta1: float, beta2: float, alpha: float, eps: float,
+                        beta1: float, beta2: float, alpha, eps: float,
                         mode: str, nu_max=None) -> Tuple[jax.Array, ...]:
     """One fused server update on a flat parameter slab (paper Eq. 8-11).
 
@@ -19,7 +19,9 @@ def adaptive_update_ref(g: jax.Array, delta, nu, w: jax.Array, *, lr: float,
     "amsgrad" -> adam v plus non-decreasing vmax denominator ; "yogi" ->
     sign-controlled additive v ; "momentum" -> FedAvgM (Delta = b1 Delta + g,
     no v; beta1 is the momentum coefficient) ; "sgd" -> plain FedAvg.
-    All state in f32; w keeps its dtype. Returns the same
+    All state in f32; w keeps its dtype. ``alpha`` may be a python float
+    or a traced f32 scalar (the closed-loop tracked tail index) — the
+    elementwise math is identical either way. Returns the same
     ``(*updated_state, w')`` tuple as ``adaptive_update_slab``.
     """
     gf = g.astype(jnp.float32)
@@ -51,9 +53,20 @@ def adaptive_update_ref(g: jax.Array, delta, nu, w: jax.Array, *, lr: float,
     return delta, nu, w_new
 
 
+def _residual_stats_ref(xi: jax.Array, scale: float) -> jax.Array:
+    """Oracle of the pilot-statistics epilogue: ``[count, sum log|r|,
+    sum log^2|r|]`` of the residual r = scale * xi over its nonzero
+    entries (what ``ota_channel._residual_stats_row`` reduces per grid
+    step). Delegates to the estimator's own reduction — the contract is
+    exact agreement with what ``alpha_from_log_moments`` consumes, so
+    there is deliberately only one jnp spelling of it."""
+    from repro.core.tail_index import log_moment_stats
+    return log_moment_stats(scale * xi)
+
+
 def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
-                    e: jax.Array, *, alpha: float, scale: float
-                    ) -> jax.Array:
+                    e: jax.Array, *, alpha: float, scale: float,
+                    pilot_stats: bool = False):
     """Fused OTA MAC on a slab: (1/N) sum_n h_n grads[n] + xi, where xi is
     the CMS transform of uniform angles u in (-pi/2, pi/2) and Exp(1)
     draws e (both shape (d,)). Same guards as
@@ -61,7 +74,9 @@ def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
     (-pi/2, pi/2), e floored — finite everywhere incl. alpha == 2
     (Gaussian reduction).
 
-    grads: (N, d); h: (N,). Returns (d,) float32.
+    grads: (N, d); h: (N,). Returns (d,) float32, plus the (3,)
+    residual log-moment statistics when ``pilot_stats=True`` (the
+    oracle of the kernel's fused epilogue).
     """
     # Guard constants shared with the production transform so the
     # oracle can't silently drift from it; the expression itself is
@@ -75,7 +90,10 @@ def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
     e = jnp.maximum(e, CMS_E_FLOOR)
     xi = (jnp.sin(a * u) / jnp.cos(u) ** (1.0 / a)
           * (jnp.cos((1.0 - a) * u) / e) ** ((1.0 - a) / a))
-    return agg + scale * xi
+    out = agg + scale * xi
+    if pilot_stats:
+        return out, _residual_stats_ref(xi, scale)
+    return out
 
 
 LANE = 128       # must match repro.kernels.ota_channel.LANE
@@ -123,20 +141,27 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
 
 
 def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,
-                    e: jax.Array, *, alpha: float, scale: float) -> jax.Array:
+                    e: jax.Array, *, alpha: float, scale: float,
+                    pilot_stats: bool = False):
     """Receive-stage oracle: dequantize + superpose R int8 payload rows,
     then add the CMS interference. Mirrors ``ota_channel.ota_receive_slab``
-    (op-exact, see ``ota_transmit_ref`` for why).
+    (op-exact, see ``ota_transmit_ref`` for why). ``pilot_stats=True``
+    also returns the (3,) residual log-moment statistics of the injected
+    interference (the fused-epilogue oracle).
 
     payload: (R, d) int8; scales: (R, d // 128) f32; u, e: (d,).
-    Returns (d,) f32.
+    Returns (d,) f32, or ``(out, stats)``.
     """
     rows, d = payload.shape
     deq = (payload.astype(jnp.float32).reshape(rows, d // LANE, LANE)
            * scales[..., None])
     agg = jnp.sum(deq, axis=0).reshape(-1)
     from repro.core.channel import cms_transform
-    return agg + scale * cms_transform(u, e, alpha)
+    xi = cms_transform(u, e, alpha)
+    out = agg + scale * xi
+    if pilot_stats:
+        return out, _residual_stats_ref(xi, scale)
+    return out
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -32,6 +32,14 @@ transmitter — must agree to accumulated quantization-error order
 (loose tol; the tight single-round error bounds live in
 tests/test_uplink.py).
 
+``--track-alpha`` closes the alpha loop (``AdaptiveConfig.alpha =
+"auto"``): every engine estimates the interference tail index online
+from the fused pilot statistics and feeds the resident EMA back into
+the update. The reference becomes the slab-resident jnp loop (the
+pytree-per-round API carries no resident alpha_hat and refuses "auto"),
+the per-round wrapper rows are skipped for the same reason, and the
+end-of-trajectory ``alpha_hat`` deviation joins the parity columns.
+
     PYTHONPATH=src python -m repro.launch.shard_check \
         --meshes 1 2 4,2 --rounds 5 --tol 1e-5
     PYTHONPATH=src python -m repro.launch.shard_check \
@@ -125,7 +133,7 @@ def _run_resident(backend, mesh, n_shards, params, batches, ch, ad, fl,
     return p, s, m_last
 
 
-def _devs(ref, out, tol):
+def _devs(ref, out, tol, track_alpha=False):
     (p_ref, s_ref, m_ref), (p, s, m) = ref, out
     devs = {
         "params": _max_dev(p_ref, p),
@@ -136,6 +144,8 @@ def _devs(ref, out, tol):
                      - float(m.noisy_grad_norm))
         / max(abs(float(m_ref.noisy_grad_norm)), 1.0),
     }
+    if track_alpha:
+        devs["a^"] = abs(float(m_ref.alpha_hat) - float(m.alpha_hat))
     return devs, max(devs.values()) <= tol
 
 
@@ -156,6 +166,13 @@ def main(argv=None) -> int:
                          "transmitter and agree only to accumulated "
                          "quantization-error order — pass a loose --tol "
                          "(e.g. 0.25) for those")
+    ap.add_argument("--track-alpha", action="store_true",
+                    help="run every trajectory with the closed alpha "
+                         "loop (AdaptiveConfig.alpha='auto'): fused "
+                         "pilot statistics -> resident EMA -> traced "
+                         "alpha operand; the reference becomes the "
+                         "slab-resident jnp loop and the alpha_hat "
+                         "deviation joins the parity columns")
     ap.add_argument("--tol", type=float, default=None,
                     help="max relative end-of-trajectory deviation "
                          "(default 1e-5 for --uplink f32, 0.25 for int8)")
@@ -175,14 +192,23 @@ def main(argv=None) -> int:
                           uplink=UplinkConfig(mode=args.uplink))
     fl = FLConfig(n_clients=args.clients)
 
-    print(f"uplink={args.uplink} rounds={args.rounds} tol={args.tol:g}")
+    print(f"uplink={args.uplink} track_alpha={args.track_alpha} "
+          f"rounds={args.rounds} tol={args.tol:g}")
     failures = 0
     for opt in args.optimizers:
-        ad = AdaptiveConfig(optimizer=opt, lr=0.05, alpha=1.5, beta2=0.3)
-        ref = _run_ref(params, batches, ch, ad, fl, args.rounds)
+        ad = AdaptiveConfig(optimizer=opt, lr=0.05,
+                            alpha="auto" if args.track_alpha else 1.5,
+                            beta2=0.3)
+        if args.track_alpha:
+            # The pytree-per-round API refuses alpha="auto" (no resident
+            # EMA); the tracked oracle is the slab-resident jnp loop.
+            ref = _run_resident("jnp", None, 1, params, batches, ch, ad,
+                                fl, args.rounds)
+        else:
+            ref = _run_ref(params, batches, ch, ad, fl, args.rounds)
         out = _run_resident("pallas", None, 1, params, batches, ch, ad, fl,
                             args.rounds)
-        devs, ok = _devs(ref, out, args.tol)
+        devs, ok = _devs(ref, out, args.tol, args.track_alpha)
         failures += not ok
         print(f"{opt:12s} resident pallas   "
               + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
@@ -193,12 +219,12 @@ def main(argv=None) -> int:
             n_shards = int(np.prod(shape))
             out = _run_resident("pallas_sharded", mesh, n_shards, params,
                                 batches, ch, ad, fl, args.rounds)
-            devs, ok = _devs(ref, out, args.tol)
+            devs, ok = _devs(ref, out, args.tol, args.track_alpha)
             failures += not ok
             print(f"{opt:12s} resident mesh={mesh_str:5s} "
                   + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
                   + ("  OK" if ok else "  FAIL"))
-            if opt in PERROUND_OPTIMIZERS:
+            if opt in PERROUND_OPTIMIZERS and not args.track_alpha:
                 out_pr = _run_perround(mesh, params, batches, ch, ad, fl,
                                        args.rounds)
                 devs, ok = _devs(ref, out_pr, args.tol)

@@ -19,6 +19,15 @@ index, so the resumed trajectory equals the uninterrupted one).
 per round on the sharded mesh); the default f32 uplink is bitwise-
 identical to the pre-pipeline code.
 
+``--alpha`` is the TRUE channel tail index; ``--alpha-opt`` what the
+server optimizer assumes (default: follows ``--alpha``) — set them
+apart for mismatch experiments, or pass ``--track-alpha`` (==
+``--alpha-opt auto``) to close the loop: the OTA kernel epilogues
+reduce log-moment pilot statistics of the injected interference, the
+resident slab state carries their EMA ``alpha_hat`` (checkpointed, so
+``--resume`` continues the estimate bitwise), and the adaptive update
+consumes it as a traced scalar each round.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b \
         --preset tiny --rounds 100
     PYTHONPATH=src python -m repro.launch.train --preset 100m --rounds 300
@@ -95,7 +104,22 @@ def main() -> None:
                          "interpret mode elsewhere; see also the "
                          "REPRO_PALLAS_INTERPRET env var)")
     ap.add_argument("--lr", type=float, default=0.02)
-    ap.add_argument("--alpha", type=float, default=1.5)
+    ap.add_argument("--alpha", type=float, default=1.5,
+                    help="TRUE tail index of the channel's alpha-stable "
+                         "interference (what the simulator injects)")
+    ap.add_argument("--alpha-opt", default=None,
+                    help="tail index the server OPTIMIZER assumes: a float "
+                         "(fixed assumption — set != --alpha for mismatch "
+                         "experiments) or 'auto' (closed-loop online "
+                         "estimation from the fused pilot statistics). "
+                         "Default: 'auto' under --track-alpha, else "
+                         "--alpha (matched, the old conflated behaviour)")
+    ap.add_argument("--track-alpha", action="store_true",
+                    help="shorthand for --alpha-opt auto: estimate the "
+                         "interference tail index online (log-moment "
+                         "stats fused into the OTA kernel epilogue, EMA "
+                         "resident in the slab state, checkpointed) and "
+                         "feed it back into the adaptive update")
     ap.add_argument("--xi-scale", type=float, default=0.05)
     ap.add_argument("--dir", type=float, default=0.5,
                     help="Dirichlet concentration (data heterogeneity)")
@@ -117,6 +141,24 @@ def main() -> None:
         ap.error("--resume needs --ckpt-dir")
     if args.scan_rounds < 1:
         ap.error("--scan-rounds must be >= 1")
+
+    # Resolve the optimizer's assumed alpha: --track-alpha and
+    # --alpha-opt auto are synonyms; a bare float pins the assumption
+    # (mismatch scenarios); unset follows the true channel alpha.
+    if args.alpha_opt is None:
+        alpha_opt = "auto" if args.track_alpha else args.alpha
+    elif args.alpha_opt == "auto":
+        alpha_opt = "auto"
+    else:
+        try:
+            alpha_opt = float(args.alpha_opt)
+        except ValueError:
+            ap.error(f"--alpha-opt must be a float or 'auto', "
+                     f"got {args.alpha_opt!r}")
+        if args.track_alpha:
+            ap.error("--track-alpha conflicts with a fixed --alpha-opt "
+                     f"{alpha_opt}; drop one of the two")
+    track = alpha_opt == "auto"
 
     mesh = None
     if args.mesh is not None and args.backend != "pallas_sharded":
@@ -140,7 +182,8 @@ def main() -> None:
     cfg = preset_config(args.arch, args.preset)
     model = build_model(cfg)
     print(f"arch={cfg.arch} params={cfg.n_params()/1e6:.1f}M "
-          f"vocab={cfg.vocab} clients={args.clients}")
+          f"vocab={cfg.vocab} clients={args.clients} "
+          f"alpha={args.alpha} alpha_opt={alpha_opt}")
 
     # Client corpora: one shared stream, Dirichlet-partitioned by "domain"
     # id so clients see different mixtures (non-iid).
@@ -171,7 +214,7 @@ def main() -> None:
                           backend=args.backend, interpret=interpret,
                           uplink=UplinkConfig(mode=args.uplink))
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
-                        alpha=args.alpha, beta2=0.3, backend=args.backend,
+                        alpha=alpha_opt, beta2=0.3, backend=args.backend,
                         interpret=interpret)
     n_shards = 1
     if args.backend == "pallas_sharded":
@@ -207,8 +250,9 @@ def main() -> None:
         if args.log_every and t % args.log_every == 0:
             rec = history[-1]
             dt = time.time() - t0
+            a_col = (f"  a^ {rec['alpha_hat']:.3f}" if track else "")
             print(f"round {t:5d}  loss {rec['loss']:.4f}  "
-                  f"|g| {rec['grad_norm']:.3e}  "
+                  f"|g| {rec['grad_norm']:.3e}{a_col}  "
                   f"({dt / (t - start_round):.2f}s/round)", flush=True)
         if args.ckpt_dir and args.ckpt_every and t % args.ckpt_every == 0:
             ckpt.save_slab_state(os.path.join(args.ckpt_dir,
@@ -226,8 +270,10 @@ def main() -> None:
         with open(args.history_out, "w") as f:
             json.dump(history, f)
     if history:
+        a_col = (f"  alpha_hat {history[-1]['alpha_hat']:.4f} "
+                 f"(true {args.alpha})" if track else "")
         print(f"done: final loss {history[-1]['loss']:.4f} "
-              f"(started {history[0]['loss']:.4f})")
+              f"(started {history[0]['loss']:.4f}){a_col}")
     else:
         print(f"done: nothing to do (resumed at round {start_round} "
               f">= --rounds {args.rounds})")

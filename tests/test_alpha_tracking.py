@@ -1,0 +1,390 @@
+"""The closed alpha loop (PR 5): fused pilot statistics, the resident
+alpha_hat EMA, the traced-alpha kernels, and checkpoint/resume of the
+tracker.
+
+Acceptance contract: with ``AdaptiveConfig.alpha = "auto"`` on a channel
+at true alpha in {1.2, 1.5, 1.8}, ``RoundMetrics.alpha_hat`` converges
+to within +-0.1 of the true tail index within 50 rounds on the jnp and
+pallas engines (pallas_sharded parity at the usual 1e-5 vs jnp), while
+static-alpha configs keep the exact pre-PR-5 code paths (no stats
+output, alpha baked into the kernel) and the per-round pytree API
+refuses "auto" instead of silently resetting the EMA every round.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint as ckpt
+from repro.compat import make_auto_mesh
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, init_train_state, log_moment_stats,
+                        make_round_step, make_slab_round_runner,
+                        make_slab_round_step, make_slab_spec,
+                        make_server_optimizer, unpack_train_state)
+from repro.core.ota import interference_log_moment_stats
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+SHAPES = [(64, 64), (257,), (1,)]
+
+
+def _params(key):
+    ks = jax.random.split(key, len(SHAPES))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, SHAPES))}
+
+
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def _run_tracked(backend, params, ch, ad, fl, rounds, mesh=None, shards=1):
+    n = fl.n_clients
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3), (n,) + p.shape),
+        params)
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend=backend,
+                                 mesh=mesh)
+    st = init_train_state(ad, params, shards=shards)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(7), t)
+                      for t in range(rounds)])
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * rounds), batches)
+    return run(st, keys, stacked)
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue statistics: kernel == ref == per-leaf mirror.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha", [1.2, 1.5, 2.0])
+def test_channel_kernel_stats_match_ref_and_samples(alpha):
+    from repro.kernels.ota_channel import ota_channel_slab
+    from repro.kernels.ref import ota_channel_ref
+    from repro.core.channel import cms_inputs, cms_transform
+    n, d = 4, 1664
+    G = jax.random.normal(jax.random.key(0), (n, d))
+    h = jax.random.uniform(jax.random.key(1), (n,), minval=0.5, maxval=1.5)
+    u, e = cms_inputs(jax.random.key(2), (d,))
+    out_k, st_k = ota_channel_slab(G, h, u, e, alpha=alpha, scale=0.3,
+                                   pilot_stats=True)
+    out_r, st_r = ota_channel_ref(G, h, u, e, alpha=alpha, scale=0.3,
+                                  pilot_stats=True)
+    # the main output is untouched by the epilogue
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(
+        ota_channel_slab(G, h, u, e, alpha=alpha, scale=0.3)), rtol=0)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=1e-5)
+    # and both equal the raw-sample reduction of the actual residual
+    direct = log_moment_stats(0.3 * cms_transform(u, e, alpha))
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(direct),
+                               rtol=1e-5)
+    assert float(st_k[0]) == d   # every real entry bears interference
+
+
+def test_receive_kernel_stats_match_ref():
+    from repro.kernels.ota_channel import ota_receive_slab
+    from repro.kernels.ref import ota_receive_ref
+    from repro.core.channel import cms_inputs
+    d = 1280
+    q = jax.random.randint(jax.random.key(3), (2, d), -127, 128,
+                           dtype=jnp.int8)
+    s = jax.random.uniform(jax.random.key(4), (2, d // 128)) * 0.01
+    u, e = cms_inputs(jax.random.key(5), (d,))
+    out_k, st_k = ota_receive_slab(q, s, u, e, alpha=1.5, scale=0.2,
+                                   pilot_stats=True)
+    out_r, st_r = ota_receive_ref(q, s, u, e, alpha=1.5, scale=0.2,
+                                  pilot_stats=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=1e-5)
+    # scale 0 (disabled interference / the clean diagnostic wire):
+    # nothing to measure
+    _, st0 = ota_receive_slab(q, s, u, e, alpha=1.5, scale=0.0,
+                              pilot_stats=True)
+    assert float(st0[0]) == 0.0
+
+
+def test_perleaf_stats_mirror_slab_stats():
+    """The jnp per-leaf mirror reduces the SAME draws as the slab
+    epilogue (shared PRNG contract), so the statistics agree to f32
+    summation order."""
+    from repro.core.ota import _cms_slab_inputs
+    from repro.core.channel import cms_transform
+    cfg = OTAChannelConfig(alpha=1.4, xi_scale=0.2)
+    params = _params(jax.random.key(8))
+    spec = make_slab_spec(params)
+    kx = jax.random.key(9)
+    per_leaf = interference_log_moment_stats(kx, cfg, params)
+    u, e = _cms_slab_inputs(kx, spec)
+    slab = log_moment_stats(cfg.xi_scale * cms_transform(u, e, cfg.alpha))
+    np.testing.assert_allclose(np.asarray(per_leaf), np.asarray(slab),
+                               rtol=1e-5)
+    assert float(per_leaf[0]) == spec.total
+
+
+# ---------------------------------------------------------------------------
+# Traced-alpha kernels.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["adagrad", "adam", "amsgrad", "yogi"])
+def test_traced_alpha_matches_static_kernel(mode):
+    """Promoting alpha to a runtime operand must not change the math:
+    the traced launch reproduces the baked-constant launch at the same
+    numeric alpha."""
+    from repro.kernels.adaptive_update import adaptive_update_slab
+    d = 700
+    g = jax.random.normal(jax.random.key(10), (d,))
+    dl = jax.random.normal(jax.random.key(11), (d,))
+    nu = jnp.abs(jax.random.normal(jax.random.key(12), (d,)))
+    w = jax.random.normal(jax.random.key(13), (d,))
+    kw = dict(lr=0.05, beta1=0.9, beta2=0.3, eps=1e-8, mode=mode)
+    if mode == "amsgrad":
+        kw["nu_max"] = nu * 1.5
+    static = adaptive_update_slab(g, dl, nu, w, alpha=1.37, **kw)
+    traced = adaptive_update_slab(g, dl, nu, w,
+                                  alpha=jnp.asarray(1.37, jnp.float32), **kw)
+    # also under jit, where the traced alpha is a real tracer
+    jitted = jax.jit(lambda a: adaptive_update_slab(g, dl, nu, w, alpha=a,
+                                                    **kw))(
+        jnp.asarray(1.37, jnp.float32))
+    for a, b, c in zip(static, traced, jitted):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_traced_alpha_jnp_optimizer_override():
+    """The per-leaf update's alpha= override matches rebuilding the
+    optimizer with that static alpha."""
+    params = _params(jax.random.key(14))
+    g = jax.tree.map(lambda p: jax.random.normal(jax.random.key(15),
+                                                 p.shape), params)
+    base = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5,
+                          beta2=0.3)
+    pinned = make_server_optimizer(
+        AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.31, beta2=0.3))
+    overridden = make_server_optimizer(base)
+    from repro.core import init_server
+    s0 = init_server(params, base)
+    p_a, s_a = pinned.update(g, s0, params)
+    p_b, s_b = overridden.update(g, s0, params,
+                                 alpha=jnp.asarray(1.31, jnp.float32))
+    # python-float vs f32-scalar alpha round 1/alpha differently by an
+    # ulp, which the fractional powers amplify — semantic, not bitwise,
+    # agreement is the contract here
+    for x, y in zip(jax.tree.leaves((p_a, s_a.nu)),
+                    jax.tree.leaves((p_b, s_b.nu))):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=2e-4,
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The closed loop, end to end.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("true_alpha", [1.2, 1.5, 1.8])
+def test_alpha_hat_converges_on_jnp_and_pallas(true_alpha):
+    """ACCEPTANCE: RoundMetrics.alpha_hat within +-0.1 of the true
+    channel tail index within 50 rounds, jnp and pallas engines."""
+    params = _params(jax.random.key(0))
+    ch = OTAChannelConfig(alpha=true_alpha, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha="auto",
+                        beta2=0.3)
+    fl = FLConfig(n_clients=4)
+    finals = {}
+    for backend in ("jnp", "pallas"):
+        st, ms = _run_tracked(backend, params, ch, ad, fl, rounds=50)
+        a_hat = float(ms.alpha_hat[-1])
+        assert abs(a_hat - true_alpha) < 0.1, (backend, a_hat, true_alpha)
+        assert float(st.alpha_hat) == a_hat   # resident == reported
+        finals[backend] = a_hat
+    np.testing.assert_allclose(finals["jnp"], finals["pallas"], rtol=1e-4)
+
+
+def test_tracked_sharded_parity_single_shard_mesh():
+    """pallas_sharded tracks identically (1e-5 vs the tracked jnp
+    oracle) on the in-process (1,)-mesh; multi-device meshes run in the
+    shard_check acceptance (--track-alpha, see CI)."""
+    params = _params(jax.random.key(1))
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha="auto",
+                        beta2=0.3)
+    fl = FLConfig(n_clients=4)
+    st_j, ms_j = _run_tracked("jnp", params, ch, ad, fl, rounds=5)
+    st_s, ms_s = _run_tracked("pallas_sharded", params, ch, ad, fl,
+                              rounds=5, mesh=make_auto_mesh((1,), ("data",)))
+    np.testing.assert_allclose(float(st_j.alpha_hat), float(st_s.alpha_hat),
+                               rtol=1e-5)
+    p_j, _ = unpack_train_state(ad, st_j)
+    p_s, _ = unpack_train_state(ad, st_s)
+    for x, y in zip(jax.tree.leaves(p_j), jax.tree.leaves(p_s)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5,
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ms_j.alpha_hat),
+                               np.asarray(ms_s.alpha_hat), rtol=1e-5)
+
+
+def test_tracking_works_on_int8_uplink():
+    """The receive-kernel epilogue serves the quantized MAC too: the
+    estimator sees the same interference (injected post-dequantize)."""
+    params = _params(jax.random.key(2))
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                          uplink=UplinkConfig(mode="int8"))
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha="auto",
+                        beta2=0.3)
+    fl = FLConfig(n_clients=4)
+    st, ms = _run_tracked("pallas", params, ch, ad, fl, rounds=20)
+    assert abs(float(ms.alpha_hat[-1]) - 1.5) < 0.15
+
+
+def test_tracking_without_interference_holds_sentinel():
+    """No interference -> nothing to estimate: alpha_hat stays at the
+    unseeded sentinel and the update falls back to the Gaussian
+    endpoint (alpha = 2) instead of dividing by a nonsense root."""
+    params = _params(jax.random.key(4))
+    ch = OTAChannelConfig(alpha=1.5, interference=False)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha="auto",
+                        beta2=0.3)
+    fl = FLConfig(n_clients=2)
+    for backend in ("jnp", "pallas"):
+        st, ms = _run_tracked(backend, params, ch, ad, fl, rounds=3)
+        assert float(st.alpha_hat) == 0.0
+        assert float(ms.alpha_hat[-1]) == 0.0
+        assert np.isfinite(float(ms.loss[-1]))
+
+
+def test_static_alpha_reports_config_value():
+    params = _params(jax.random.key(5))
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    st, ms = _run_tracked("pallas", params, ch, ad, FLConfig(n_clients=2),
+                          rounds=2)
+    assert np.all(np.asarray(ms.alpha_hat) == 1.5)
+    assert float(st.alpha_hat) == 0.0   # tracker never ran
+
+
+# ---------------------------------------------------------------------------
+# Guard rails.
+# ---------------------------------------------------------------------------
+
+def test_pytree_api_refuses_auto():
+    ch, fl = OTAChannelConfig(), FLConfig(n_clients=2)
+    ad = AdaptiveConfig(optimizer="adam_ota", alpha="auto")
+    with pytest.raises(ValueError, match="resident"):
+        make_round_step(_loss_fn, ch, ad, fl, backend="jnp")
+    from repro.core.shard import shard_round_step
+    with pytest.raises(ValueError, match="resident"):
+        shard_round_step(_loss_fn, ch, ad, fl,
+                         make_auto_mesh((1,), ("data",)))
+
+
+def test_config_validates_alpha_strings():
+    with pytest.raises(ValueError, match="auto"):
+        AdaptiveConfig(alpha="online")
+    with pytest.raises(ValueError, match="alpha_ema"):
+        AdaptiveConfig(alpha="auto", alpha_ema=0.0)
+    assert AdaptiveConfig(alpha="auto").track_alpha
+    assert not AdaptiveConfig(alpha=1.5).track_alpha
+
+
+def test_update_without_tracked_alpha_raises():
+    """An "auto" config whose update never received the tracked scalar
+    must fail loudly, not silently use a stale float."""
+    params = _params(jax.random.key(6))
+    ad = AdaptiveConfig(optimizer="adam_ota", alpha="auto")
+    opt = make_server_optimizer(ad)
+    from repro.core import init_server
+    g = jax.tree.map(jnp.zeros_like, params)
+    with pytest.raises(ValueError, match="threaded"):
+        opt.update(g, init_server(params, ad), params)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume of the tracker (satellite).
+# ---------------------------------------------------------------------------
+
+def test_tracked_checkpoint_resume_is_bitwise(tmp_path):
+    """save -> load -> continue under --track-alpha semantics: the
+    resumed trajectory (including alpha_hat) is bitwise-identical to the
+    uninterrupted one, alpha_hat survives the slab-state fingerprint
+    check, and layout drift is still refused."""
+    params = _params(jax.random.key(7))
+    n = 2
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha="auto",
+                        beta2=0.3)
+    fl = FLConfig(n_clients=n)
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend="pallas")
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(5), t)
+                      for t in range(4)])
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(4), (4, n) + p.shape),
+        params)
+
+    st_full, _ = run(init_train_state(ad, params), keys, batches)
+
+    st_half, _ = run(init_train_state(ad, params), keys[:2],
+                     jax.tree.map(lambda x: x[:2], batches))
+    assert float(st_half.alpha_hat) > 0.0   # the tracker is seeded
+    path = os.path.join(tmp_path, "round_2.npz")
+    ckpt.save_slab_state(path, st_half)
+    st_loaded, _ = ckpt.load_slab_state(path, st_half.spec)
+    np.testing.assert_array_equal(np.asarray(st_loaded.alpha_hat),
+                                  np.asarray(st_half.alpha_hat))
+    step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="pallas")
+    st = st_loaded
+    for t in (2, 3):
+        st, _ = step(st, keys[t], jax.tree.map(lambda x: x[t], batches))
+    np.testing.assert_array_equal(np.asarray(st.alpha_hat),
+                                  np.asarray(st_full.alpha_hat))
+    np.testing.assert_array_equal(np.asarray(st.w), np.asarray(st_full.w))
+    for a, b in zip(st.opt, st_full.opt):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # layout drift is still refused with the tracker state present
+    with pytest.raises(ValueError, match="layout mismatch"):
+        ckpt.load_slab_state(path, make_slab_spec(params, shards=4))
+
+
+def test_train_cli_track_alpha_resume_is_bitwise(tmp_path):
+    """launch.train --track-alpha --resume: interrupted + resumed equals
+    uninterrupted bitwise across processes (the checkpointed alpha_hat
+    seeds the resumed EMA exactly)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    base = ["--preset", "tiny", "--rounds", "4", "--clients", "2",
+            "--batch", "1", "--seq", "16", "--seed", "3", "--track-alpha",
+            "--log-every", "1000", "--scan-rounds", "3", "--ckpt-every", "2"]
+
+    def train(extra):
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", *base, *extra],
+            capture_output=True, text=True, cwd=REPO_ROOT, env=env,
+            timeout=600)
+        assert res.returncode == 0, res.stdout + res.stderr
+        return res.stdout
+
+    full_dir, part_dir = str(tmp_path / "full"), str(tmp_path / "part")
+    out_full = train(["--ckpt-dir", full_dir])
+    assert "alpha_hat" in out_full
+    train(["--ckpt-dir", part_dir, "--rounds", "2"])
+    out = train(["--ckpt-dir", part_dir, "--resume"])
+    assert "resumed from" in out and "at round 2" in out
+
+    a = np.load(os.path.join(full_dir, "round_4.npz"))
+    b = np.load(os.path.join(part_dir, "round_4.npz"))
+    assert set(a.files) == set(b.files)
+    assert "alpha_hat" in a.files
+    assert float(a["alpha_hat"]) > 0.0
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k])

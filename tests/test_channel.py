@@ -90,6 +90,40 @@ def test_alpha_must_be_valid():
         OTAChannelConfig(fading="nakagami")
 
 
+@pytest.mark.parametrize("fading,threshold", [("rayleigh", 0.2),
+                                              ("rayleigh", 0.6),
+                                              ("gaussian", 0.5),
+                                              ("none", 0.2)])
+def test_power_control_moments_match_empirical(fading, threshold):
+    """Satellite bugfix: with power_control=True the effective h is
+    Bernoulli(p), p = P(h >= pc_threshold) — fading_mean/fading_var must
+    report p and p(1-p) (they used to report the raw Rayleigh moments,
+    ignoring truncated inversion entirely)."""
+    cfg = OTAChannelConfig(fading=fading, power_control=True,
+                           pc_threshold=threshold)
+    h = np.asarray(sample_fading(jax.random.key(13), cfg, (400_000,)))
+    p = cfg.pc_transmit_prob
+    assert cfg.fading_mean == pytest.approx(p)
+    assert cfg.fading_var == pytest.approx(p * (1.0 - p))
+    assert abs(h.mean() - cfg.fading_mean) < 5e-3
+    assert abs(h.var() - cfg.fading_var) < 5e-3
+    # E[h^2] == p exactly for a 0/1 variable — the moment Upsilon uses
+    assert cfg.fading_mean**2 + cfg.fading_var == pytest.approx(p)
+
+
+def test_power_control_upsilon_uses_effective_moments():
+    """Upsilon's fading term must shrink when power control replaces a
+    high-variance channel with near-sure 0/1 transmission (and not be
+    computed from the raw Rayleigh moments)."""
+    raw = OTAChannelConfig(fading="rayleigh", interference=False)
+    pc = OTAChannelConfig(fading="rayleigh", power_control=True,
+                          pc_threshold=0.2, interference=False)
+    p = pc.pc_transmit_prob
+    # E[h^2]: raw Rayleigh has mu^2(1 + (4/pi - 1)) > p
+    assert raw.fading_mean**2 + raw.fading_var > p
+    assert upsilon(pc, 1000, 50, 1.0) < upsilon(raw, 1000, 50, 1.0)
+
+
 def test_power_control_truncated_inversion():
     """With CSI power control, effective fading is 0/1 (silent in deep
     fades, perfectly inverted otherwise) and most clients transmit."""

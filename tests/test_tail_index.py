@@ -16,8 +16,10 @@ import numpy as np
 import pytest
 
 from repro.core.channel import OTAChannelConfig, sample_alpha_stable
-from repro.core.tail_index import (estimate_from_gradient_residual,
-                                   hill_estimate, log_moment_estimate)
+from repro.core.tail_index import (alpha_from_log_moments,
+                                   estimate_from_gradient_residual,
+                                   hill_estimate, log_moment_estimate,
+                                   log_moment_stats, update_alpha_ema)
 
 N_SAMPLES = 200_000
 ALPHA_GRID = (1.2, 1.5, 1.8, 2.0)
@@ -90,6 +92,70 @@ def test_residual_estimation_recovers_channel_alpha():
     a_hat, scale_hat = estimate_from_gradient_residual(g_clean, g_clean + xi)
     assert abs(float(a_hat) - cfg.alpha) < 0.05
     np.testing.assert_allclose(float(scale_hat), cfg.xi_scale, rtol=0.05)
+
+
+@pytest.mark.parametrize("n", [1, 6, 8, 9])
+def test_hill_small_samples_do_not_raise(n):
+    """Regression: k = max(8, k_frac*n) used to exceed top_k's window
+    for n < 9 (ValueError at n=6); k is now clamped to n-1 and the
+    degenerate cases return finite clipped values."""
+    a = hill_estimate(jnp.ones((n,), jnp.float32))
+    assert np.isfinite(float(a)) and 0.5 <= float(a) <= 4.0
+    # all-equal samples: zero log-spacing denominator -> the upper clip
+    if n >= 2:
+        assert float(a) == 4.0
+    b = hill_estimate(sample_alpha_stable(jax.random.key(8), 1.5, (n,)))
+    assert np.isfinite(float(b)) and 0.5 <= float(b) <= 4.0
+
+
+def test_hill_all_equal_large_sample_clips():
+    """The zero-denominator guard is independent of the n >= 9 fix."""
+    a = hill_estimate(jnp.full((1000,), 2.5, jnp.float32))
+    assert float(a) == 4.0
+
+
+@pytest.mark.parametrize("alpha", ALPHA_GRID)
+def test_alpha_from_log_moments_matches_sample_estimator(alpha):
+    """The sufficient-statistics form (what the fused kernel epilogues
+    feed) reproduces the raw-sample log-moment estimate."""
+    x = _draw(alpha, seed=2)
+    a_raw, c_raw = log_moment_estimate(x)
+    a_st, c_st = alpha_from_log_moments(log_moment_stats(x))
+    np.testing.assert_allclose(float(a_st), float(a_raw), atol=2e-3)
+    np.testing.assert_allclose(float(c_st), float(c_raw), rtol=2e-3)
+
+
+def test_log_moment_stats_are_additive():
+    """Stats from disjoint slices ADD to the full-vector stats — the
+    contract that lets shard slices psum their 3-vectors."""
+    x = _draw(1.5, seed=3, n=4096)
+    whole = log_moment_stats(x)
+    parts = log_moment_stats(x[:1000]) + log_moment_stats(x[1000:])
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(whole),
+                               rtol=1e-5)
+    # zeros (the slab padding tail) contribute nothing
+    padded = log_moment_stats(jnp.concatenate([x, jnp.zeros(512)]))
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(whole),
+                               rtol=1e-6)
+
+
+def test_update_alpha_ema_seeding_and_gating():
+    stats = log_moment_stats(_draw(1.5, seed=4, n=65536))
+    est, _ = alpha_from_log_moments(stats)
+    # unseeded (sentinel 0): adopts the raw estimate
+    first = update_alpha_ema(jnp.zeros(()), stats, rho=0.1)
+    np.testing.assert_allclose(float(first), float(est), rtol=1e-6)
+    # seeded: blends with weight rho
+    second = update_alpha_ema(jnp.asarray(2.0), stats, rho=0.1)
+    np.testing.assert_allclose(float(second), 0.9 * 2.0 + 0.1 * float(est),
+                               rtol=1e-6)
+    # no residual observed (count 0): previous value passes through
+    empty = log_moment_stats(jnp.zeros((128,)))
+    assert float(empty[0]) == 0.0
+    held = update_alpha_ema(jnp.asarray(1.7), empty, rho=0.1)
+    assert float(held) == pytest.approx(1.7)
+    # ... including the unseeded sentinel itself
+    assert float(update_alpha_ema(jnp.zeros(()), empty, rho=0.1)) == 0.0
 
 
 def test_estimators_are_jittable():

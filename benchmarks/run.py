@@ -124,13 +124,20 @@ def run_train_loop_bench(quick: bool, out_dir: str) -> list:
     sizes = (1 << 14,) if quick else (1 << 14, 1 << 16)
     rounds = 4 if quick else 8
     iters = 1 if quick else 2
+    # Streamed-client-axis records (clients/sec): quick stops at 1e5;
+    # the full tier includes the million-client round — the O(chunk)
+    # memory headline a resident stack cannot reach on one host.
+    stream_clients = ([1_000, 100_000] if quick
+                      else [1_000, 100_000, 1_000_000])
     records = _bench_subprocess(
         "benchmarks.train_loop_bench",
         ["--sizes", *[str(s) for s in sizes], "--rounds", str(rounds),
-         "--iters", str(iters)])
+         "--iters", str(iters),
+         "--stream-clients", *[str(n) for n in stream_clients]])
     _write_bench_json("BENCH_train_loop.json", records, quick, out_dir,
                       {"bench": "train_loop", "sizes": list(sizes),
-                       "rounds": rounds, "iters": iters})
+                       "rounds": rounds, "iters": iters,
+                       "stream_clients": stream_clients})
     return records
 
 

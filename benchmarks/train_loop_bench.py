@@ -48,7 +48,17 @@ full psum of [g, clean] plus a masked-psum regather of every row —
 moved 2*2d + 2(k+1)d = 10d f32 words, 3.3x the resident loop; it no
 longer exists to time.)
 
+``--stream-clients`` adds the STREAMED-client-axis records (PR 6): the
+round scans the population in ``--stream-chunk`` rows through the
+accumulating transmit kernel, client batches are synthesized in-graph
+(``batch_gen``) so nothing of size N is ever materialised, and the
+headline column is ``clients_per_sec`` — the axis the resident loop
+cannot scale (a million f32 clients at d=4096 would need a 16 TB
+gradient stack; the streamed round peaks at chunk * d).
+
     PYTHONPATH=src python -m benchmarks.train_loop_bench --sizes 16384
+    PYTHONPATH=src python -m benchmarks.train_loop_bench --stream-only \
+        --stream-clients 1000 100000 1000000
 """
 
 import sys
@@ -179,6 +189,60 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     return records
 
 
+def bench_streamed_loop(n_params: int, n_clients: int, chunk: int = 2000,
+                        sample_rate: float = 1.0, rounds: int = 2,
+                        iters: int = 1, backend: str = "jnp") -> list:
+    """Streamed-client-axis rounds at population sizes the resident loop
+    cannot hold: batches are synthesized in-graph per chunk, so peak
+    memory is O(chunk * d) no matter how large N gets."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                            init_train_state, make_slab_round_runner)
+
+    chunk = min(chunk, n_clients)
+    params = {"w": jax.random.normal(jax.random.key(0), (n_params,),
+                                     jnp.float32)}
+
+    def loss_fn(p, b):
+        return jnp.mean((p["w"] - jnp.sin(b["phase"])) ** 2)
+
+    def batch_gen(key, idx):
+        # The client's "data" is a deterministic function of its index:
+        # nothing of size N is ever materialised on the host.
+        return {"phase": idx.astype(jnp.float32) * 1e-3}
+
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1, backend=backend)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5,
+                        backend=backend)
+    fl = FLConfig(n_clients=n_clients, client_chunk=chunk,
+                  sample_rate=sample_rate)
+    run = make_slab_round_runner(loss_fn, ch, ad, fl, backend=backend,
+                                 batch_gen=batch_gen)
+    st0 = init_train_state(ad, params)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(2), t)
+                      for t in range(rounds)])
+
+    jax.block_until_ready(run(st0, keys))            # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run(st0, keys)
+    jax.block_until_ready(out)
+    us_round = (time.perf_counter() - t0) / iters / rounds * 1e6
+    cps = n_clients * 1e6 / us_round
+    peak = 4 * chunk * n_params            # streamed gradient stack bytes
+    resident = 4 * n_clients * n_params    # what the resident stack needs
+    return [dict(
+        name=f"train_loop_streamed_{n_clients}", backend=backend,
+        variant="streamed", uplink="f32", n_params=n_params,
+        n_clients=n_clients, client_chunk=chunk, sample_rate=sample_rate,
+        rounds=rounds, mesh="1", us_per_round=us_round, us_per_call=us_round,
+        clients_per_sec=cps, rounds_per_sec=1e6 / us_round,
+        stream_peak_bytes=peak, resident_equiv_bytes=resident,
+        derived=(f"clients_per_sec={cps:.0f};chunk={chunk};"
+                 f"stream_peak_bytes={peak};resident_equiv_bytes={resident}"))]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+", default=[1 << 14])
@@ -186,12 +250,37 @@ def main() -> None:
     ap.add_argument("--rounds", type=positive_int, default=8)
     ap.add_argument("--mesh", default="2")
     ap.add_argument("--iters", type=positive_int, default=2)
+    ap.add_argument("--host-devices", type=positive_int, default=None,
+                    help="forced host device floor (consumed from raw "
+                         "argv before the jax import at module top)")
+    ap.add_argument("--stream-clients", type=int, nargs="*", default=[],
+                    help="client populations for the streamed-axis "
+                         "records (e.g. 1000 100000 1000000)")
+    ap.add_argument("--stream-chunk", type=positive_int, default=2000)
+    ap.add_argument("--stream-sample-rate", type=float, default=1.0)
+    ap.add_argument("--stream-rounds", type=positive_int, default=2)
+    ap.add_argument("--stream-size", type=int, default=4096,
+                    help="model size d of the streamed records")
+    ap.add_argument("--stream-backend", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="engine of the streamed records: jnp is the "
+                         "realistic CPU wall-clock (pallas on this "
+                         "container is interpret mode, i.e. a Python "
+                         "kernel loop)")
+    ap.add_argument("--stream-only", action="store_true",
+                    help="skip the resident/perround records")
     args = ap.parse_args()
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     records = []
-    for n in args.sizes:
-        records.extend(bench_train_loop(n, args.clients, args.rounds,
-                                        mesh_shape, args.iters))
+    if not args.stream_only:
+        for n in args.sizes:
+            records.extend(bench_train_loop(n, args.clients, args.rounds,
+                                            mesh_shape, args.iters))
+    for n_clients in args.stream_clients:
+        records.extend(bench_streamed_loop(
+            args.stream_size, n_clients, args.stream_chunk,
+            args.stream_sample_rate, args.stream_rounds,
+            backend=args.stream_backend))
     json.dump(records, sys.stdout)
 
 

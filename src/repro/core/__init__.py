@@ -20,6 +20,8 @@ from repro.core.shard import (client_axes_of, n_client_shards,
                               shard_round_step)
 from repro.core.slab import (SlabSpec, make_slab_spec, slab_to_tree,
                              stack_to_slab, tree_to_slab, zeros_slab)
+from repro.core.stream import (PART_FOLD, StreamParts, participation_mask,
+                               round_participation, streamed_round_parts)
 from repro.core.slab_state import (SlabTrainState, init_train_state,
                                    pack_train_state, unpack_train_state)
 from repro.core.tail_index import (alpha_from_log_moments, effective_alpha,
@@ -43,4 +45,6 @@ __all__ = [
     "n_client_shards", "shard_round_step", "SlabTrainState",
     "init_train_state", "pack_train_state", "unpack_train_state",
     "make_slab_round_step", "make_slab_round_runner", "run_rounds_slab",
+    "PART_FOLD", "StreamParts", "participation_mask", "round_participation",
+    "streamed_round_parts",
 ]

@@ -53,6 +53,7 @@ same trajectory from the same key.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -76,10 +77,56 @@ class FLConfig:
     n_clients: int = 50
     local_steps: int = 1          # k; 1 == Algorithm 1 (one grad per round)
     local_lr: float = 0.05        # local SGD lr when local_steps > 1
+    # Streamed client axis (PR 6, repro.core.stream): chunk the client
+    # rows through the accumulating transmit kernel so peak memory is
+    # O(client_chunk * d) regardless of n_clients. None == resident
+    # (all rows in one chunk; the bitwise-parity configuration).
+    client_chunk: Optional[int] = None
+    # Partial participation: each client joins this round i.i.d. with
+    # this probability (mask keyed off the round key, identical on all
+    # backends). 1.0 == everyone, the pre-sampling bitwise path.
+    sample_rate: float = 1.0
+    # Per-client aggregation weights (e.g. dataset sizes); None ==
+    # uniform. The noisy aggregate is sum_n mask_n w_n h_n g_n
+    # normalised by sum_n mask_n w_n, so any uniform tuple (c, ..., c)
+    # reduces to the 1/N path.
+    client_weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in [0, 1], got "
+                             f"{self.sample_rate}")
+        if self.client_chunk is not None and self.client_chunk < 1:
+            raise ValueError(f"client_chunk must be >= 1, got "
+                             f"{self.client_chunk}")
+        if self.client_weights is not None:
+            w = tuple(float(x) for x in self.client_weights)
+            if len(w) != self.n_clients:
+                raise ValueError(f"client_weights must have one entry per "
+                                 f"client: got {len(w)} for "
+                                 f"{self.n_clients} clients")
+            if not all(math.isfinite(x) and x >= 0.0 for x in w):
+                raise ValueError("client_weights must be finite and >= 0")
+            if sum(w) <= 0.0:
+                raise ValueError("client_weights must sum to > 0")
+            object.__setattr__(self, "client_weights", w)
+
+    @property
+    def dynamic_norm(self) -> bool:
+        """True when the aggregate normaliser is a round-dependent
+        value (sum of participating weights) instead of the static 1/N."""
+        return self.sample_rate < 1.0 or self.client_weights is not None
+
+    @property
+    def dynamic_round(self) -> bool:
+        """True when the round must take the streamed/participating
+        path (repro.core.stream) instead of the resident one."""
+        return self.client_chunk is not None or self.dynamic_norm
 
 
 class RoundMetrics(NamedTuple):
-    loss: jax.Array               # mean client loss before the update
+    loss: jax.Array               # mean participating-client loss before
+                                  # the update
     grad_norm: jax.Array          # L2 norm of the clean aggregated gradient
     noisy_grad_norm: jax.Array    # L2 norm of g_t after the channel
     fading_mean: jax.Array        # mean of this round's h draw
@@ -88,6 +135,9 @@ class RoundMetrics(NamedTuple):
                                   # estimate under alpha == "auto" (0.0
                                   # until first seeded), else the static
                                   # config float
+    n_participants: jax.Array     # f32 count of clients in this round's
+                                  # aggregate (== n_clients without
+                                  # sampling; 0.0 marks a skipped round)
 
 
 def _tree_l2(t: PyTree) -> jax.Array:
@@ -177,6 +227,12 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             '(make_slab_round_step / make_slab_round_runner, or '
             'launch.train --track-alpha): the per-round pytree API has no '
             'resident alpha_hat to carry the estimator EMA across rounds')
+    if fl_cfg.dynamic_round:
+        raise ValueError(
+            "client_chunk / sample_rate < 1 / client_weights need the "
+            "slab-resident loop (make_slab_round_step / "
+            "make_slab_round_runner): the per-round pytree API has no "
+            "streamed uplink path")
     alpha_const = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
     if backend == "pallas_sharded":
         from repro.core.shard import shard_round_step
@@ -204,6 +260,7 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             noisy_grad_norm=_tree_l2(g_t),
             fading_mean=jnp.mean(h),
             alpha_hat=alpha_const,
+            n_participants=jnp.asarray(float(fl_cfg.n_clients), jnp.float32),
         )
         return new_params, new_state, metrics
 
@@ -224,6 +281,7 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
             fading_mean=jnp.mean(h),
             alpha_hat=alpha_const,
+            n_participants=jnp.asarray(float(fl_cfg.n_clients), jnp.float32),
         )
         return new_params, new_state, metrics
 
@@ -242,7 +300,7 @@ def init_server(params: PyTree, adaptive_cfg: AdaptiveConfig) -> ServerOptState:
 def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                          adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
                          jit: bool = True, backend: Optional[str] = None,
-                         mesh=None):
+                         mesh=None, batch_gen=None):
     """Slab-state twin of ``make_round_step``.
 
     Returns ``step(state, key, client_batches) -> (state, metrics)``
@@ -262,6 +320,17 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
 
     All backends consume identical PRNG draws, so their multi-round
     trajectories agree to f32 rounding.
+
+    A DYNAMIC round config (``fl_cfg.client_chunk`` / ``sample_rate``
+    / ``client_weights``) routes the jnp and pallas backends through
+    the streamed uplink (``repro.core.stream``): the client axis is
+    scanned in O(client_chunk * d) memory, participation and weights
+    fold into the effective fading, and a zero-participation round
+    SKIPS the server update (state unchanged, metrics recorded with
+    ``n_participants == 0``). ``batch_gen(key, idx)`` replaces
+    materialised ``client_batches`` (pass None for them then) with
+    in-graph batch synthesis for populations too large to hold — only
+    the streamed single-device backends support it.
     """
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
@@ -270,6 +339,9 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         if mesh is None:
             raise ValueError('backend="pallas_sharded" needs a mesh; pass '
                              'make_slab_round_step(..., mesh=...)')
+        if batch_gen is not None:
+            raise ValueError('batch_gen= is only supported by the streamed '
+                             'single-device backends, not "pallas_sharded"')
         return make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg,
                                     fl_cfg, mesh, jit=jit)
     if mesh is not None:
@@ -279,6 +351,68 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             'backend="pallas_sharded" for distributed rounds')
     track = adaptive_cfg.track_alpha
     client_fn = _client_update(loss_fn, fl_cfg)
+    if fl_cfg.dynamic_round:
+        from repro.core.adaptive import slab_update_slabs
+        from repro.core.stream import streamed_round_parts
+        use_kernels = backend != "jnp"
+
+        def step(state: SlabTrainState, key, client_batches=None):
+            spec = state.spec
+            params = slab_to_tree(spec, state.w)
+            parts = streamed_round_parts(
+                key, channel_cfg, fl_cfg, spec, client_fn, params,
+                client_batches=client_batches, batch_gen=batch_gen,
+                pilot_stats=track, use_kernels=use_kernels)
+            # Zero-participation skip: nobody transmitted, so there is
+            # no aggregate to apply — the server state carries over
+            # unchanged (only the round counter advances) and the
+            # metrics record the dead round. Only a dynamic normaliser
+            # can produce a dead round; with the static 1/N divisor the
+            # selects are omitted entirely (a dead ``where`` changes
+            # how XLA fuses the update kernel, costing the chunk >= N
+            # bitwise contract).
+            can_skip = fl_cfg.dynamic_norm
+            participated = parts.norm > 0.0
+            if track:
+                a_new = update_alpha_ema(state.alpha_hat, parts.stats,
+                                         adaptive_cfg.alpha_ema)
+                alpha_hat = (jnp.where(participated, a_new, state.alpha_hat)
+                             if can_skip else a_new)
+                alpha_arg = effective_alpha(alpha_hat)
+                alpha_metric = alpha_hat
+            else:
+                alpha_hat = state.alpha_hat
+                alpha_arg = None
+                alpha_metric = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
+            w_in = state.w
+            if any(dt != jnp.float32 for dt in spec.dtypes):
+                w_in = tree_to_slab(spec, params)
+            new_opt, w_new = slab_update_slabs(adaptive_cfg, parts.g_slab,
+                                               state.opt, w_in,
+                                               alpha=alpha_arg)
+            if can_skip:
+                w_new = jnp.where(participated, w_new, state.w)
+                new_opt = tuple(jnp.where(participated, o_n, o_o)
+                                for o_n, o_o in zip(new_opt, state.opt))
+            nf = jnp.maximum(parts.n_participants, 1.0)
+            metrics = RoundMetrics(
+                loss=parts.loss_sum / nf,
+                grad_norm=jnp.sqrt(jnp.sum(jnp.square(
+                    parts.clean_slab / nf))),
+                noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(parts.g_slab))),
+                fading_mean=jnp.mean(parts.h),
+                alpha_hat=alpha_metric,
+                n_participants=parts.n_participants,
+            )
+            return SlabTrainState(state.step + 1, w_new, new_opt, alpha_hat,
+                                  spec), metrics
+
+        return jax.jit(step) if jit else step
+
+    if batch_gen is not None:
+        raise ValueError("batch_gen= needs a streamed round config "
+                         "(FLConfig.client_chunk); the resident path "
+                         "consumes materialised client_batches")
     if backend == "jnp":
         if not track:
             inner = make_round_step(loss_fn, channel_cfg, adaptive_cfg,
@@ -316,6 +450,8 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                 noisy_grad_norm=_tree_l2(g_t),
                 fading_mean=jnp.mean(h),
                 alpha_hat=alpha_hat,
+                n_participants=jnp.asarray(float(fl_cfg.n_clients),
+                                           jnp.float32),
             )
             return pack_train_state(adaptive_cfg, state.spec, new_params,
                                     new_state, alpha_hat=alpha_hat), metrics
@@ -360,6 +496,7 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             noisy_grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_slab))),
             fading_mean=jnp.mean(h),
             alpha_hat=alpha_metric,
+            n_participants=jnp.asarray(float(fl_cfg.n_clients), jnp.float32),
         )
         return SlabTrainState(state.step + 1, w_new, new_opt, alpha_hat,
                               spec), metrics
@@ -370,7 +507,7 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
 def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                            adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
                            jit: bool = True, backend: Optional[str] = None,
-                           mesh=None):
+                           mesh=None, batch_gen=None):
     """R rounds as ONE ``jax.lax.scan`` over the resident state.
 
     Returns ``run(state, keys, client_batches) -> (state, metrics)``
@@ -379,6 +516,11 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
     ``backend="pallas_sharded"`` the scan runs *inside* ``shard_map``
     (each device scans over its resident slices — no per-round dispatch,
     no full-model regather anywhere in the scanned body).
+
+    With ``batch_gen(key, idx)`` (streamed in-graph data synthesis, see
+    ``make_slab_round_step``) there are no materialised batches: call
+    ``run(state, keys)`` and the scan carries keys only — nothing in
+    the round scales with N beyond O(N) scalars (fading, mask).
     """
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
@@ -387,10 +529,27 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         if mesh is None:
             raise ValueError('backend="pallas_sharded" needs a mesh; pass '
                              'make_slab_round_runner(..., mesh=...)')
+        if batch_gen is not None:
+            raise ValueError('batch_gen= is only supported by the streamed '
+                             'single-device backends, not "pallas_sharded"')
         return make_shard_slab_runner(loss_fn, channel_cfg, adaptive_cfg,
                                       fl_cfg, mesh, jit=jit)
     step = make_slab_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
-                                jit=False, backend=backend, mesh=mesh)
+                                jit=False, backend=backend, mesh=mesh,
+                                batch_gen=batch_gen)
+
+    if batch_gen is not None:
+        def run(state: SlabTrainState, keys, client_batches=None):
+            if client_batches is not None:
+                raise ValueError("batch_gen= runner takes no materialised "
+                                 "client_batches")
+
+            def scanned(s, key):
+                return step(s, key)
+
+            return jax.lax.scan(scanned, state, keys)
+
+        return jax.jit(run) if jit else run
 
     def run(state: SlabTrainState, keys, client_batches):
         def scanned(s, xs):
@@ -457,11 +616,13 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
         gn = jax.device_get(ms.grad_norm)
         ngn = jax.device_get(ms.noisy_grad_norm)
         ah = jax.device_get(ms.alpha_hat)
+        np_ = jax.device_get(ms.n_participants)
         for i in range(r):
             history.append({"round": t + i, "loss": float(loss[i]),
                             "grad_norm": float(gn[i]),
                             "noisy_grad_norm": float(ngn[i]),
-                            "alpha_hat": float(ah[i])})
+                            "alpha_hat": float(ah[i]),
+                            "n_participants": float(np_[i])})
         t += r
         if eval_fn is not None and eval_every and t % eval_every == 0:
             params, _ = unpack_train_state(adaptive_cfg, state)
@@ -513,7 +674,8 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
         rec = {"round": t, "loss": float(m.loss),
                "grad_norm": float(m.grad_norm),
                "noisy_grad_norm": float(m.noisy_grad_norm),
-               "alpha_hat": float(m.alpha_hat)}
+               "alpha_hat": float(m.alpha_hat),
+               "n_participants": float(m.n_participants)}
         if eval_fn is not None and eval_every and (t + 1) % eval_every == 0:
             rec.update(eval_fn(params))
         history.append(rec)

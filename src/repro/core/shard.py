@@ -199,13 +199,8 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
     ``pilot_stats``; the caller psums the 3-vectors — stats are
     subset-agnostic by the zero-mask contract).
     """
-    from repro.kernels.ota_channel import (LANE, ota_receive_slab,
-                                           ota_transmit_slab)
+    from repro.kernels.ota_channel import ota_transmit_slab
 
-    n_shards = math.prod(axis_sizes)
-    shard_len = spec.shard_len
-    sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
-                                                shard_len)
     stochastic = channel_cfg.uplink.stochastic_rounding
     if stochastic:
         r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
@@ -220,6 +215,27 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
     q_clean, s_clean = ota_transmit_slab(
         g_stack, ones, n_total=1, quantize=True, r=r_clean,
         stochastic=stochastic, interpret=channel_cfg.interpret)
+    return _exchange_and_receive(channel_cfg, q_noisy, s_noisy, q_clean,
+                                 s_clean, kx, idx, spec, axes, axis_sizes,
+                                 pilot_stats=pilot_stats)
+
+
+def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
+                          q_clean, s_clean, kx: jax.Array, idx: jax.Array,
+                          spec: SlabSpec, axes: Tuple[str, ...],
+                          axis_sizes: Tuple[int, ...],
+                          pilot_stats: bool = False):
+    """Steps 2-3 of the quantized MAC: exchange this transmitter's two
+    quantized payloads (noisy faded + clean diagnostic) over the wire
+    and run the fused receive launches on this device's slice. Shared by
+    the resident and the streamed uplink (which differ only in HOW the
+    partial sums were formed before quantization)."""
+    from repro.kernels.ota_channel import LANE, ota_receive_slab
+
+    n_shards = math.prod(axis_sizes)
+    shard_len = spec.shard_len
+    sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
+                                                shard_len)
 
     # Rows addressed per destination slice, exchanged over the wire.
     payload = jnp.stack([q_noisy, q_clean]).reshape(
@@ -265,56 +281,164 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     has_cast = any(dt != jnp.float32 for dt in spec.dtypes)
     uplink = channel_cfg.uplink
     track = adaptive_cfg.track_alpha
+    dynamic = fl_cfg.dynamic_round
+    dynamic_norm = fl_cfg.dynamic_norm
+    # client_chunk bounds the RESIDENT client rows per device: the local
+    # population streams through the accumulating transmit kernel in
+    # chunks of this many rows (the client axis is already divided by
+    # the mesh, so the chunk applies to each device's n_local share).
+    chunk = min(fl_cfg.client_chunk or n_local, n_local)
+    if n_local % chunk != 0:
+        raise ValueError(
+            f"client_chunk={chunk} must divide the per-device client "
+            f"count {n_local} (n_clients={n} over {n_shards} shards)")
 
     def round_body(step, w_slice, opt_slices, alpha_hat, key, local_batches):
         idx = linear_shard_index(axes)
         sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
                                                     shard_len)
+        w_orig, opt_orig, alpha_orig = w_slice, opt_slices, alpha_hat
 
         # --- 1. model broadcast: slices -> full slab -> pytree --------
         w_full = all_gather_slab(w_slice, axes)
         params = slab_to_tree(spec, w_full)
 
-        # --- 2. local client compute + power control (in h) -----------
-        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
-                                                               local_batches)
         kh, kx = jax.random.split(key)
         h = sample_fading(kh, channel_cfg, (n,))
-        h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
-        g_stack = stack_to_slab(spec, grads)              # (n_local, padded)
         stats = None
 
-        if uplink.quantized:
-            g_slice, clean_slice, stats = _int8_uplink(
-                channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
-                axis_sizes, n, pilot_stats=track)
+        if not dynamic:
+            # --- 2. local client compute + power control (in h) -------
+            grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(
+                params, local_batches)
+            h_loc = jax.lax.dynamic_slice_in_dim(h, idx * n_local, n_local)
+            g_stack = stack_to_slab(spec, grads)          # (n_local, padded)
+
+            if uplink.quantized:
+                g_slice, clean_slice, stats = _int8_uplink(
+                    channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
+                    axis_sizes, n, pilot_stats=track)
+            else:
+                # Fused transmit: the faded partial sum over the local
+                # client rows, full slab width, analog (f32) wire format.
+                from repro.kernels.ota_channel import ota_transmit_slab
+                partial = ota_transmit_slab(g_stack, h_loc, n_total=n,
+                                            interpret=channel_cfg.interpret)
+                clean_part = jnp.sum(g_stack, axis=0)
+
+                # The superposition: reduce-scatter == MAC + slice
+                # hand-off.
+                both = psum_scatter_slab(jnp.stack([partial, clean_part]),
+                                         axes, dim=1)     # (2, shard_len)
+                g_slice, clean_slice = both[0], both[1]
+
+                # Interference, synthesized on this slice only:
+                # full-width per-leaf draws (identical to the
+                # single-device backends — PRNG is compute, not comms),
+                # CMS transform on the slice; added once, post-reduce —
+                # the server's single RF front end.
+                if channel_cfg.interference:
+                    u, e = _cms_slab_inputs(kx, spec)
+                    xi_slice = channel_cfg.xi_scale * cms_transform(
+                        sl(u), sl(e), channel_cfg.alpha)
+                    g_slice = g_slice + xi_slice
+                    if track:
+                        # The pilot-stats reduction over this slice's
+                        # residual (the jnp mirror of the kernel
+                        # epilogue — the f32 sharded interference is
+                        # injected in jnp).
+                        stats = log_moment_stats(xi_slice)
+            loss_metric = jax.lax.pmean(jnp.mean(losses), axes)
+            norm = den = jnp.asarray(float(n), jnp.float32)
+            n_part = jnp.asarray(float(n), jnp.float32)
         else:
-            # Fused transmit: the faded partial sum over the local
-            # client rows, full slab width, analog (f32) wire format.
+            # --- 2'. STREAMED local client axis (repro.core.stream
+            # contract): participation mask and weights are full-width
+            # draws off the round key — identical on every device, no
+            # collective — folded into the effective fading; the local
+            # rows stream through the accumulating transmit kernel in
+            # O(chunk * d) memory.
+            from repro.core.stream import round_participation
             from repro.kernels.ota_channel import ota_transmit_slab
-            partial = ota_transmit_slab(g_stack, h_loc, n_total=n,
+            mask, gain = round_participation(key, fl_cfg)
+            h_eff = h * gain if dynamic_norm else h
+            n_div = 1 if dynamic_norm else n
+            n_part = jnp.sum(mask)
+            norm = jnp.sum(gain) if dynamic_norm else n_part
+            norm_safe = jnp.where(norm > 0.0, norm, 1.0)
+            h_loc = jax.lax.dynamic_slice_in_dim(h_eff, idx * n_local,
+                                                 n_local)
+            m_loc = jax.lax.dynamic_slice_in_dim(mask, idx * n_local,
+                                                 n_local)
+
+            def chunk_body(carry, c):
+                acc, clean, loss_sum = carry
+                start = c * chunk
+                batch = jax.tree.map(
+                    lambda b: jax.lax.dynamic_slice_in_dim(b, start, chunk),
+                    local_batches)
+                grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(
+                    params, batch)
+                g_stack = stack_to_slab(spec, grads)
+                h_c = jax.lax.dynamic_slice_in_dim(h_loc, start, chunk)
+                m_c = jax.lax.dynamic_slice_in_dim(m_loc, start, chunk)
+                acc = ota_transmit_slab(g_stack, h_c, n_total=n_div,
+                                        acc=acc,
                                         interpret=channel_cfg.interpret)
-            clean_part = jnp.sum(g_stack, axis=0)
+                clean = clean + jnp.sum(m_c[:, None] * g_stack, axis=0)
+                loss_sum = loss_sum + jnp.sum(m_c * losses)
+                return (acc, clean, loss_sum), None
 
-            # The superposition: reduce-scatter == MAC + slice hand-off.
-            both = psum_scatter_slab(jnp.stack([partial, clean_part]),
-                                     axes, dim=1)         # (2, shard_len)
-            g_slice, clean_slice = both[0], both[1]
+            zeros = jnp.zeros((spec.padded,), jnp.float32)
+            carry = (zeros, zeros, jnp.zeros((), jnp.float32))
+            if chunk == n_local:
+                carry, _ = chunk_body(carry, jnp.zeros((), jnp.int32))
+            else:
+                carry, _ = jax.lax.scan(
+                    chunk_body, carry,
+                    jnp.arange(n_local // chunk, dtype=jnp.int32))
+            partial, clean_part, loss_sum = carry
 
-            # Interference, synthesized on this slice only: full-width
-            # per-leaf draws (identical to the single-device backends —
-            # PRNG is compute, not comms), CMS transform on the slice;
-            # added once, post-reduce — the server's single RF front end.
-            if channel_cfg.interference:
-                u, e = _cms_slab_inputs(kx, spec)
-                xi_slice = channel_cfg.xi_scale * cms_transform(
-                    sl(u), sl(e), channel_cfg.alpha)
-                g_slice = g_slice + xi_slice
-                if track:
-                    # The pilot-stats reduction over this slice's
-                    # residual (the jnp mirror of the kernel epilogue —
-                    # the f32 sharded interference is injected in jnp).
-                    stats = log_moment_stats(xi_slice)
+            if uplink.quantized:
+                # Pre-divide the noisy partial by the (globally known)
+                # participation norm before quantization, so the
+                # dequantized superposition lands already normalised;
+                # the clean diagnostic partial stays raw (the metric
+                # divides by the participant count).
+                noisy_part = partial / norm_safe if dynamic_norm else partial
+                stochastic = uplink.stochastic_rounding
+                if stochastic:
+                    r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
+                    r_noisy, r_clean = r2[0], r2[1]
+                else:
+                    r_noisy = r_clean = None
+                one = jnp.ones((1,), jnp.float32)
+                q_noisy, s_noisy = ota_transmit_slab(
+                    noisy_part[None], one, n_total=1, quantize=True,
+                    r=r_noisy, stochastic=stochastic,
+                    interpret=channel_cfg.interpret)
+                q_clean, s_clean = ota_transmit_slab(
+                    clean_part[None], one, n_total=1, quantize=True,
+                    r=r_clean, stochastic=stochastic,
+                    interpret=channel_cfg.interpret)
+                g_slice, clean_slice, stats = _exchange_and_receive(
+                    channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx,
+                    idx, spec, axes, axis_sizes, pilot_stats=track)
+            else:
+                both = psum_scatter_slab(jnp.stack([partial, clean_part]),
+                                         axes, dim=1)
+                g_slice, clean_slice = both[0], both[1]
+                if dynamic_norm:
+                    g_slice = g_slice / norm_safe
+                if channel_cfg.interference:
+                    u, e = _cms_slab_inputs(kx, spec)
+                    xi_slice = channel_cfg.xi_scale * cms_transform(
+                        sl(u), sl(e), channel_cfg.alpha)
+                    g_slice = g_slice + xi_slice
+                    if track:
+                        stats = log_moment_stats(xi_slice)
+            den = jnp.maximum(n_part, 1.0)
+            loss_metric = jax.lax.psum(loss_sum, axes) / den
 
         # --- alpha loop: psum the per-slice stats, fold into the EMA --
         if track:
@@ -336,16 +460,27 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             w_slice = sl(tree_to_slab(spec, params))
         new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slice, opt_slices,
                                            w_slice, alpha=alpha_arg)
+        if dynamic_norm:
+            # Zero-participation skip: nobody transmitted, so the state
+            # carries over unchanged (only the round counter advances).
+            participated = norm > 0.0
+            w_new = jnp.where(participated, w_new, w_orig)
+            new_opt = tuple(jnp.where(participated, o_n, o_o)
+                            for o_n, o_o in zip(new_opt, opt_orig))
+            if track:
+                alpha_hat = jnp.where(participated, alpha_hat, alpha_orig)
+                alpha_metric = alpha_hat
 
         # Norms from per-slice squared sums: no full-width regather.
         metrics = RoundMetrics(
-            loss=jax.lax.pmean(jnp.mean(losses), axes),
+            loss=loss_metric,
             grad_norm=jnp.sqrt(jax.lax.psum(
-                jnp.sum(jnp.square(clean_slice)), axes)) / n,
+                jnp.sum(jnp.square(clean_slice)), axes)) / den,
             noisy_grad_norm=jnp.sqrt(jax.lax.psum(
                 jnp.sum(jnp.square(g_slice)), axes)),
             fading_mean=jnp.mean(h),
             alpha_hat=alpha_metric,
+            n_participants=n_part,
         )
         return step + 1, w_new, new_opt, alpha_hat, metrics
 

@@ -1,0 +1,263 @@
+"""Streamed client axis: O(chunk * d) rounds, participation, weights.
+
+The resident round materialises all N client gradients as one (N, d)
+slab before the MAC — N is capped by host memory, not by the channel.
+This module makes N a STREAMED axis instead (ROADMAP Open item 1): the
+round scans the client population in chunks of ``FLConfig.client_chunk``
+rows, each chunk's gradients are computed, faded, and folded into the
+running (d,) partial sum by the accumulating transmit kernel
+(``ota_transmit_slab(..., acc=...)``), and only the completed partial
+crosses the channel. Peak memory is O(chunk * d) regardless of N — a
+million simulated clients fit on one CPU host.
+
+Two wireless extensions ride on the same streamed transmit stage, both
+folded into the EFFECTIVE fading coefficient next to power control:
+
+* **Partial participation** — per-round Bernoulli sampling of the
+  client population (``FLConfig.sample_rate``). The mask is one full
+  (N,) uniform draw keyed off the round key via the ``PART_FOLD``
+  domain separator, never re-keyed per chunk or per shard — the same
+  full-draws-sliced contract as fading and stochastic rounding, so all
+  three backends (and every mesh shape) sample literally identical
+  clients.
+* **Per-client aggregation weights** — ``FLConfig.client_weights``
+  (e.g. dataset sizes, arXiv 2409.07822's weighted aggregation).
+
+With sampling/weights active the 1/N normaliser becomes
+``1 / sum_n mask_n * w_n``: the transmit launches accumulate the raw
+weighted faded sum (``n_total=1``) and the divisor is applied once to
+the completed partial, guarded against the zero-participation round
+(``norm_safe``; the round-step layer then SKIPS the server update so
+the state is unchanged — see ``make_slab_round_step``). Without them
+(``dynamic_norm`` False) the static ``1/n_clients`` divisor stays
+in-kernel, bit for bit.
+
+**Bitwise contract.** The finish stage pushes the completed partial
+through a single-ROW launch of the same fused channel/quantize kernels
+the resident path uses (``sum(1 * x)/1 == x`` exactly in f32), so with
+``chunk >= N``, full participation and no weights, the streamed round
+executes the exact resident op sequence and is bitwise-identical to
+the resident slab round on ``uplink="f32"`` — streaming is a pure
+memory optimization (tests/test_stream.py pins this un-jitted; under
+``jax.jit`` XLA may reassociate the client reduction differently
+between the two programs, so jitted trajectories are pinned at 1e-5
+like every other cross-engine pair). Uniform weights ``(c, ..., c)``
+likewise reduce to the 1/N path: the accumulated sum is
+``sum(h * c * g)`` and the divisor ``N * c``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import OTAChannelConfig, sample_fading
+from repro.core.ota import _interference_slab_inputs, uplink_sr_slab_inputs
+from repro.core.slab import SlabSpec, stack_to_slab
+
+PyTree = Any
+
+# PRNG domain separator of the participation draw (the same role
+# channel.SR_FOLD plays for stochastic rounding): the (N,) mask uniforms
+# are always ONE full draw from fold_in(round_key, PART_FOLD), sliced by
+# whoever needs a sub-range — never re-keyed — so jnp / pallas /
+# pallas_sharded sample identical clients by construction.
+PART_FOLD = 0xACCE
+
+
+def participation_mask(key: jax.Array, n_clients: int,
+                       sample_rate: float) -> jax.Array:
+    """This round's (N,) participation mask as f32 {0, 1}.
+
+    ``sample_rate >= 1`` short-circuits to all-ones WITHOUT consuming
+    PRNG state, so enabling sampling never perturbs the fading /
+    interference / SR draws of existing configs (and rate == 1 rounds
+    stay bitwise-identical to pre-sampling code)."""
+    if sample_rate >= 1.0:
+        return jnp.ones((n_clients,), jnp.float32)
+    u = jax.random.uniform(jax.random.fold_in(key, PART_FOLD),
+                           (n_clients,), jnp.float32)
+    return (u < sample_rate).astype(jnp.float32)
+
+
+def client_weight_array(fl_cfg) -> Optional[jax.Array]:
+    """The (N,) f32 aggregation-weight vector, or None when uniform."""
+    if fl_cfg.client_weights is None:
+        return None
+    return jnp.asarray(fl_cfg.client_weights, jnp.float32)
+
+
+def round_participation(key: jax.Array, fl_cfg):
+    """(mask, gain) of this round: the {0,1} participation mask and the
+    per-client transmit gain (mask * weights) that multiplies the
+    fading draw. Both full (N,) — sharded callers slice their rows."""
+    mask = participation_mask(key, fl_cfg.n_clients, fl_cfg.sample_rate)
+    w = client_weight_array(fl_cfg)
+    gain = mask if w is None else mask * w
+    return mask, gain
+
+
+class StreamParts(NamedTuple):
+    """Everything one streamed uplink pass produces (single device)."""
+    g_slab: jax.Array         # (padded,) noisy aggregate after the channel
+    h: jax.Array              # (N,) raw fading draw (for metrics)
+    mask: jax.Array           # (N,) participation mask
+    n_participants: jax.Array  # scalar f32: sum(mask)
+    norm: jax.Array           # scalar f32 normaliser: sum(mask * w)
+    loss_sum: jax.Array       # sum of participating clients' losses
+    clean_slab: jax.Array     # (padded,) unfaded participant gradient sum
+    stats: Optional[jax.Array]  # (3,) pilot log-moments (pilot_stats=True)
+
+
+def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
+                         fl_cfg, spec: SlabSpec,
+                         client_fn: Callable, params: PyTree,
+                         client_batches: PyTree = None,
+                         batch_gen: Optional[Callable] = None,
+                         pilot_stats: bool = False,
+                         use_kernels: bool = True) -> StreamParts:
+    """One streamed uplink pass: scan the client axis in chunks, fold
+    each chunk into the running partial via the accumulating transmit
+    kernel, then push the completed partial through the single-row
+    channel (or quantize + receive) launch.
+
+    ``client_batches`` holds materialised per-client batches (leaves
+    (N, ...), sliced per chunk); ``batch_gen(key, idx)`` instead
+    synthesizes the batch of the ``idx`` (chunk,)-int32 client rows
+    in-graph — required for client populations too large to materialise
+    (the million-client benchmark). Exactly one of the two.
+
+    ``use_kernels=False`` runs the op-mirrored ``kernels.ref`` path over
+    the same slab layout and the same draws (the jnp backend).
+    """
+    cfg = channel_cfg
+    n = fl_cfg.n_clients
+    chunk = min(fl_cfg.client_chunk or n, n)
+    if n % chunk != 0:
+        raise ValueError(f"client_chunk must divide n_clients: "
+                         f"{chunk} does not divide {n}")
+    if (client_batches is None) == (batch_gen is None):
+        raise ValueError("pass exactly one of client_batches / batch_gen")
+
+    mask, gain = round_participation(key, fl_cfg)
+    dynamic_norm = fl_cfg.dynamic_norm
+    kh, kx = jax.random.split(key)
+    h = sample_fading(kh, cfg, (n,))
+    # Participation and weights fold into the EFFECTIVE fading, next to
+    # power control; with neither active h_eff is h * 1.0 == h bitwise
+    # and the static 1/N divisor stays in-kernel.
+    h_eff = h * gain if dynamic_norm else h
+    n_div = 1 if dynamic_norm else n
+
+    if use_kernels:
+        from repro.kernels.ota_channel import ota_transmit_slab
+
+        def transmit(g_stack, h_c, acc):
+            return ota_transmit_slab(g_stack, h_c, n_total=n_div, acc=acc,
+                                     interpret=cfg.interpret)
+    else:
+        from repro.kernels.ref import ota_transmit_ref
+
+        def transmit(g_stack, h_c, acc):
+            return ota_transmit_ref(g_stack, h_c, n_total=n_div, acc=acc)
+
+    def body(carry, c):
+        acc, clean, loss_sum = carry
+        start = c * chunk
+        idx = start + jnp.arange(chunk)
+        if batch_gen is not None:
+            batch = batch_gen(key, idx)
+        else:
+            batch = jax.tree.map(
+                lambda b: jax.lax.dynamic_slice_in_dim(b, start, chunk),
+                client_batches)
+        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params, batch)
+        g_stack = stack_to_slab(spec, grads)
+        h_c = jax.lax.dynamic_slice_in_dim(h_eff, start, chunk)
+        m_c = jax.lax.dynamic_slice_in_dim(mask, start, chunk)
+        acc = transmit(g_stack, h_c, acc)
+        clean = clean + jnp.sum(m_c[:, None] * g_stack, axis=0)
+        loss_sum = loss_sum + jnp.sum(m_c * losses)
+        return (acc, clean, loss_sum), None
+
+    zeros = jnp.zeros((spec.padded,), jnp.float32)
+    if n == chunk:
+        # Single chunk — the chunk >= N parity configuration: no scan,
+        # no dynamic slicing (a traced slice start changes how XLA
+        # fuses the client-gradient graph, costing the bitwise
+        # contract), just the resident compute feeding the
+        # accumulating kernel once.
+        batch = (batch_gen(key, jnp.arange(n)) if batch_gen is not None
+                 else client_batches)
+        grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params, batch)
+        g_stack = stack_to_slab(spec, grads)
+        acc = transmit(g_stack, h_eff, zeros)
+        clean = jnp.sum(mask[:, None] * g_stack, axis=0)
+        loss_sum = jnp.sum(mask * losses)
+    else:
+        carry = (zeros, zeros, jnp.zeros((), jnp.float32))
+        carry, _ = jax.lax.scan(body, carry,
+                                jnp.arange(n // chunk, dtype=jnp.int32))
+        acc, clean, loss_sum = carry
+
+    n_part = jnp.sum(mask)
+    norm = jnp.sum(gain) if dynamic_norm else n_part
+    if dynamic_norm:
+        # Zero-participation guard: a dead round divides by 1 (the
+        # partial is all-zero anyway) and the round step SKIPS the
+        # server update; max(norm, 1) would instead corrupt legitimate
+        # fractional-weight rounds.
+        norm_safe = jnp.where(norm > 0.0, norm, 1.0)
+        g_pre = acc / norm_safe
+    else:
+        g_pre = acc
+
+    # Finish: the completed partial crosses the channel through the SAME
+    # fused kernels as the resident round, as a single transmitter row —
+    # sum(1 * x)/1 == x exactly, so op order (and hence bitwise parity
+    # with the resident launch) is preserved.
+    u, e, scale = _interference_slab_inputs(kx, cfg, spec)
+    one = jnp.ones((1,), jnp.float32)
+    stats = None
+    if cfg.uplink.quantized:
+        stochastic = cfg.uplink.stochastic_rounding
+        r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        if use_kernels:
+            from repro.kernels.ota_channel import (ota_receive_slab,
+                                                   ota_transmit_slab)
+            q, s = ota_transmit_slab(g_pre[None], one, n_total=1,
+                                     quantize=True, r=r,
+                                     stochastic=stochastic,
+                                     interpret=cfg.interpret)
+            g_slab = ota_receive_slab(q[None], s[None], u, e,
+                                      alpha=cfg.alpha, scale=scale,
+                                      pilot_stats=pilot_stats,
+                                      interpret=cfg.interpret)
+        else:
+            from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
+            q, s = ota_transmit_ref(g_pre[None], one, n_total=1,
+                                    quantize=True, r=r,
+                                    stochastic=stochastic)
+            g_slab = ota_receive_ref(q[None], s[None], u, e,
+                                     alpha=cfg.alpha, scale=scale,
+                                     pilot_stats=pilot_stats)
+    else:
+        if use_kernels:
+            from repro.kernels.ota_channel import ota_channel_slab
+            g_slab = ota_channel_slab(g_pre[None], one, u, e,
+                                      alpha=cfg.alpha, scale=scale,
+                                      n_total=1, pilot_stats=pilot_stats,
+                                      interpret=cfg.interpret)
+        else:
+            from repro.kernels.ref import ota_channel_ref
+            g_slab = ota_channel_ref(g_pre[None], one, u, e,
+                                     alpha=cfg.alpha, scale=scale,
+                                     pilot_stats=pilot_stats)
+    if pilot_stats:
+        g_slab, stats = g_slab
+
+    return StreamParts(g_slab=g_slab, h=h, mask=mask,
+                       n_participants=n_part, norm=norm,
+                       loss_sum=loss_sum, clean_slab=clean, stats=stats)

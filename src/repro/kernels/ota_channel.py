@@ -59,6 +59,24 @@ runs inside the tile (N = clients-per-shard is small, <= a few hundred).
 ``interpret=None`` auto-selects Pallas interpret mode from the platform
 (``repro.kernels.interpret``): compiled on TPU, interpreted elsewhere.
 
+**Streamed client axis** (PR 6): with ``acc=`` and/or ``row_chunk=`` the
+transmit grid gains a CLIENT-CHUNK dimension — ``(col_blocks,
+row_chunks)``, column blocks outer so each output tile is revisited
+consecutively — and the kernel accumulates the faded partial sum
+in-place across the row chunks (``@pl.when(r == 0)`` seeds the output
+tile from the ``acc`` carry, every step adds its chunk's
+``sum_rows(h*g)/n_total``). ``acc`` chains launches: a round streams N
+clients as a ``lax.scan`` over gradient chunks, each chunk's transmit
+launch folding into the running (d,) partial — peak memory is
+O(chunk * d) regardless of N, and ``n_total`` keeps the 1/N wire
+normalisation identical to the resident launch. With one row chunk the
+accumulation is ``0 + sum(h*g)/n_total`` — bitwise-equal to the
+resident kernel — so streaming with ``chunk >= N`` is a pure memory
+optimization (the parity guard in tests/test_stream.py pins this).
+Quantization composes by accumulating the f32 partial first and
+quantizing the COMPLETED sum through a single-row ``quantize=True``
+launch (one quantization step per entry, the wire contract).
+
 Sharded slab engine: when the round is distributed over a device mesh
 (``repro.core.shard``), each device launches the transmit kernel on its
 LOCAL client shard only, passing ``n_total`` = the global client count
@@ -194,6 +212,22 @@ def _tx_kernel(g_ref, h_ref, out_ref, *, n_clients: int):
     out_ref[...] = jnp.sum(h * g, axis=0, keepdims=True) / n_clients
 
 
+def _tx_stream_kernel(g_ref, h_ref, acc_ref, out_ref, *, n_clients: int):
+    """Streamed transmit: grid (col_blocks, row_chunks), col-outer. The
+    first row chunk seeds this column's output tile from the ``acc``
+    carry; every chunk then folds its faded partial in-place."""
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _seed():
+        out_ref[...] = acc_ref[...]
+
+    g = g_ref[...].astype(jnp.float32)              # (rc, bc)
+    h = h_ref[...].astype(jnp.float32)              # (rc, 1)
+    out_ref[...] = out_ref[...] + jnp.sum(h * g, axis=0,
+                                          keepdims=True) / n_clients
+
+
 def _tx_quant_kernel(g_ref, h_ref, r_ref, q_ref, s_ref, *, n_clients: int,
                      stochastic: bool):
     g = g_ref[...].astype(jnp.float32)              # (N, bc)
@@ -218,13 +252,17 @@ def _tx_quant_kernel(g_ref, h_ref, r_ref, q_ref, s_ref, *, n_clients: int,
 def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
                       n_total: int | None = None, quantize: bool = False,
                       r: Optional[jax.Array] = None, stochastic: bool = True,
+                      acc: Optional[jax.Array] = None,
+                      row_chunk: Optional[int] = None,
                       block_cols: int = DEFAULT_BLOCK_COLS,
                       interpret: Optional[bool] = None):
     """Transmit stage: one fused pass over this transmitter's gradients.
 
     grads: (N, d) stacked client gradients; h: (N,) effective fading
-    (power control already folded in). Computes the faded partial sum
-    ``(1/n_total) sum_n h[n] grads[n]`` in one read of G.
+    (power control — and, on the streamed path, the participation mask
+    and per-client aggregation weights — already folded in). Computes
+    the faded partial sum ``(1/n_total) sum_n h[n] grads[n]`` in one
+    read of G.
 
     ``quantize=False`` returns the f32 partial (d,) — the analog wire.
     ``quantize=True`` runs the quantize-on-write epilogue and returns
@@ -234,27 +272,75 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     ``stochastic=False`` (round-to-nearest). d must be a multiple of
     128 in quantized mode — every slab/slice is, by the slab padding
     contract.
+
+    **Streamed client axis** (see the module docstring): ``acc`` is a
+    (d,) f32 carry — the running partial sum of the chunks already
+    transmitted — and ``row_chunk`` tiles the client rows through the
+    grid's client-chunk dimension (defaults to all rows: one row step,
+    whose ``0 + sum`` accumulation is bitwise-equal to the resident
+    kernel). Either argument selects the accumulating kernel; both are
+    f32-only (``quantize=True`` raises — quantize the completed f32
+    partial through a single-row launch instead, so every entry is
+    quantized exactly once).
     """
     interpret = resolve_interpret(interpret)
     n, d = grads.shape
     if n_total is None:
         n_total = n
+    streamed = acc is not None or row_chunk is not None
+    if streamed and quantize:
+        raise ValueError(
+            "quantize=True cannot stream/accumulate (acc=/row_chunk=): the "
+            "quantize-on-write epilogue must see the COMPLETED partial sum "
+            "(one quantization step per entry, the wire contract); "
+            "accumulate the f32 partial across chunks first, then quantize "
+            "it with a single-row quantize=True launch")
     h2 = h.reshape(n, 1).astype(jnp.float32)
 
     if not quantize:
         d_pad = -(-d // block_cols) * block_cols
         gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
+        if not streamed:
+            out = pl.pallas_call(
+                functools.partial(_tx_kernel, n_clients=n_total),
+                grid=(d_pad // block_cols,),
+                in_specs=[
+                    pl.BlockSpec((n, block_cols), lambda i: (0, i)),
+                    pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                ],
+                out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+                out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+                interpret=interpret,
+            )(gp, h2)
+            return out.reshape(-1)[:d]
+
+        rc = n if row_chunk is None else min(row_chunk, n)
+        if rc < 1:
+            raise ValueError(f"row_chunk must be >= 1, got {row_chunk}")
+        if acc is None:
+            acc = jnp.zeros((d,), jnp.float32)
+        if acc.shape != (d,):
+            raise ValueError(f"acc must be the ({d},) running partial sum, "
+                             f"got {acc.shape}")
+        # Zero rows contribute exactly 0 to the accumulation, so padding
+        # the client axis up to a row-chunk multiple is value-neutral.
+        n_pad = -(-n // rc) * rc
+        gp = jnp.pad(gp, ((0, n_pad - n), (0, 0)))
+        hp = jnp.pad(h2, ((0, n_pad - n), (0, 0)))
+        ap = jnp.pad(acc.astype(jnp.float32),
+                     (0, d_pad - d)).reshape(1, d_pad)
         out = pl.pallas_call(
-            functools.partial(_tx_kernel, n_clients=n_total),
-            grid=(d_pad // block_cols,),
+            functools.partial(_tx_stream_kernel, n_clients=n_total),
+            grid=(d_pad // block_cols, n_pad // rc),
             in_specs=[
-                pl.BlockSpec((n, block_cols), lambda i: (0, i)),
-                pl.BlockSpec((n, 1), lambda i: (0, 0)),
+                pl.BlockSpec((rc, block_cols), lambda j, r_: (r_, j)),
+                pl.BlockSpec((rc, 1), lambda j, r_: (r_, 0)),
+                pl.BlockSpec((1, block_cols), lambda j, r_: (0, j)),
             ],
-            out_specs=pl.BlockSpec((1, block_cols), lambda i: (0, i)),
+            out_specs=pl.BlockSpec((1, block_cols), lambda j, r_: (0, j)),
             out_shape=jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
             interpret=interpret,
-        )(gp, h2)
+        )(gp, hp, ap)
         return out.reshape(-1)[:d]
 
     if d % LANE != 0:

@@ -102,7 +102,9 @@ INT8_MAX = 127.0
 
 def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
                      n_total: Optional[int] = None, quantize: bool = False,
-                     r: Optional[jax.Array] = None, stochastic: bool = True):
+                     r: Optional[jax.Array] = None, stochastic: bool = True,
+                     acc: Optional[jax.Array] = None,
+                     row_chunk: Optional[int] = None):
     """Transmit-stage oracle: faded partial sum, optionally int8-quantized
     with per-LANE-block f32 scales and stochastic rounding.
 
@@ -116,13 +118,34 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     equality on the overwhelming majority), not allclose at f32
     rounding.
 
+    ``acc``/``row_chunk`` mirror the kernel's streamed client axis:
+    start from the (d,) f32 carry (zeros if None) and fold the client
+    rows in per ``row_chunk``-sized chunk, each chunk's faded partial
+    divided by ``n_total`` as it lands. f32-only, like the kernel.
+
     grads: (N, d); h: (N,). Returns (d,) f32, or ``(payload int8 (d,),
     scales f32 (d // 128,))`` when ``quantize=True``.
     """
     n, d = grads.shape
     if n_total is None:
         n_total = n
+    streamed = acc is not None or row_chunk is not None
+    if streamed and quantize:
+        raise ValueError("quantize=True cannot stream/accumulate "
+                         "(acc=/row_chunk=); quantize the completed f32 "
+                         "partial in a separate single-row call")
     h2 = h.reshape(n, 1).astype(jnp.float32)
+    if streamed:
+        rc = n if row_chunk is None else min(row_chunk, n)
+        if rc < 1:
+            raise ValueError(f"row_chunk must be >= 1, got {row_chunk}")
+        gf = grads.astype(jnp.float32)
+        agg = (jnp.zeros((d,), jnp.float32) if acc is None
+               else acc.astype(jnp.float32))
+        for s in range(0, n, rc):
+            agg = agg + jnp.sum(h2[s:s + rc] * gf[s:s + rc],
+                                axis=0) / n_total
+        return agg
     agg = jnp.sum(h2 * grads.astype(jnp.float32), axis=0) / n_total
     if not quantize:
         return agg

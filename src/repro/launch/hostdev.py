@@ -13,16 +13,54 @@ from __future__ import annotations
 
 import argparse
 import os
-from typing import Sequence
+from typing import Optional, Sequence
+
+DEFAULT_HOST_DEVICES = 8
+HOST_DEVICES_ENV = "REPRO_HOST_DEVICES"
+HOST_DEVICES_FLAG = "--host-devices"
 
 
-def mesh_device_count(argv: Sequence[str], flag: str, minimum: int = 8) -> int:
+def host_device_override(argv: Optional[Sequence[str]] = None) -> int:
+    """The configured forced host-device floor: ``--host-devices N``
+    in ``argv`` (both ``--host-devices 16`` and ``--host-devices=16``)
+    wins over the ``REPRO_HOST_DEVICES`` environment variable, which
+    wins over ``DEFAULT_HOST_DEVICES``. Malformed values fall through
+    (argparse / the caller reports them properly later); this runs
+    before any jax import, so it must never raise on user input."""
+    n = DEFAULT_HOST_DEVICES
+    env = os.environ.get(HOST_DEVICES_ENV)
+    if env is not None:
+        try:
+            n = max(1, int(env))
+        except ValueError:
+            pass
+    for i, a in enumerate(argv or ()):
+        v = None
+        if a == HOST_DEVICES_FLAG and i + 1 < len(argv):
+            v = argv[i + 1]
+        elif a.startswith(HOST_DEVICES_FLAG + "="):
+            v = a[len(HOST_DEVICES_FLAG) + 1:]
+        if v is not None:
+            try:
+                n = max(1, int(v))
+            except ValueError:
+                pass
+    return n
+
+
+def mesh_device_count(argv: Sequence[str], flag: str,
+                      minimum: Optional[int] = None) -> int:
     """Max product over the comma-separated mesh shapes given by
     ``flag`` in ``argv`` — both the ``--mesh 4,2`` / ``--meshes 2 4,2``
-    and the ``--mesh=4,2`` forms — floored at ``minimum``. Absent or
-    malformed values fall back to ``minimum``; argparse reports the
-    malformed ones properly later."""
+    and the ``--mesh=4,2`` forms — floored at ``minimum``. ``minimum``
+    defaults to ``host_device_override(argv)`` (the ``--host-devices``
+    flag / ``REPRO_HOST_DEVICES`` env var, else 8), so parity checks
+    can simulate wider meshes for streamed-client runs without editing
+    code. Absent or malformed values fall back to ``minimum``; argparse
+    reports the malformed ones properly later."""
     argv = list(argv)
+    if minimum is None:
+        minimum = host_device_override(argv)
     vals = []
     for i, a in enumerate(argv):
         if a == flag:

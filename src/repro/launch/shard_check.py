@@ -45,9 +45,17 @@ end-of-trajectory ``alpha_hat`` deviation joins the parity columns.
     PYTHONPATH=src python -m repro.launch.shard_check \
         --uplink int8 --meshes 1 2 4,2 --rounds 5
 
+``--client-chunk`` / ``--sample-rate`` exercise the STREAMED client
+axis (PR 6): every engine runs its dynamic round body (chunked
+accumulating transmit, Bernoulli participation keyed off the round
+key). The reference becomes the slab-resident jnp loop — the
+pytree-per-round API carries no streamed uplink path, so those rows
+are skipped, exactly like --track-alpha.
+
 The XLA flag below MUST precede any jax import (jax locks the device
-count at first backend init); at least 8 host devices are forced, or
-the largest --meshes product if bigger (read from raw argv — argparse
+count at first backend init); at least ``--host-devices`` /
+``$REPRO_HOST_DEVICES`` (default 8) host devices are forced, or the
+largest --meshes product if bigger (read from raw argv — argparse
 would come too late).
 """
 
@@ -155,6 +163,18 @@ def main(argv=None) -> int:
                     help="client-mesh shapes, e.g. --meshes 1 2 4,2")
     ap.add_argument("--optimizers", nargs="+", default=ALL_OPTIMIZERS)
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--client-chunk", type=positive_int, default=None,
+                    help="stream the client axis in chunks of this many "
+                         "rows (per device on sharded meshes); must "
+                         "divide the per-device client count")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="per-round Bernoulli participation probability "
+                         "(< 1 activates partial participation)")
+    ap.add_argument("--host-devices", type=positive_int,
+                    default=None,
+                    help="minimum forced host device count (consumed "
+                         "from raw argv before jax import; also "
+                         "settable via $REPRO_HOST_DEVICES)")
     ap.add_argument("--rounds", type=positive_int, default=5)
     ap.add_argument("--uplink", default="f32", choices=["f32", "int8"],
                     help="MAC payload format under test. f32 is the "
@@ -190,18 +210,25 @@ def main(argv=None) -> int:
                                     (args.clients,) + p.shape), params)
     ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
                           uplink=UplinkConfig(mode=args.uplink))
-    fl = FLConfig(n_clients=args.clients)
+    fl = FLConfig(n_clients=args.clients, client_chunk=args.client_chunk,
+                  sample_rate=args.sample_rate)
 
     print(f"uplink={args.uplink} track_alpha={args.track_alpha} "
+          f"chunk={args.client_chunk} sample_rate={args.sample_rate:g} "
           f"rounds={args.rounds} tol={args.tol:g}")
+    # Streamed / sampled rounds only exist on the slab-resident engines:
+    # the oracle becomes the slab-resident jnp loop and the pytree-per-
+    # round rows are skipped, exactly like --track-alpha.
+    slab_ref = args.track_alpha or fl.dynamic_round
     failures = 0
     for opt in args.optimizers:
         ad = AdaptiveConfig(optimizer=opt, lr=0.05,
                             alpha="auto" if args.track_alpha else 1.5,
                             beta2=0.3)
-        if args.track_alpha:
+        if slab_ref:
             # The pytree-per-round API refuses alpha="auto" (no resident
-            # EMA); the tracked oracle is the slab-resident jnp loop.
+            # EMA) and dynamic rounds (no streamed uplink); the oracle
+            # is the slab-resident jnp loop.
             ref = _run_resident("jnp", None, 1, params, batches, ch, ad,
                                 fl, args.rounds)
         else:
@@ -224,7 +251,7 @@ def main(argv=None) -> int:
             print(f"{opt:12s} resident mesh={mesh_str:5s} "
                   + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
                   + ("  OK" if ok else "  FAIL"))
-            if opt in PERROUND_OPTIMIZERS and not args.track_alpha:
+            if opt in PERROUND_OPTIMIZERS and not slab_ref:
                 out_pr = _run_perround(mesh, params, batches, ch, ad, fl,
                                        args.rounds)
                 devs, ok = _devs(ref, out_pr, args.tol)

@@ -19,6 +19,14 @@ index, so the resumed trajectory equals the uninterrupted one).
 per round on the sharded mesh); the default f32 uplink is bitwise-
 identical to the pre-pipeline code.
 
+``--client-chunk`` streams the client axis in O(chunk * d) memory
+(PR 6): each chunk's gradients are computed and folded into the
+running MAC partial in-kernel, so the client count is no longer bound
+by host memory. ``--sample-rate`` adds per-round Bernoulli partial
+participation and ``--client-weights datasize`` weights the aggregate
+by Dirichlet shard size; with both off, behaviour (and bits) match the
+resident path.
+
 ``--alpha`` is the TRUE channel tail index; ``--alpha-opt`` what the
 server optimizer assumes (default: follows ``--alpha``) — set them
 apart for mismatch experiments, or pass ``--track-alpha`` (==
@@ -77,6 +85,21 @@ def main() -> None:
                     default="tiny")
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--client-chunk", type=int, default=None,
+                    help="stream the client axis in chunks of this many "
+                         "rows (per device under pallas_sharded): peak "
+                         "memory O(chunk * d) instead of O(N * d); must "
+                         "divide the per-device client count. Default: "
+                         "resident (all clients at once)")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="per-round Bernoulli participation probability; "
+                         "< 1 samples a client subset each round (keyed "
+                         "off the round key, identical on all backends)")
+    ap.add_argument("--client-weights", default="uniform",
+                    choices=["uniform", "datasize"],
+                    help="per-client aggregation weights: 'uniform' "
+                         "(1/N, default) or 'datasize' (proportional to "
+                         "the client's Dirichlet shard size)")
     ap.add_argument("--batch", type=int, default=2, help="per-client batch")
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--optimizer", default="adam_ota",
@@ -223,9 +246,13 @@ def main() -> None:
         n_shards = math.prod(mesh_shape)
         print(f"client mesh {dict(mesh.shape)} "
               f"({len(jax.devices())} devices visible)")
+    weights = None
+    if args.client_weights == "datasize":
+        weights = tuple(float(len(p)) for p in parts)
+    fl = FLConfig(n_clients=args.clients, client_chunk=args.client_chunk,
+                  sample_rate=args.sample_rate, client_weights=weights)
     run_chunk = make_slab_round_runner(lambda p, b: model.loss_fn(p, b), ch,
-                                       ad, FLConfig(n_clients=args.clients),
-                                       mesh=mesh)
+                                       ad, fl, mesh=mesh)
     params = model.init(jax.random.key(args.seed))
     spec = make_slab_spec(params, shards=n_shards)
     state = init_train_state(ad, params, spec=spec)

@@ -31,7 +31,20 @@ payload format (``--uplink``) scales:
     uplink int8    : all-to-all of 2 int8 payload rows + 2 per-128-
                      block f32 scale rows = 2d + d/16 bytes  (~3.9x
                      fewer than f32)
-    comms resident : 4d (gather w, always f32) + uplink
+    uplink sign    : 2 bit-packed sign rows + 2 scale rows
+                     = 2(d/8) + d/16 bytes  (~25x fewer than f32)
+
+The model broadcast — the downlink — gets the same treatment in
+``downlink_bytes_per_round`` (PR 7). It is the server->client payload
+per round, so it is reported for every mesh (on the sharded mesh it is
+also the all_gather word count, since each engine quantizes its own
+slice before gathering):
+
+    downlink f32   : d f32 words = 4d bytes
+    downlink int8  : d int8 codewords + d/128 f32 scales
+                     = d + d/32 bytes  (~3.9x fewer than f32)
+
+    comms resident : downlink gather + uplink
     comms perround : resident + 4(k+1)d boundary materialisation of
                      the k state slabs + params the pytree API gathers
                      every call
@@ -77,14 +90,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
-                resident: bool, uplink: str = "f32") -> dict:
+                resident: bool, uplink: str = "f32",
+                downlink: str = "f32") -> dict:
     """Per-device, per-round traffic models (bytes).
 
     ``state_rows`` is the optimizer-slab count (2 for adam: delta, nu);
     the per-round pytree API regathers/repacks those plus the params row.
     ``uplink`` sets the MAC wire format: the f32 reduce-scatter carries
     2 rows of d 4-byte words, the int8 all-to-all carries 2 rows of d
-    1-byte codewords + 2 rows of d/128 4-byte scales.
+    1-byte codewords + 2 rows of d/128 4-byte scales, and sign packs
+    the codeword rows down to d/8 bytes of sign bits each.
+    ``downlink`` sets the model-broadcast format; its payload is
+    reported for every mesh (it is the server->client wire even when
+    there is no device collective to time).
     """
     d, p = n_params, n_dev
     boundary_rows = state_rows + 1
@@ -92,9 +110,12 @@ def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
         mac = 0
     elif uplink == "int8":
         mac = 2 * d + 2 * (d // 128) * 4
+    elif uplink == "sign":
+        mac = 2 * (d // 8) + 2 * (d // 128) * 4
     else:
         mac = 2 * d * 4
-    gather = 4 * d if p > 1 else 0
+    dl = (d + (d // 128) * 4) if downlink == "int8" else 4 * d
+    gather = dl if p > 1 else 0
     if resident:
         comms = gather + mac
         hbm = 4 * (d * (n_clients // p + 2) + 7 * d // p + d)
@@ -104,6 +125,7 @@ def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
                    + 2 * boundary_rows * d)
     return {"comms_bytes_per_round": comms,
             "uplink_bytes_per_round": mac,
+            "downlink_bytes_per_round": dl,
             "hbm_bytes_est": hbm}
 
 
@@ -118,9 +140,16 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     from repro.launch.mesh import make_client_mesh
 
     params, loss_fn, batches = _round_step_case(n_params, n_clients)
-    channels = {u: OTAChannelConfig(alpha=1.5, xi_scale=0.1,
-                                    uplink=UplinkConfig(mode=u))
-                for u in ("f32", "int8")}
+    # (uplink, downlink) wire-format cells timed by the resident loop;
+    # the quantized uplinks carry the PR-7 error-feedback slab so the
+    # timing includes the residual read-modify-write.
+    wire_cells = (("f32", "f32"), ("int8", "f32"), ("sign", "f32"),
+                  ("sign", "int8"))
+    channels = {(u, dl): OTAChannelConfig(
+                    alpha=1.5, xi_scale=0.1, downlink=dl,
+                    uplink=UplinkConfig(mode=u,
+                                        error_feedback=(u != "f32")))
+                for u, dl in wire_cells}
     ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
     fl = FLConfig(n_clients=n_clients)
     k_rows = 2   # adam: delta, nu
@@ -132,12 +161,14 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
         n_dev *= s
     records = []
 
-    def record(name, backend, variant, us_total, p, uplink):
+    def record(name, backend, variant, us_total, p, uplink,
+               downlink="f32"):
         us_round = us_total / rounds
         byt = _loop_bytes(n_params, n_clients, p, k_rows,
-                          variant == "resident", uplink)
+                          variant == "resident", uplink, downlink)
         records.append(dict(
             name=name, backend=backend, variant=variant, uplink=uplink,
+            downlink=downlink,
             n_params=n_params, n_clients=n_clients, rounds=rounds,
             mesh="x".join(str(s) for s in mesh_shape) if p > 1 else "1",
             us_per_round=us_round, us_per_call=us_round,
@@ -145,6 +176,7 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
             derived=(f"rounds_per_sec={1e6 / us_round:.2f};"
                      f"comms_bytes={byt['comms_bytes_per_round']};"
                      f"uplink_bytes={byt['uplink_bytes_per_round']};"
+                     f"downlink_bytes={byt['downlink_bytes_per_round']};"
                      f"hbm_bytes={byt['hbm_bytes_est']}")))
 
     def timeit(fn):
@@ -159,21 +191,25 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
                              ("pallas_sharded", make_client_mesh(mesh_shape),
                               n_dev)):
         # resident: R rounds, one scanned dispatch, state stays slabs;
-        # timed per uplink format (the int8 column is what shows the
-        # ~4x MAC-byte cut on the sharded mesh).
-        for uplink in ("f32", "int8"):
-            run = make_slab_round_runner(loss_fn, channels[uplink], ad, fl,
+        # timed per wire-format cell (int8/sign show the MAC-byte cut,
+        # the sign+dl8 cell adds the quantized model broadcast).
+        for uplink, downlink in wire_cells:
+            ch = channels[(uplink, downlink)]
+            run = make_slab_round_runner(loss_fn, ch, ad, fl,
                                          backend=backend, mesh=mesh)
-            st0 = init_train_state(ad, params, shards=p)
+            st0 = init_train_state(ad, params, shards=p,
+                                   error_feedback=ch.uplink.error_feedback)
             us = timeit(lambda: run(st0, keys, stacked))
-            suffix = "" if uplink == "f32" else "_int8"
+            suffix = "" if uplink == "f32" else f"_{uplink}"
+            if downlink != "f32":
+                suffix += "_dl8"
             record(f"train_loop_{backend}_resident{suffix}_{n_params}",
-                   backend, "resident", us, p, uplink)
+                   backend, "resident", us, p, uplink, downlink)
 
         # per-round pytree API: pack/convert at every round boundary
         # (f32 only — the boundary-materialisation cost it isolates is
         # uplink-independent)
-        rs = make_round_step(loss_fn, channels["f32"], ad, fl,
+        rs = make_round_step(loss_fn, channels[("f32", "f32")], ad, fl,
                              backend=backend, mesh=mesh)
         s0 = init_server(params, ad)
 

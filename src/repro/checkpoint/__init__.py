@@ -104,6 +104,8 @@ def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None
     for i, slab in enumerate(state.opt):
         arrays[f"opt_{i}"] = np.asarray(slab)
     arrays["n_opt"] = np.asarray(len(state.opt))
+    if getattr(state, "ef", None) is not None:
+        arrays["ef"] = np.asarray(state.ef)
     for k, v in (extra or {}).items():
         arrays[f"x_{k}"] = np.asarray(v)
     _atomic_savez(path, arrays)
@@ -132,7 +134,11 @@ def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
         # the unseeded sentinel (the next tracked round re-seeds the EMA)
         alpha_hat=jnp.asarray(stored.get("alpha_hat", np.zeros(())),
                               jnp.float32),
-        spec=spec)
+        spec=spec,
+        # pre-EF checkpoints carry no residual rows: resume with None
+        # (the caller re-allocates zeros if it wants to turn EF on).
+        ef=(jnp.asarray(stored["ef"], jnp.float32)
+            if "ef" in stored else None))
     extra = {k[2:]: v for k, v in stored.items() if k.startswith("x_")}
     return state, extra
 

@@ -12,7 +12,8 @@ from repro.core.fl import (FLConfig, RoundMetrics, init_server,
                            make_round_step, make_sharded_round_step,
                            make_slab_round_runner, make_slab_round_step,
                            run_rounds, run_rounds_slab)
-from repro.core.ota import (add_interference, faded_loss_weights,
+from repro.core.ota import (add_interference, downlink_quantize_slab,
+                            downlink_sr_slab_inputs, faded_loss_weights,
                             interference_log_moment_stats,
                             ota_aggregate_slab, ota_aggregate_stacked,
                             ota_psum, uplink_sr_slab_inputs)
@@ -35,7 +36,8 @@ __all__ = [
     "cms_inputs", "cms_transform", "sample_alpha_stable", "sample_fading",
     "sample_interference", "sr_inputs", "upsilon", "FLConfig", "RoundMetrics",
     "init_server", "make_round_step", "make_sharded_round_step", "run_rounds",
-    "add_interference", "faded_loss_weights", "ota_aggregate_slab",
+    "add_interference", "downlink_quantize_slab", "downlink_sr_slab_inputs",
+    "faded_loss_weights", "ota_aggregate_slab",
     "ota_aggregate_stacked", "ota_psum", "uplink_sr_slab_inputs",
     "SlabSpec", "make_slab_spec",
     "slab_to_tree", "stack_to_slab", "tree_to_slab", "zeros_slab",

@@ -40,9 +40,23 @@ class UplinkConfig:
       collective carries ~4x fewer bytes (d int8 + d/block f32 vs d
       f32). The receiver dequantizes before the interference is applied
       (the server's RF front end is analog either way).
+    * ``mode == "sign"``: 1-bit signSGD payload — each transmitter sends
+      ``sign(x)`` plus one f32 magnitude per ``block`` entries (the
+      blockwise mean|x|, so the dequantized payload is ±scale). The
+      payload rides the same int8 wire container as ``"int8"`` (values
+      in {-1, 0, +1}; the byte model counts 1 bit/entry), the receiver
+      dequantize stage is unchanged, and the quantizer is deterministic
+      (canonical EF-signSGD) — the SR uniforms are still drawn so no
+      other draw shifts, but the sign epilogue ignores them.
+
+    Sign (and aggressive int8) quantization is biased; pair it with
+    ``error_feedback=True`` so each transmitter carries its residual
+    ``e = x - dequant(quant(x))`` into the next round's payload
+    (resident slab in ``SlabTrainState``), which restores adam_ota
+    convergence (cf. arXiv 2107.12452).
 
     Attributes:
-      mode: "f32" | "int8".
+      mode: "f32" | "int8" | "sign".
       block: slab entries per quantization scale. Must equal the kernel
         lane width (128): the transmit kernel computes scales on lane-
         aligned tiles, and the shard-aligned slab padding guarantees
@@ -51,21 +65,30 @@ class UplinkConfig:
         (``floor(x/s + r)`` with r ~ U[0,1), unbiased — the draws come
         from the round key under the shared PRNG contract, so all
         backends make identical rounding decisions) instead of
-        round-to-nearest.
+        round-to-nearest. int8 only; the sign quantizer is
+        deterministic.
+      error_feedback: carry each transmitter's quantization residual
+        across rounds and add it into the faded partial before the next
+        quantize. Requires a quantized mode (f32 has no residual).
     """
 
     mode: str = "f32"
     block: int = 128
     stochastic_rounding: bool = True
+    error_feedback: bool = False
 
     def __post_init__(self):
-        if self.mode not in ("f32", "int8"):
+        if self.mode not in ("f32", "int8", "sign"):
             raise ValueError(f'unknown uplink mode {self.mode!r}; '
-                             'options: "f32", "int8"')
+                             'options: "f32", "int8", "sign"')
         if self.block != 128:
             raise ValueError(
                 f"uplink block must be 128 (the kernel lane width the "
                 f"transmit epilogue tiles scales over), got {self.block}")
+        if self.error_feedback and self.mode == "f32":
+            raise ValueError(
+                'error_feedback requires a quantized uplink mode '
+                '("int8" or "sign"); the f32 payload has no residual')
 
     @property
     def quantized(self) -> bool:
@@ -77,6 +100,12 @@ class UplinkConfig:
 # (kx) sub-draws, so enabling the int8 uplink cannot perturb any f32
 # draw (the f32 path stays bitwise-identical).
 SR_FOLD = 0x5A8
+
+# Domain separator for the DOWNLINK stochastic-rounding uniforms (the
+# int8 model-broadcast quantizer). Separate from SR_FOLD for the same
+# reason SR_FOLD is separate from the fading/interference sub-draws:
+# enabling the quantized downlink must not perturb any uplink draw.
+DL_FOLD = 0xD01
 
 
 def sr_inputs(key: jax.Array, shape: Tuple[int, ...],
@@ -113,6 +142,13 @@ class OTAChannelConfig:
       uplink: payload format of the MAC uplink (``UplinkConfig``; a bare
         mode string like ``"int8"`` is accepted and wrapped). Defaults
         to the f32 analog uplink — existing configs are untouched.
+      downlink: payload format of the per-round model broadcast.
+        ``"f32"`` (default) is the full-width broadcast, bit for bit.
+        ``"int8"`` quantizes the broadcast weights with the same
+        per-128-block symmetric scales as the int8 uplink (stochastic
+        rounding keyed off the round key via ``DL_FOLD``), roughly
+        quartering the remaining per-round traffic; every backend
+        dequantizes identically so parity tiers are preserved.
     """
 
     alpha: float = 1.5
@@ -142,6 +178,7 @@ class OTAChannelConfig:
                                       # (repro.kernels.interpret, env
                                       # override REPRO_PALLAS_INTERPRET).
     uplink: UplinkConfig = UplinkConfig()
+    downlink: str = "f32"
 
     def __post_init__(self):
         if not (1.0 < self.alpha <= 2.0):
@@ -152,6 +189,9 @@ class OTAChannelConfig:
             raise ValueError(f"unknown channel backend: {self.backend}")
         if isinstance(self.uplink, str):
             object.__setattr__(self, "uplink", UplinkConfig(mode=self.uplink))
+        if self.downlink not in ("f32", "int8"):
+            raise ValueError(f'unknown downlink mode {self.downlink!r}; '
+                             'options: "f32", "int8"')
 
     @property
     def pc_transmit_prob(self) -> float:

@@ -32,7 +32,13 @@ control -> quantize -> superposition -> interference -> receiver
 dequantize. At the default ``uplink="f32"`` the rounds are
 bitwise-identical to the pre-pipeline code; ``uplink="int8"`` carries
 int8 payloads + per-block f32 scales over the MAC (~4x fewer collective
-bytes on the sharded mesh).
+bytes on the sharded mesh); ``uplink="sign"`` carries 1-bit signSGD
+payloads (~32x). The quantized modes optionally carry a per-transmitter
+error-feedback residual across rounds (``UplinkConfig.error_feedback``,
+resident as ``SlabTrainState.ef``), and the per-round model broadcast
+can itself be int8-quantized (``OTAChannelConfig.downlink="int8"`` —
+clients see the reconstruction, the server keeps the f32 master). Both
+live only in the slab-resident loops.
 
 ``make_sharded_round_step`` is the older per-leaf distributed twin:
 clients map onto (pod, data) shard groups and step 2 becomes the
@@ -84,7 +90,10 @@ class FLConfig:
     client_chunk: Optional[int] = None
     # Partial participation: each client joins this round i.i.d. with
     # this probability (mask keyed off the round key, identical on all
-    # backends). 1.0 == everyone, the pre-sampling bitwise path.
+    # backends). 1.0 == everyone, the pre-sampling bitwise path. Must
+    # be > 0: rate 0 would make EVERY round a dead round (nobody ever
+    # transmits, the state never moves), which is a config error, not
+    # a training run.
     sample_rate: float = 1.0
     # Per-client aggregation weights (e.g. dataset sizes); None ==
     # uniform. The noisy aggregate is sum_n mask_n w_n h_n g_n
@@ -93,9 +102,11 @@ class FLConfig:
     client_weights: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
-        if not 0.0 <= self.sample_rate <= 1.0:
-            raise ValueError(f"sample_rate must be in [0, 1], got "
-                             f"{self.sample_rate}")
+        if not 0.0 < self.sample_rate <= 1.0:
+            raise ValueError(f"sample_rate must be in (0, 1], got "
+                             f"{self.sample_rate}; a rate of 0 means no "
+                             "client ever participates (every round would "
+                             "be a dead round)")
         if self.client_chunk is not None and self.client_chunk < 1:
             raise ValueError(f"client_chunk must be >= 1, got "
                              f"{self.client_chunk}")
@@ -233,6 +244,12 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             "slab-resident loop (make_slab_round_step / "
             "make_slab_round_runner): the per-round pytree API has no "
             "streamed uplink path")
+    if channel_cfg.uplink.error_feedback or channel_cfg.downlink != "f32":
+        raise ValueError(
+            "error_feedback / downlink != \"f32\" need the slab-resident "
+            "loop (make_slab_round_step / make_slab_round_runner): the "
+            "per-round pytree API has no resident residual slab to carry "
+            "across rounds and no slab broadcast to quantize")
     alpha_const = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
     if backend == "pallas_sharded":
         from repro.core.shard import shard_round_step
@@ -268,8 +285,8 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params, client_batches)
         spec = make_slab_spec(params)
         # Kernel launch 1: fused fading reduction + interference synthesis.
-        g_slab, h, grads_slab, _ = ota_aggregate_slab(key, channel_cfg,
-                                                      grads, spec)
+        g_slab, h, grads_slab, _, _ = ota_aggregate_slab(key, channel_cfg,
+                                                         grads, spec)
         # Kernel launch 2: fused server update, g_t still in slab form.
         new_params, new_state = apply_slab_update(adaptive_cfg, spec, g_slab,
                                                   opt_state, params)
@@ -350,19 +367,49 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             'which runs single-device and would silently ignore it; use '
             'backend="pallas_sharded" for distributed rounds')
     track = adaptive_cfg.track_alpha
+    # PR 7 wire formats: error feedback carries a resident residual slab
+    # (SlabTrainState.ef) and the int8 downlink quantizes the model
+    # broadcast — both live only in the slab-resident loops. On the jnp
+    # backend they bypass the pytree-delegation reference paths below
+    # and take the generic slab step (whose MAC/update layers dispatch
+    # to the kernels.ref oracles internally), so every backend runs the
+    # same EF/downlink plumbing over the same draws.
+    use_ef = channel_cfg.uplink.error_feedback
+    dl_int8 = channel_cfg.downlink == "int8"
     client_fn = _client_update(loss_fn, fl_cfg)
+
+    def _check_ef_state(state: SlabTrainState) -> None:
+        if use_ef and state.ef is None:
+            raise ValueError(
+                "UplinkConfig.error_feedback=True but the SlabTrainState "
+                "carries no residual rows; build it with "
+                "init_train_state(..., error_feedback=True)")
+
+    def _broadcast_slab(state: SlabTrainState, key):
+        """The (padded,) weight slab the CLIENTS see this round: the f32
+        master under the f32 downlink, its int8-quantized reconstruction
+        under downlink="int8" (the server always keeps the master)."""
+        if not dl_int8:
+            return state.w
+        from repro.core.ota import (downlink_quantize_slab,
+                                    downlink_sr_slab_inputs)
+        r = downlink_sr_slab_inputs(key, state.spec.padded)
+        return downlink_quantize_slab(state.w, r)
+
     if fl_cfg.dynamic_round:
         from repro.core.adaptive import slab_update_slabs
         from repro.core.stream import streamed_round_parts
         use_kernels = backend != "jnp"
 
         def step(state: SlabTrainState, key, client_batches=None):
+            _check_ef_state(state)
             spec = state.spec
-            params = slab_to_tree(spec, state.w)
+            params = slab_to_tree(spec, _broadcast_slab(state, key))
             parts = streamed_round_parts(
                 key, channel_cfg, fl_cfg, spec, client_fn, params,
                 client_batches=client_batches, batch_gen=batch_gen,
-                pilot_stats=track, use_kernels=use_kernels)
+                pilot_stats=track, use_kernels=use_kernels,
+                ef=state.ef[0] if use_ef else None)
             # Zero-participation skip: nobody transmitted, so there is
             # no aggregate to apply — the server state carries over
             # unchanged (only the round counter advances) and the
@@ -386,14 +433,25 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                 alpha_metric = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
             w_in = state.w
             if any(dt != jnp.float32 for dt in spec.dtypes):
-                w_in = tree_to_slab(spec, params)
+                # The round-trip mirrors the pytree backends' per-round
+                # storage-dtype cast; under the int8 downlink the cast
+                # still applies to the MASTER weights (the update never
+                # consumes the quantized broadcast).
+                w_in = tree_to_slab(spec, params if not dl_int8
+                                    else slab_to_tree(spec, state.w))
             new_opt, w_new = slab_update_slabs(adaptive_cfg, parts.g_slab,
                                                state.opt, w_in,
                                                alpha=alpha_arg)
+            ef_next = parts.ef_new[None] if use_ef else state.ef
             if can_skip:
                 w_new = jnp.where(participated, w_new, state.w)
                 new_opt = tuple(jnp.where(participated, o_n, o_o)
                                 for o_n, o_o in zip(new_opt, state.opt))
+                if use_ef:
+                    # A dead round transmits nothing: the residual of a
+                    # transmission that never happened must not replace
+                    # the carried one.
+                    ef_next = jnp.where(participated, ef_next, state.ef)
             nf = jnp.maximum(parts.n_participants, 1.0)
             metrics = RoundMetrics(
                 loss=parts.loss_sum / nf,
@@ -405,7 +463,7 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                 n_participants=parts.n_participants,
             )
             return SlabTrainState(state.step + 1, w_new, new_opt, alpha_hat,
-                                  spec), metrics
+                                  spec, ef_next), metrics
 
         return jax.jit(step) if jit else step
 
@@ -413,7 +471,11 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         raise ValueError("batch_gen= needs a streamed round config "
                          "(FLConfig.client_chunk); the resident path "
                          "consumes materialised client_batches")
-    if backend == "jnp":
+    # EF / int8 downlink on the jnp backend skip the pytree-delegation
+    # references (which have no residual slab to carry) and fall through
+    # to the generic slab step; ota_aggregate_slab dispatches its MAC to
+    # the kernels.ref oracles there, so it is still a pure-jnp program.
+    if backend == "jnp" and not (use_ef or dl_int8):
         if not track:
             inner = make_round_step(loss_fn, channel_cfg, adaptive_cfg,
                                     fl_cfg, jit=False, backend="jnp")
@@ -461,16 +523,22 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
     from repro.core.adaptive import slab_update_slabs
 
     def step(state: SlabTrainState, key, client_batches):
+        _check_ef_state(state)
         spec = state.spec
         # Model broadcast: the one pytree the round materialises (the
         # clients' loss_fn consumes pytrees; original leaf dtypes).
-        params = slab_to_tree(spec, state.w)
+        # Under downlink="int8" the clients see the int8-quantized
+        # reconstruction; the server's master slab stays f32.
+        params = slab_to_tree(spec, _broadcast_slab(state, key))
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params,
                                                                client_batches)
         # Kernel launch 1: fused fading reduction + interference (with
-        # the pilot-stats epilogue when the alpha loop is closed).
-        g_slab, h, grads_slab, stats = ota_aggregate_slab(
-            key, channel_cfg, grads, spec, pilot_stats=track)
+        # the pilot-stats epilogue when the alpha loop is closed; the
+        # carried EF residual joins the transmit quantizer in the same
+        # launch, which returns the fresh residual to carry).
+        g_slab, h, grads_slab, stats, ef_new = ota_aggregate_slab(
+            key, channel_cfg, grads, spec, pilot_stats=track,
+            ef=state.ef[0] if use_ef else None)
         if track:
             alpha_hat = update_alpha_ema(state.alpha_hat, stats,
                                          adaptive_cfg.alpha_ema)
@@ -483,8 +551,11 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         w_in = state.w
         if any(dt != jnp.float32 for dt in spec.dtypes):
             # Non-f32 leaves round-trip through their storage dtype each
-            # round on the pytree backends; mirror that for parity.
-            w_in = tree_to_slab(spec, params)
+            # round on the pytree backends; mirror that for parity. The
+            # cast applies to the MASTER weights — never the quantized
+            # broadcast, which only the clients consume.
+            w_in = tree_to_slab(spec, params if not dl_int8
+                                else slab_to_tree(spec, state.w))
         # Kernel launch 2: fused server update on the RESIDENT slabs
         # (the tracked alpha rides in as a traced operand).
         new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slab, state.opt,
@@ -499,7 +570,8 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             n_participants=jnp.asarray(float(fl_cfg.n_clients), jnp.float32),
         )
         return SlabTrainState(state.step + 1, w_new, new_opt, alpha_hat,
-                              spec), metrics
+                              spec, ef_new[None] if use_ef else state.ef
+                              ), metrics
 
     return jax.jit(step) if jit else step
 
@@ -623,6 +695,10 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
                             "noisy_grad_norm": float(ngn[i]),
                             "alpha_hat": float(ah[i]),
                             "n_participants": float(np_[i])})
+            if float(np_[i]) == 0.0:
+                log(f"round {t + i + 1:5d}  WARNING: no participants "
+                    "(dead round, server update skipped) — consider a "
+                    "higher sample_rate")
         t += r
         if eval_fn is not None and eval_every and t % eval_every == 0:
             params, _ = unpack_train_state(adaptive_cfg, state)
@@ -676,6 +752,9 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
                "noisy_grad_norm": float(m.noisy_grad_norm),
                "alpha_hat": float(m.alpha_hat),
                "n_participants": float(m.n_participants)}
+        if rec["n_participants"] == 0.0:
+            log(f"round {t + 1:5d}  WARNING: no participants (dead round, "
+                "server update skipped) — consider a higher sample_rate")
         if eval_fn is not None and eval_every and (t + 1) % eval_every == 0:
             rec.update(eval_fn(params))
         history.append(rec)

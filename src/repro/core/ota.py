@@ -59,8 +59,8 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import (OTAChannelConfig, cms_inputs, sample_fading,
-                                sample_interference, sr_inputs)
+from repro.core.channel import (DL_FOLD, OTAChannelConfig, cms_inputs,
+                                sample_fading, sample_interference, sr_inputs)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
 
 PyTree = Any
@@ -125,6 +125,46 @@ def uplink_sr_slab_inputs(key: jax.Array, spec: SlabSpec,
                      (2, spec.padded))
 
 
+def downlink_sr_slab_inputs(key: jax.Array, d: int) -> jax.Array:
+    """Stochastic-rounding uniforms for the int8 DOWNLINK broadcast
+    quantizer, (d,) f32 in [0, 1).
+
+    Keyed ``fold_in(round_key, DL_FOLD)`` — a domain separator disjoint
+    from the fading/interference/uplink-SR sub-draws, so enabling the
+    quantized downlink perturbs no uplink draw (the f32 downlink stays
+    bitwise). One full-slab draw; the sharded engine slices it at the
+    shard offset (full-draws-sliced, like every other per-entry draw)."""
+    return jax.random.uniform(jax.random.fold_in(key, DL_FOLD), (d,))
+
+
+def downlink_quantize_slab(w: jax.Array, r: jax.Array) -> jax.Array:
+    """Simulated int8 model broadcast: quantize a (d,) f32 weight slab
+    (or shard slice — d must be a multiple of 128, which every slab and
+    shard slice is by the padding contract) to int8 with one f32 scale
+    per 128-block (symmetric max|x|/127) and stochastic rounding ``r``
+    (``downlink_sr_slab_inputs``), and return the dequantized (d,) f32
+    the receivers reconstruct.
+
+    Deliberately plain jnp, identical on every backend: the downlink
+    wire carries d int8 + d/128 f32 (the byte model in
+    benchmarks/train_loop_bench.py), but the reconstruction itself is
+    elementwise and cheap, and a single spelling keeps jnp / pallas /
+    pallas_sharded broadcasts bitwise-equal. Blocks are lane-aligned,
+    so quantizing shard slices independently equals quantizing the full
+    slab and slicing. All-zero blocks keep scale 1 -> payload 0 (the
+    zero-tail contract). The server keeps the f32 master weights; only
+    what CLIENTS see (their gradient point) is quantized.
+    """
+    from repro.kernels.ota_channel import INT8_MAX, LANE
+    d = w.shape[0]
+    a = w.astype(jnp.float32).reshape(d // LANE, LANE)
+    maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+    s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
+    q = jnp.clip(jnp.floor(a / s + r.reshape(d // LANE, LANE)),
+                 -INT8_MAX, INT8_MAX)
+    return (q * s).reshape(-1)
+
+
 def _interference_slab_inputs(kx: jax.Array, cfg: OTAChannelConfig,
                               spec: SlabSpec
                               ) -> Tuple[jax.Array, jax.Array, float]:
@@ -139,28 +179,32 @@ def _interference_slab_inputs(kx: jax.Array, cfg: OTAChannelConfig,
 
 def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
                        client_grads: PyTree, spec: SlabSpec,
-                       pilot_stats: bool = False):
+                       pilot_stats: bool = False, ef=None):
     """Slab-engine OTA MAC — the staged uplink pipeline, single device.
 
     ``spec`` is the slab layout of a SINGLE client's gradient (== the
-    model parameters). Returns ``(g_slab, h, grads_slab, stats)``: the
-    noisy aggregate as a (spec.padded,) f32 slab (zero tail), the fading
-    draw (N,), the stacked (N, spec.padded) f32 gradient slab (returned
-    so callers can derive clean-gradient statistics without
-    re-stacking), and — with ``pilot_stats=True`` — the (3,) residual
-    log-moment statistics reduced by the receive/channel kernel's fused
-    epilogue (``repro.core.tail_index`` turns them into the online alpha
-    estimate); ``stats`` is None otherwise and the launches are the
-    exact pre-stats ``pallas_call``s (the static-alpha path stays
-    bitwise).
+    model parameters). Returns ``(g_slab, h, grads_slab, stats,
+    ef_new)``: the noisy aggregate as a (spec.padded,) f32 slab (zero
+    tail), the fading draw (N,), the stacked (N, spec.padded) f32
+    gradient slab (returned so callers can derive clean-gradient
+    statistics without re-stacking), — with ``pilot_stats=True`` — the
+    (3,) residual log-moment statistics reduced by the receive/channel
+    kernel's fused epilogue (``repro.core.tail_index`` turns them into
+    the online alpha estimate; ``stats`` is None otherwise and the
+    launches are the exact pre-stats ``pallas_call``s, the static-alpha
+    path stays bitwise), and — when ``ef`` (this transmitter's carried
+    (spec.padded,) error-feedback residual) is passed — the fresh
+    residual to carry into the next round (None otherwise).
 
     ``uplink="f32"`` executes the original single fused
     ``ota_channel_slab`` launch (bitwise-identical to the pre-pipeline
-    code). ``uplink="int8"`` stages it: fused transmit with
-    quantize-on-write (one transmitter — the whole MAC payload is
-    quantized once), then fused receive (dequantize + interference).
-    The jnp backend runs the op-exact ``kernels.ref`` mirrors instead,
-    over the same slab layout and the same draws.
+    code). A quantized uplink (``"int8"`` / ``"sign"``) stages it:
+    fused transmit with quantize-on-write (one transmitter — the whole
+    MAC payload is quantized once; ``ef`` joins the faded partial
+    before the quantizer and the residual is written in the same
+    launch), then fused receive (dequantize + interference). The jnp
+    backend runs the op-exact ``kernels.ref`` mirrors instead, over the
+    same slab layout and the same draws.
     """
     n = jax.tree.leaves(client_grads)[0].shape[0]
     kh, kx = jax.random.split(key)
@@ -168,30 +212,39 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
     grads_slab = stack_to_slab(spec, client_grads)
     u, e, scale = _interference_slab_inputs(kx, cfg, spec)
     stats = None
+    ef_new = None
 
     if cfg.uplink.quantized:
-        stochastic = cfg.uplink.stochastic_rounding
+        qmode = cfg.uplink.mode
+        # The sign quantizer is deterministic — it draws no SR uniforms
+        # (fold_in is stateless, so skipping the draw perturbs nothing).
+        stochastic = cfg.uplink.stochastic_rounding and qmode == "int8"
         r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        want_ef = ef is not None
         if cfg.backend == "jnp":
             from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
-            q, s = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
-                                    stochastic=stochastic)
-            g_slab = ota_receive_ref(q[None], s[None], u, e,
+            tx = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
+                                  stochastic=stochastic, qmode=qmode,
+                                  ef=ef, return_residual=want_ef)
+            g_slab = ota_receive_ref(tx[0][None], tx[1][None], u, e,
                                      alpha=cfg.alpha, scale=scale,
                                      pilot_stats=pilot_stats)
         else:
             from repro.kernels.ota_channel import (ota_receive_slab,
                                                    ota_transmit_slab)
-            q, s = ota_transmit_slab(grads_slab, h, quantize=True, r=r,
-                                     stochastic=stochastic,
-                                     interpret=cfg.interpret)
-            g_slab = ota_receive_slab(q[None], s[None], u, e,
+            tx = ota_transmit_slab(grads_slab, h, quantize=True, r=r,
+                                   stochastic=stochastic, qmode=qmode,
+                                   ef=ef, return_residual=want_ef,
+                                   interpret=cfg.interpret)
+            g_slab = ota_receive_slab(tx[0][None], tx[1][None], u, e,
                                       alpha=cfg.alpha, scale=scale,
                                       pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
+        if want_ef:
+            ef_new = tx[2]
         if pilot_stats:
             g_slab, stats = g_slab
-        return g_slab, h, grads_slab, stats
+        return g_slab, h, grads_slab, stats, ef_new
 
     if cfg.backend == "jnp":
         from repro.kernels.ref import ota_channel_ref
@@ -204,7 +257,7 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
                                   interpret=cfg.interpret)
     if pilot_stats:
         g_slab, stats = g_slab
-    return g_slab, h, grads_slab, stats
+    return g_slab, h, grads_slab, stats, ef_new
 
 
 def interference_log_moment_stats(kx: jax.Array, cfg: OTAChannelConfig,
@@ -280,9 +333,9 @@ def ota_aggregate_stacked(key: jax.Array, cfg: OTAChannelConfig,
         spec = make_slab_spec(jax.tree.map(
             lambda g: jax.ShapeDtypeStruct(g.shape[1:], g.dtype),
             client_grads))
-        g_slab, h, _, stats = ota_aggregate_slab(key, cfg, client_grads,
-                                                 spec,
-                                                 pilot_stats=pilot_stats)
+        g_slab, h, _, stats, _ = ota_aggregate_slab(key, cfg, client_grads,
+                                                    spec,
+                                                    pilot_stats=pilot_stats)
         g_t = slab_to_tree(spec, g_slab)
         return (g_t, h, stats) if pilot_stats else (g_t, h)
 

@@ -73,6 +73,23 @@ payload entry per round), not f32 rounding — tested with error bounds
 (tests/test_uplink.py, ``shard_check --uplink int8``); the (1,)-mesh
 remains bitwise-equal to the single-device pallas engine.
 
+**Wire-format matrix** (PR 7). ``uplink="sign"`` rides the same
+exchange as ``"int8"`` with 1-bit payloads (sign values in the int8
+wire container, blockwise mean-magnitude scales, no SR draws —
+deterministic). ``UplinkConfig.error_feedback`` carries one FULL-WIDTH
+residual row per transmitter (``SlabTrainState.ef``, sharded
+``P(axes)`` on dim 0, scanned as carry by the runner): each device's
+residual joins its noisy faded partial before the quantizer and the
+fresh residual is written by the same fused launch. The clean
+diagnostic payload gets no EF (it is a metric, not a transmission).
+``OTAChannelConfig.downlink="int8"`` quantizes the model broadcast of
+step 1: each device quantizes its OWN master slice before the
+``all_gather`` (blocks are lane-aligned, so slice-local quantization
+equals quantizing the full slab and slicing — the gathered broadcast
+is bitwise the single-device reconstruction; the wire moves ~4x fewer
+broadcast bytes), with the SR draw sliced from the one full-width
+``DL_FOLD`` draw. The resident master slices stay f32 everywhere.
+
 ``shard_round_step`` keeps the PR-2 pytree-in/pytree-out signature for
 drop-in use by ``make_round_step(backend="pallas_sharded")``: it packs
 at the call boundary, runs the resident body once, and materialises
@@ -173,51 +190,65 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
                  h_loc: jax.Array, key: jax.Array, kx: jax.Array,
                  idx: jax.Array, spec: SlabSpec, axes: Tuple[str, ...],
                  axis_sizes: Tuple[int, ...], n_total: int,
-                 pilot_stats: bool = False):
+                 pilot_stats: bool = False, ef=None):
     """The quantized MAC, per device (call inside ``shard_map``).
 
     Stages quantize -> superposition -> interference -> dequantize of
-    the uplink pipeline at ``uplink="int8"``:
+    the uplink pipeline at ``uplink="int8"`` / ``"sign"``:
 
     1. ONE fused transmit launch per payload quantizes this device's
        faded partial sum (and the clean diagnostic sum — it rides the
        same wire, so the grad-norm metric reflects the quantized
-       channel) to int8 with per-128-block f32 scales, stochastic
+       channel). ``"int8"``: per-128-block max/127 scales + stochastic
        rounding drawn from the round key (shard index folded in — the
-       draws are per-transmitter, like the fading).
+       draws are per-transmitter, like the fading). ``"sign"``: 1-bit
+       sign payloads with blockwise mean-magnitude scales,
+       deterministic (no SR draws consumed). ``ef`` is this
+       transmitter's carried (padded,) error-feedback residual: it
+       joins the NOISY faded partial before its quantizer (the clean
+       diagnostic payload gets no EF — it is a metric, not a
+       transmission) and the fresh residual is returned.
     2. ``exchange_uplink_payload`` hands each device the P payload
        blocks addressed to its slab slice — the wire carries 1-byte
-       codewords + d/128 scales instead of 4-byte floats (~4x less
-       ring traffic than the f32 ``psum_scatter``).
+       codewords (1-BIT at ``"sign"``) + d/128 scales instead of
+       4-byte floats.
     3. ONE fused receive launch per payload dequantizes + superposes
        the P rows and injects the CMS interference (clean payload:
        scale 0) on the slice only.
 
-    Returns ``(g_slice, clean_slice, stats)``, the slices
-    (spec.shard_len,) f32 and ``stats`` this device's (3,) residual
+    Returns ``(g_slice, clean_slice, stats, ef_new)``, the slices
+    (spec.shard_len,) f32, ``stats`` this device's (3,) residual
     log-moment epilogue reduction over ITS slice (None unless
     ``pilot_stats``; the caller psums the 3-vectors — stats are
-    subset-agnostic by the zero-mask contract).
+    subset-agnostic by the zero-mask contract) and ``ef_new`` the fresh
+    full-width (padded,) residual (None unless ``ef`` was passed).
     """
     from repro.kernels.ota_channel import ota_transmit_slab
 
-    stochastic = channel_cfg.uplink.stochastic_rounding
+    qmode = channel_cfg.uplink.mode
+    stochastic = channel_cfg.uplink.stochastic_rounding and qmode == "int8"
     if stochastic:
         r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
         r_noisy, r_clean = r2[0], r2[1]
     else:
         r_noisy = r_clean = None
 
-    q_noisy, s_noisy = ota_transmit_slab(
+    want_ef = ef is not None
+    tx = ota_transmit_slab(
         g_stack, h_loc, n_total=n_total, quantize=True, r=r_noisy,
-        stochastic=stochastic, interpret=channel_cfg.interpret)
+        stochastic=stochastic, qmode=qmode, ef=ef,
+        return_residual=want_ef, interpret=channel_cfg.interpret)
+    q_noisy, s_noisy = tx[0], tx[1]
+    ef_new = tx[2] if want_ef else None
     ones = jnp.ones((g_stack.shape[0],), jnp.float32)
     q_clean, s_clean = ota_transmit_slab(
         g_stack, ones, n_total=1, quantize=True, r=r_clean,
-        stochastic=stochastic, interpret=channel_cfg.interpret)
-    return _exchange_and_receive(channel_cfg, q_noisy, s_noisy, q_clean,
-                                 s_clean, kx, idx, spec, axes, axis_sizes,
-                                 pilot_stats=pilot_stats)
+        stochastic=stochastic, qmode=qmode,
+        interpret=channel_cfg.interpret)
+    g_slice, clean_slice, stats = _exchange_and_receive(
+        channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx, idx, spec,
+        axes, axis_sizes, pilot_stats=pilot_stats)
+    return g_slice, clean_slice, stats, ef_new
 
 
 def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
@@ -280,32 +311,52 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     client_fn = _client_update(loss_fn, fl_cfg)
     has_cast = any(dt != jnp.float32 for dt in spec.dtypes)
     uplink = channel_cfg.uplink
+    use_ef = uplink.error_feedback
+    dl_int8 = channel_cfg.downlink == "int8"
     track = adaptive_cfg.track_alpha
     dynamic = fl_cfg.dynamic_round
     dynamic_norm = fl_cfg.dynamic_norm
     # client_chunk bounds the RESIDENT client rows per device: the local
     # population streams through the accumulating transmit kernel in
     # chunks of this many rows (the client axis is already divided by
-    # the mesh, so the chunk applies to each device's n_local share).
+    # the mesh, so the chunk applies to each device's n_local share; a
+    # chunk that does not divide n_local gets a ragged final chunk —
+    # zero-gain padding rows, same contract as repro.core.stream).
     chunk = min(fl_cfg.client_chunk or n_local, n_local)
-    if n_local % chunk != 0:
-        raise ValueError(
-            f"client_chunk={chunk} must divide the per-device client "
-            f"count {n_local} (n_clients={n} over {n_shards} shards)")
+    n_chunks_loc = -(-n_local // chunk)
+    n_local_pad = n_chunks_loc * chunk
+    ragged = n_local_pad != n_local
 
-    def round_body(step, w_slice, opt_slices, alpha_hat, key, local_batches):
+    def round_body(step, w_slice, opt_slices, alpha_hat, ef_rows, key,
+                   local_batches):
         idx = linear_shard_index(axes)
         sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
                                                     shard_len)
         w_orig, opt_orig, alpha_orig = w_slice, opt_slices, alpha_hat
+        ef = ef_rows[0] if use_ef else None
 
         # --- 1. model broadcast: slices -> full slab -> pytree --------
-        w_full = all_gather_slab(w_slice, axes)
+        # Under downlink="int8" each device quantizes ITS slice before
+        # the gather (blocks are lane-aligned and shard slices are
+        # 128-multiples, so slice-local quantization equals quantizing
+        # the full slab and slicing — the gathered broadcast is bitwise
+        # the single-device reconstruction). The SR draw is the one
+        # full-width downlink draw, sliced at the shard offset. The
+        # resident master slice w_slice stays f32.
+        if dl_int8:
+            from repro.core.ota import (downlink_quantize_slab,
+                                        downlink_sr_slab_inputs)
+            r_dl = sl(downlink_sr_slab_inputs(key, spec.padded))
+            bcast_slice = downlink_quantize_slab(w_slice, r_dl)
+        else:
+            bcast_slice = w_slice
+        w_full = all_gather_slab(bcast_slice, axes)
         params = slab_to_tree(spec, w_full)
 
         kh, kx = jax.random.split(key)
         h = sample_fading(kh, channel_cfg, (n,))
         stats = None
+        ef_new = None
 
         if not dynamic:
             # --- 2. local client compute + power control (in h) -------
@@ -315,9 +366,9 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             g_stack = stack_to_slab(spec, grads)          # (n_local, padded)
 
             if uplink.quantized:
-                g_slice, clean_slice, stats = _int8_uplink(
+                g_slice, clean_slice, stats, ef_new = _int8_uplink(
                     channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
-                    axis_sizes, n, pilot_stats=track)
+                    axis_sizes, n, pilot_stats=track, ef=ef)
             else:
                 # Fused transmit: the faded partial sum over the local
                 # client rows, full slab width, analog (f32) wire format.
@@ -370,13 +421,27 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                                                  n_local)
             m_loc = jax.lax.dynamic_slice_in_dim(mask, idx * n_local,
                                                  n_local)
+            if ragged:
+                # Ragged final chunk: zero-gain padding rows past the
+                # local population (their batch rows re-read local row
+                # n_local-1, multiplied by the zero gain/mask — exactly
+                # 0.0 folded in; repro.core.stream's contract).
+                h_loc = jnp.pad(h_loc, (0, n_local_pad - n_local))
+                m_loc = jnp.pad(m_loc, (0, n_local_pad - n_local))
 
             def chunk_body(carry, c):
                 acc, clean, loss_sum = carry
                 start = c * chunk
-                batch = jax.tree.map(
-                    lambda b: jax.lax.dynamic_slice_in_dim(b, start, chunk),
-                    local_batches)
+                if ragged:
+                    cidx = jnp.minimum(start + jnp.arange(chunk),
+                                       n_local - 1)
+                    batch = jax.tree.map(lambda b: jnp.take(b, cidx, axis=0),
+                                         local_batches)
+                else:
+                    batch = jax.tree.map(
+                        lambda b: jax.lax.dynamic_slice_in_dim(b, start,
+                                                               chunk),
+                        local_batches)
                 grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(
                     params, batch)
                 g_stack = stack_to_slab(spec, grads)
@@ -396,7 +461,7 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             else:
                 carry, _ = jax.lax.scan(
                     chunk_body, carry,
-                    jnp.arange(n_local // chunk, dtype=jnp.int32))
+                    jnp.arange(n_chunks_loc, dtype=jnp.int32))
             partial, clean_part, loss_sum = carry
 
             if uplink.quantized:
@@ -406,20 +471,26 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 # the clean diagnostic partial stays raw (the metric
                 # divides by the participant count).
                 noisy_part = partial / norm_safe if dynamic_norm else partial
-                stochastic = uplink.stochastic_rounding
+                qmode = uplink.mode
+                stochastic = (uplink.stochastic_rounding
+                              and qmode == "int8")
                 if stochastic:
                     r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
                     r_noisy, r_clean = r2[0], r2[1]
                 else:
                     r_noisy = r_clean = None
                 one = jnp.ones((1,), jnp.float32)
-                q_noisy, s_noisy = ota_transmit_slab(
+                tx = ota_transmit_slab(
                     noisy_part[None], one, n_total=1, quantize=True,
-                    r=r_noisy, stochastic=stochastic,
+                    r=r_noisy, stochastic=stochastic, qmode=qmode,
+                    ef=ef, return_residual=use_ef,
                     interpret=channel_cfg.interpret)
+                q_noisy, s_noisy = tx[0], tx[1]
+                if use_ef:
+                    ef_new = tx[2]
                 q_clean, s_clean = ota_transmit_slab(
                     clean_part[None], one, n_total=1, quantize=True,
-                    r=r_clean, stochastic=stochastic,
+                    r=r_clean, stochastic=stochastic, qmode=qmode,
                     interpret=channel_cfg.interpret)
                 g_slice, clean_slice, stats = _exchange_and_receive(
                     channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx,
@@ -457,9 +528,16 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
         if has_cast:
             # Non-f32 leaves round-trip through their storage dtype each
             # round on every other backend; mirror that here for parity.
-            w_slice = sl(tree_to_slab(spec, params))
+            # The cast applies to the MASTER weights: under the int8
+            # downlink ``params`` is the quantized broadcast, so the
+            # master slices are regathered for the round trip (rare
+            # config — non-f32 leaves + quantized downlink).
+            src = (params if not dl_int8
+                   else slab_to_tree(spec, all_gather_slab(w_orig, axes)))
+            w_slice = sl(tree_to_slab(spec, src))
         new_opt, w_new = slab_update_slabs(adaptive_cfg, g_slice, opt_slices,
                                            w_slice, alpha=alpha_arg)
+        ef_out = ef_new[None] if use_ef else ef_rows
         if dynamic_norm:
             # Zero-participation skip: nobody transmitted, so the state
             # carries over unchanged (only the round counter advances).
@@ -467,6 +545,10 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             w_new = jnp.where(participated, w_new, w_orig)
             new_opt = tuple(jnp.where(participated, o_n, o_o)
                             for o_n, o_o in zip(new_opt, opt_orig))
+            if use_ef:
+                # No transmission happened: the carried residual is NOT
+                # replaced by the residual of a phantom transmit.
+                ef_out = jnp.where(participated, ef_out, ef_rows)
             if track:
                 alpha_hat = jnp.where(participated, alpha_hat, alpha_orig)
                 alpha_metric = alpha_hat
@@ -482,7 +564,7 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             alpha_hat=alpha_metric,
             n_participants=n_part,
         )
-        return step + 1, w_new, new_opt, alpha_hat, metrics
+        return step + 1, w_new, new_opt, alpha_hat, ef_out, metrics
 
     return round_body
 
@@ -511,6 +593,20 @@ def _check_spec_shards(spec: SlabSpec, n_shards: int) -> None:
             f"init_train_state(..., shards={n_shards})")
 
 
+def _check_ef_rows(state: SlabTrainState, use_ef: bool,
+                   n_shards: int) -> None:
+    if use_ef and state.ef is None:
+        raise ValueError(
+            "UplinkConfig.error_feedback=True but the SlabTrainState "
+            "carries no residual rows; build it with "
+            f"init_train_state(..., shards={n_shards}, "
+            "error_feedback=True)")
+    if use_ef and state.ef.shape[0] != n_shards:
+        raise ValueError(
+            f"SlabTrainState.ef has {state.ef.shape[0]} transmitter rows "
+            f"but the mesh has {n_shards} client shards")
+
+
 def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
                          adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
                          mesh, jit: bool = True):
@@ -526,20 +622,28 @@ def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
     """
     axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
     n_shards = math.prod(axis_sizes)
+    use_ef = channel_cfg.uplink.error_feedback
+    # The EF residual rows are sharded over the client axes on dim 0
+    # (one (1, padded) row per transmitter, like its fading slice); when
+    # EF is off a replicated scalar dummy keeps the shard_map signature
+    # static and the state's ef stays None end to end.
+    ef_spec = P(axes) if use_ef else P()
 
     def step(state: SlabTrainState, key, client_batches):
         _check_spec_shards(state.spec, n_shards)
+        _check_ef_rows(state, use_ef, n_shards)
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
                                 axes, axis_sizes, state.spec)
         sharded = shard_map(
             body, mesh,
-            in_specs=(P(), P(axes), P(axes), P(), P(), P(axes)),
-            out_specs=(P(), P(axes), P(axes), P(), P()))
-        new_step, w, opt, alpha_hat, m = sharded(
-            state.step, state.w, state.opt, state.alpha_hat, key,
+            in_specs=(P(), P(axes), P(axes), P(), ef_spec, P(), P(axes)),
+            out_specs=(P(), P(axes), P(axes), P(), ef_spec, P()))
+        ef_in = state.ef if use_ef else jnp.zeros((), jnp.float32)
+        new_step, w, opt, alpha_hat, ef_out, m = sharded(
+            state.step, state.w, state.opt, state.alpha_hat, ef_in, key,
             client_batches)
         return SlabTrainState(new_step, w, tuple(opt), alpha_hat,
-                              state.spec), m
+                              state.spec, ef_out if use_ef else state.ef), m
 
     return jax.jit(step) if jit else step
 
@@ -557,34 +661,41 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
     """
     axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
     n_shards = math.prod(axis_sizes)
+    use_ef = channel_cfg.uplink.error_feedback
+    ef_spec = P(axes) if use_ef else P()
 
     def run(state: SlabTrainState, keys, client_batches):
         _check_spec_shards(state.spec, n_shards)
+        _check_ef_rows(state, use_ef, n_shards)
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
                                 axes, axis_sizes, state.spec)
 
-        def scan_rounds(step0, w_slice, opt_slices, alpha0, keys, batches):
+        def scan_rounds(step0, w_slice, opt_slices, alpha0, ef0, keys,
+                        batches):
             def scanned(carry, xs):
-                step, w, opt, alpha_hat = carry
+                step, w, opt, alpha_hat, ef = carry
                 key, batch = xs
-                step, w, opt, alpha_hat, m = body(step, w, opt, alpha_hat,
-                                                  key, batch)
-                return (step, w, opt, alpha_hat), m
+                step, w, opt, alpha_hat, ef, m = body(
+                    step, w, opt, alpha_hat, ef, key, batch)
+                return (step, w, opt, alpha_hat, ef), m
 
-            (step, w, opt, alpha_hat), ms = jax.lax.scan(
-                scanned, (step0, w_slice, opt_slices, alpha0),
+            (step, w, opt, alpha_hat, ef), ms = jax.lax.scan(
+                scanned, (step0, w_slice, opt_slices, alpha0, ef0),
                 (keys, batches))
-            return step, w, opt, alpha_hat, ms
+            return step, w, opt, alpha_hat, ef, ms
 
         sharded = shard_map(
             scan_rounds, mesh,
-            in_specs=(P(), P(axes), P(axes), P(), P(), P(None, axes)),
-            out_specs=(P(), P(axes), P(axes), P(), P()))
-        new_step, w, opt, alpha_hat, ms = sharded(
-            state.step, state.w, state.opt, state.alpha_hat, keys,
+            in_specs=(P(), P(axes), P(axes), P(), ef_spec, P(),
+                      P(None, axes)),
+            out_specs=(P(), P(axes), P(axes), P(), ef_spec, P()))
+        ef_in = state.ef if use_ef else jnp.zeros((), jnp.float32)
+        new_step, w, opt, alpha_hat, ef_out, ms = sharded(
+            state.step, state.w, state.opt, state.alpha_hat, ef_in, keys,
             client_batches)
         return SlabTrainState(new_step, w, tuple(opt), alpha_hat,
-                              state.spec), ms
+                              state.spec, ef_out if use_ef else state.ef
+                              ), ms
 
     return jax.jit(run) if jit else run
 
@@ -609,6 +720,12 @@ def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,
             '(make_shard_slab_step / make_shard_slab_runner): the pytree-'
             'per-round wrapper re-packs the state every call, which would '
             'reset the estimator EMA each round')
+    if channel_cfg.uplink.error_feedback:
+        raise ValueError(
+            "error_feedback needs the resident loop (make_shard_slab_step "
+            "/ make_shard_slab_runner): the pytree-per-round wrapper "
+            "re-packs the state every call, which would zero the carried "
+            "residual each round")
     axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
     n_shards = math.prod(axis_sizes)
     inner = make_shard_slab_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,

@@ -65,6 +65,17 @@ class SlabTrainState:
     It is the first state field that feeds *telemetry* back into the
     update rule (``AdaptiveConfig.alpha == "auto"``).
 
+    ``ef`` is the per-transmitter error-feedback residual (PR 7,
+    ``UplinkConfig.error_feedback``): a (spec.shards, spec.padded) f32
+    array — one FULL-WIDTH row per transmitter, because each
+    transmitter quantizes its whole faded partial sum before the MAC
+    collective slices it. Under a mesh it is sharded over the client
+    axes on dim 0 (each device carries its own (1, padded) residual,
+    like its fading draw); single-device engines have shards == 1.
+    ``None`` when error feedback is off — EF-on and EF-off states are
+    deliberately different pytree structures, so the f32/no-EF paths
+    stay bitwise and checkpoints without the slab load as None.
+
     ``spec`` is static aux data: two states with different layouts are
     different pytree types to jit, and it never becomes a traced value.
     """
@@ -74,20 +85,23 @@ class SlabTrainState:
     opt: Tuple[jax.Array, ...]
     alpha_hat: jax.Array
     spec: SlabSpec
+    ef: Any = None
 
     def tree_flatten(self):
-        return (self.step, self.w, self.opt, self.alpha_hat), self.spec
+        return ((self.step, self.w, self.opt, self.alpha_hat, self.ef),
+                self.spec)
 
     @classmethod
     def tree_unflatten(cls, spec, children):
-        step, w, opt, alpha_hat = children
+        step, w, opt, alpha_hat, ef = children
         return cls(step=step, w=w, opt=tuple(opt), alpha_hat=alpha_hat,
-                   spec=spec)
+                   spec=spec, ef=ef)
 
 
 def init_train_state(cfg: AdaptiveConfig, params: PyTree,
                      spec: SlabSpec | None = None,
-                     shards: int = 1) -> SlabTrainState:
+                     shards: int = 1,
+                     error_feedback: bool = False) -> SlabTrainState:
     """Fresh resident state: params packed once, optimizer slabs zero.
 
     Matches ``make_server_optimizer(cfg).init`` for every registered
@@ -95,15 +109,19 @@ def init_train_state(cfg: AdaptiveConfig, params: PyTree,
     to reuse a prebuilt layout, or ``shards`` to build one with the
     shard-aligned padding rule. ``alpha_hat`` starts at the unseeded
     sentinel 0.0 (the first tracked round adopts its raw estimate).
-    """
+    ``error_feedback=True`` allocates the zeroed (spec.shards,
+    spec.padded) per-transmitter residual rows (a fresh EF loop starts
+    with nothing carried)."""
     if spec is None:
         spec = make_slab_spec(params, shards=shards)
     n_rows = len(state_slab_rows(cfg))
+    ef = (jnp.zeros((spec.shards, spec.padded), jnp.float32)
+          if error_feedback else None)
     return SlabTrainState(step=jnp.zeros((), jnp.int32),
                           w=tree_to_slab(spec, params),
                           opt=tuple(zeros_slab(spec) for _ in range(n_rows)),
                           alpha_hat=jnp.zeros((), jnp.float32),
-                          spec=spec)
+                          spec=spec, ef=ef)
 
 
 def pack_train_state(cfg: AdaptiveConfig, spec: SlabSpec, params: PyTree,

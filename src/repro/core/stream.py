@@ -109,6 +109,9 @@ class StreamParts(NamedTuple):
     loss_sum: jax.Array       # sum of participating clients' losses
     clean_slab: jax.Array     # (padded,) unfaded participant gradient sum
     stats: Optional[jax.Array]  # (3,) pilot log-moments (pilot_stats=True)
+    ef_new: Optional[jax.Array] = None  # (padded,) fresh EF residual
+                                        # (error feedback on a quantized
+                                        # uplink; None otherwise)
 
 
 def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
@@ -117,7 +120,8 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
                          client_batches: PyTree = None,
                          batch_gen: Optional[Callable] = None,
                          pilot_stats: bool = False,
-                         use_kernels: bool = True) -> StreamParts:
+                         use_kernels: bool = True,
+                         ef: Optional[jax.Array] = None) -> StreamParts:
     """One streamed uplink pass: scan the client axis in chunks, fold
     each chunk into the running partial via the accumulating transmit
     kernel, then push the completed partial through the single-row
@@ -129,17 +133,30 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     in-graph — required for client populations too large to materialise
     (the million-client benchmark). Exactly one of the two.
 
+    A ``client_chunk`` that does NOT divide ``n_clients`` is served by a
+    RAGGED final chunk: the tail rows past N are padding — their
+    effective fading is zero (so they fold exactly 0.0 into the
+    partial; their batch rows re-read row N-1, whose gradient is then
+    multiplied by that zero) and their mask is zero (so clean/loss sums
+    ignore them). All per-client draws stay full (N,) draws, so ragged
+    chunking consumes identical PRNG state to any other chunking of the
+    same round.
+
     ``use_kernels=False`` runs the op-mirrored ``kernels.ref`` path over
     the same slab layout and the same draws (the jnp backend).
+    ``ef`` is this transmitter's carried (padded,) error-feedback
+    residual: it joins the completed partial before the finish-stage
+    quantizer (quantized uplink only) and the fresh residual comes back
+    as ``StreamParts.ef_new``.
     """
     cfg = channel_cfg
     n = fl_cfg.n_clients
     chunk = min(fl_cfg.client_chunk or n, n)
-    if n % chunk != 0:
-        raise ValueError(f"client_chunk must divide n_clients: "
-                         f"{chunk} does not divide {n}")
     if (client_batches is None) == (batch_gen is None):
         raise ValueError("pass exactly one of client_batches / batch_gen")
+    if ef is not None and not cfg.uplink.quantized:
+        raise ValueError("ef= (error feedback) needs a quantized uplink; "
+                         'the "f32" payload has no residual')
 
     mask, gain = round_participation(key, fl_cfg)
     dynamic_norm = fl_cfg.dynamic_norm
@@ -150,6 +167,19 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     # and the static 1/N divisor stays in-kernel.
     h_eff = h * gain if dynamic_norm else h
     n_div = 1 if dynamic_norm else n
+    # Ragged final chunk: pad the PER-ROW operands (effective fading,
+    # mask) with zero rows up to the next chunk multiple. The padded
+    # rows transmit with zero gain and count for nothing; the draws
+    # above were taken at full (N,) BEFORE padding, so the PRNG stream
+    # is untouched. When chunk | N this is a no-op (zero-length pad),
+    # keeping the divisible path bitwise-identical.
+    n_chunks = -(-n // chunk)
+    n_padded = n_chunks * chunk
+    if n_padded != n:
+        h_sched = jnp.pad(h_eff, (0, n_padded - n))
+        mask_sched = jnp.pad(mask, (0, n_padded - n))
+    else:
+        h_sched, mask_sched = h_eff, mask
 
     if use_kernels:
         from repro.kernels.ota_channel import ota_transmit_slab
@@ -163,20 +193,30 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
         def transmit(g_stack, h_c, acc):
             return ota_transmit_ref(g_stack, h_c, n_total=n_div, acc=acc)
 
+    ragged = n_padded != n
+
     def body(carry, c):
         acc, clean, loss_sum = carry
         start = c * chunk
         idx = start + jnp.arange(chunk)
+        if ragged:
+            # Padding rows re-read row N-1; its gradient lands with the
+            # zero gain/mask of the padded schedule rows, so it folds
+            # exactly 0.0 into every accumulator.
+            idx = jnp.minimum(idx, n - 1)
         if batch_gen is not None:
             batch = batch_gen(key, idx)
+        elif ragged:
+            batch = jax.tree.map(lambda b: jnp.take(b, idx, axis=0),
+                                 client_batches)
         else:
             batch = jax.tree.map(
                 lambda b: jax.lax.dynamic_slice_in_dim(b, start, chunk),
                 client_batches)
         grads, losses = jax.vmap(client_fn, in_axes=(None, 0))(params, batch)
         g_stack = stack_to_slab(spec, grads)
-        h_c = jax.lax.dynamic_slice_in_dim(h_eff, start, chunk)
-        m_c = jax.lax.dynamic_slice_in_dim(mask, start, chunk)
+        h_c = jax.lax.dynamic_slice_in_dim(h_sched, start, chunk)
+        m_c = jax.lax.dynamic_slice_in_dim(mask_sched, start, chunk)
         acc = transmit(g_stack, h_c, acc)
         clean = clean + jnp.sum(m_c[:, None] * g_stack, axis=0)
         loss_sum = loss_sum + jnp.sum(m_c * losses)
@@ -199,7 +239,7 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     else:
         carry = (zeros, zeros, jnp.zeros((), jnp.float32))
         carry, _ = jax.lax.scan(body, carry,
-                                jnp.arange(n // chunk, dtype=jnp.int32))
+                                jnp.arange(n_chunks, dtype=jnp.int32))
         acc, clean, loss_sum = carry
 
     n_part = jnp.sum(mask)
@@ -221,28 +261,35 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     u, e, scale = _interference_slab_inputs(kx, cfg, spec)
     one = jnp.ones((1,), jnp.float32)
     stats = None
+    ef_new = None
     if cfg.uplink.quantized:
-        stochastic = cfg.uplink.stochastic_rounding
+        qmode = cfg.uplink.mode
+        stochastic = cfg.uplink.stochastic_rounding and qmode == "int8"
         r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        want_ef = ef is not None
         if use_kernels:
             from repro.kernels.ota_channel import (ota_receive_slab,
                                                    ota_transmit_slab)
-            q, s = ota_transmit_slab(g_pre[None], one, n_total=1,
-                                     quantize=True, r=r,
-                                     stochastic=stochastic,
-                                     interpret=cfg.interpret)
-            g_slab = ota_receive_slab(q[None], s[None], u, e,
+            tx = ota_transmit_slab(g_pre[None], one, n_total=1,
+                                   quantize=True, r=r,
+                                   stochastic=stochastic, qmode=qmode,
+                                   ef=ef, return_residual=want_ef,
+                                   interpret=cfg.interpret)
+            g_slab = ota_receive_slab(tx[0][None], tx[1][None], u, e,
                                       alpha=cfg.alpha, scale=scale,
                                       pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
         else:
             from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
-            q, s = ota_transmit_ref(g_pre[None], one, n_total=1,
-                                    quantize=True, r=r,
-                                    stochastic=stochastic)
-            g_slab = ota_receive_ref(q[None], s[None], u, e,
+            tx = ota_transmit_ref(g_pre[None], one, n_total=1,
+                                  quantize=True, r=r,
+                                  stochastic=stochastic, qmode=qmode,
+                                  ef=ef, return_residual=want_ef)
+            g_slab = ota_receive_ref(tx[0][None], tx[1][None], u, e,
                                      alpha=cfg.alpha, scale=scale,
                                      pilot_stats=pilot_stats)
+        if want_ef:
+            ef_new = tx[2]
     else:
         if use_kernels:
             from repro.kernels.ota_channel import ota_channel_slab
@@ -260,4 +307,5 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
 
     return StreamParts(g_slab=g_slab, h=h, mask=mask,
                        n_participants=n_part, norm=norm,
-                       loss_sum=loss_sum, clean_slab=clean, stats=stats)
+                       loss_sum=loss_sum, clean_slab=clean, stats=stats,
+                       ef_new=ef_new)

@@ -77,6 +77,18 @@ Quantization composes by accumulating the f32 partial first and
 quantizing the COMPLETED sum through a single-row ``quantize=True``
 launch (one quantization step per entry, the wire contract).
 
+**Wire-format matrix** (PR 7): the quantize epilogue speaks two wire
+formats — ``qmode="int8"`` (symmetric max|x|/127 + stochastic rounding)
+and ``qmode="sign"`` (1-bit signSGD: payload = sign(x) in {-1, 0, +1}
+on the same int8 wire container, one f32 mean|x| magnitude per
+128-block, deterministic). Both dequantize through the unchanged
+``ota_receive_slab`` (payload * per-block scale). Per-transmitter error
+feedback composes in the same launch: the carried residual ``ef`` joins
+the faded partial before quantization and ``return_residual=True``
+writes the fresh residual ``x - dequant(quant(x))`` as a third output —
+the EF loop costs one extra (1, bc) read + write per tile, never a
+second pass over G.
+
 Sharded slab engine: when the round is distributed over a device mesh
 (``repro.core.shard``), each device launches the transmit kernel on its
 LOCAL client shard only, passing ``n_total`` = the global client count
@@ -228,30 +240,61 @@ def _tx_stream_kernel(g_ref, h_ref, acc_ref, out_ref, *, n_clients: int):
                                           keepdims=True) / n_clients
 
 
-def _tx_quant_kernel(g_ref, h_ref, r_ref, q_ref, s_ref, *, n_clients: int,
-                     stochastic: bool):
+def _tx_quant_kernel(*refs, n_clients: int, stochastic: bool, qmode: str,
+                     ef: bool, resid: bool):
+    if ef:
+        g_ref, h_ref, r_ref, ef_ref = refs[:4]
+        outs = refs[4:]
+    else:
+        g_ref, h_ref, r_ref = refs[:3]
+        outs = refs[3:]
+    q_ref, s_ref = outs[:2]
     g = g_ref[...].astype(jnp.float32)              # (N, bc)
     h = h_ref[...].astype(jnp.float32)              # (N, 1)
     agg = jnp.sum(h * g, axis=0, keepdims=True) / n_clients   # (1, bc)
+    if ef:
+        # Error feedback: the residual carried from the previous round
+        # joins the faded partial BEFORE quantization, so what the wire
+        # loses this round is re-offered next round.
+        agg = agg + ef_ref[...].astype(jnp.float32)
     bc = agg.shape[1]
     a = agg.reshape(bc // LANE, LANE)
-    maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)       # (nb, 1)
-    # All-zero blocks (the slab's zero tail) keep scale 1 -> payload 0,
-    # so quantization preserves the zero-padding contract exactly.
-    s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
-    y = a / s
-    if stochastic:
-        y = jnp.floor(y + r_ref[...].reshape(bc // LANE, LANE))
+    if qmode == "sign":
+        # 1-bit signSGD payload: per-block magnitude = mean|x| (the L1
+        # scale that makes +/-s the least-squares sign reconstruction),
+        # payload = sign(x) in {-1, 0, +1} on the int8 wire container.
+        # Deterministic (canonical EF-signSGD) — the SR draws are
+        # ignored. All-zero blocks keep scale 1 -> payload 0, the same
+        # zero-tail fixed point as int8.
+        meanabs = jnp.mean(jnp.abs(a), axis=1, keepdims=True)  # (nb, 1)
+        s = jnp.where(meanabs > 0.0, meanabs, 1.0)
+        q = jnp.sign(a).astype(jnp.int8)
     else:
-        y = jnp.round(y)
-    q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+        maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)    # (nb, 1)
+        # All-zero blocks (the slab's zero tail) keep scale 1 -> payload
+        # 0, so quantization preserves the zero-padding contract exactly.
+        s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
+        y = a / s
+        if stochastic:
+            y = jnp.floor(y + r_ref[...].reshape(bc // LANE, LANE))
+        else:
+            y = jnp.round(y)
+        q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
     q_ref[...] = q.reshape(1, bc)
     s_ref[...] = s.reshape(1, bc // LANE)
+    if resid:
+        # What the wire will NOT deliver: x - dequant(quant(x)), with x
+        # the EF-augmented partial — still in-register, one extra write.
+        deq = q.astype(jnp.float32) * s
+        outs[2][...] = (a - deq).reshape(1, bc)
 
 
 def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
                       n_total: int | None = None, quantize: bool = False,
                       r: Optional[jax.Array] = None, stochastic: bool = True,
+                      qmode: str = "int8",
+                      ef: Optional[jax.Array] = None,
+                      return_residual: bool = False,
                       acc: Optional[jax.Array] = None,
                       row_chunk: Optional[int] = None,
                       block_cols: int = DEFAULT_BLOCK_COLS,
@@ -272,6 +315,18 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     ``stochastic=False`` (round-to-nearest). d must be a multiple of
     128 in quantized mode — every slab/slice is, by the slab padding
     contract.
+
+    ``qmode`` selects the quantizer: ``"int8"`` (symmetric max|x|/127,
+    stochastic rounding) or ``"sign"`` (1-bit signSGD: payload =
+    sign(x) in {-1, 0, +1} on the int8 wire, scale = blockwise mean|x|;
+    deterministic, ``r`` may be None). Both dequantize through the same
+    ``ota_receive_slab``.
+
+    **Error feedback**: ``ef`` is this transmitter's (d,) carried
+    residual — it is added into the faded partial BEFORE quantization.
+    ``return_residual=True`` appends the fresh residual
+    ``x - dequant(quant(x))`` (x the EF-augmented partial) to the
+    return: ``(payload, scales, residual)`` — still one read of G.
 
     **Streamed client axis** (see the module docstring): ``acc`` is a
     (d,) f32 carry — the running partial sum of the chunks already
@@ -348,35 +403,59 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
             f"quantized transmit needs d to be a multiple of {LANE} "
             f"(the per-block scale width), got {d}; slabs satisfy this "
             "by construction")
-    if stochastic and (r is None or r.shape != (d,)):
+    if qmode not in ("int8", "sign"):
+        raise ValueError(f'unknown qmode {qmode!r}; options: "int8", "sign"')
+    if (qmode == "int8" and stochastic
+            and (r is None or r.shape != (d,))):
         raise ValueError("stochastic rounding needs r of shape "
                          f"({d},), got {None if r is None else r.shape}")
+    if ef is not None and ef.shape != (d,):
+        raise ValueError(f"ef must be the ({d},) carried residual, "
+                         f"got {ef.shape}")
     d_pad = -(-d // block_cols) * block_cols
     gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
     if r is None:
         r = jnp.zeros((d,), jnp.float32)
     rp = jnp.pad(r, (0, d_pad - d)).reshape(1, d_pad)
 
-    q, s = pl.pallas_call(
+    use_ef = ef is not None
+    spec_row = pl.BlockSpec((1, block_cols), lambda i: (0, i))
+    in_specs = [
+        pl.BlockSpec((n, block_cols), lambda i: (0, i)),
+        pl.BlockSpec((n, 1), lambda i: (0, 0)),
+        spec_row,
+    ]
+    operands = [gp, h2, rp]
+    if use_ef:
+        in_specs.append(spec_row)
+        operands.append(jnp.pad(ef.astype(jnp.float32),
+                                (0, d_pad - d)).reshape(1, d_pad))
+    out_specs = [
+        spec_row,
+        pl.BlockSpec((1, block_cols // LANE), lambda i: (0, i)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((1, d_pad), jnp.int8),
+        jax.ShapeDtypeStruct((1, d_pad // LANE), jnp.float32),
+    ]
+    if return_residual:
+        out_specs.append(spec_row)
+        out_shape.append(jax.ShapeDtypeStruct((1, d_pad), jnp.float32))
+    outs = pl.pallas_call(
         functools.partial(_tx_quant_kernel, n_clients=n_total,
-                          stochastic=stochastic),
+                          stochastic=stochastic, qmode=qmode, ef=use_ef,
+                          resid=return_residual),
         grid=(d_pad // block_cols,),
-        in_specs=[
-            pl.BlockSpec((n, block_cols), lambda i: (0, i)),
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, block_cols), lambda i: (0, i)),
-            pl.BlockSpec((1, block_cols // LANE), lambda i: (0, i)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, d_pad), jnp.int8),
-            jax.ShapeDtypeStruct((1, d_pad // LANE), jnp.float32),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(gp, h2, rp)
-    return q.reshape(-1)[:d], s.reshape(-1)[:d // LANE]
+    )(*operands)
+    q, s = outs[0], outs[1]
+    ret = (q.reshape(-1)[:d], s.reshape(-1)[:d // LANE])
+    if return_residual:
+        ret = ret + (outs[2].reshape(-1)[:d],)
+    return ret
 
 
 def _rx_kernel(*refs, alpha: float, scale: float, stats: bool):

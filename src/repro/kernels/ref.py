@@ -103,10 +103,15 @@ INT8_MAX = 127.0
 def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
                      n_total: Optional[int] = None, quantize: bool = False,
                      r: Optional[jax.Array] = None, stochastic: bool = True,
+                     qmode: str = "int8",
+                     ef: Optional[jax.Array] = None,
+                     return_residual: bool = False,
                      acc: Optional[jax.Array] = None,
                      row_chunk: Optional[int] = None):
-    """Transmit-stage oracle: faded partial sum, optionally int8-quantized
-    with per-LANE-block f32 scales and stochastic rounding.
+    """Transmit-stage oracle: faded partial sum, optionally quantized
+    (``qmode="int8"``: per-LANE-block max|x|/127 scales + stochastic
+    rounding; ``qmode="sign"``: 1-bit signSGD, payload = sign(x) with
+    blockwise mean|x| magnitudes, deterministic).
 
     Mirrors ``ota_channel.ota_transmit_slab`` op for op. Note the
     agreement contract is *one quantization step*, not bitwise: the
@@ -116,7 +121,12 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     a full quantum (one scale) on that entry. Hence the int8 parity
     tests assert per-entry error <= the entry's block scale (plus exact
     equality on the overwhelming majority), not allclose at f32
-    rounding.
+    rounding. (Sign payloads flip only where the partial sits within
+    f32 rounding of 0 or of a block-mean boundary — same contract.)
+
+    ``ef`` (error feedback) is the (d,) carried residual added into the
+    faded partial before quantization; ``return_residual=True`` appends
+    the fresh residual ``x - dequant(quant(x))`` to the return.
 
     ``acc``/``row_chunk`` mirror the kernel's streamed client axis:
     start from the (d,) f32 carry (zeros if None) and fold the client
@@ -124,7 +134,8 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     divided by ``n_total`` as it lands. f32-only, like the kernel.
 
     grads: (N, d); h: (N,). Returns (d,) f32, or ``(payload int8 (d,),
-    scales f32 (d // 128,))`` when ``quantize=True``.
+    scales f32 (d // 128,)[, residual f32 (d,)])`` when
+    ``quantize=True``.
     """
     n, d = grads.shape
     if n_total is None:
@@ -151,16 +162,29 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
         return agg
     if d % LANE != 0:
         raise ValueError(f"quantized transmit needs d % {LANE} == 0, got {d}")
+    if qmode not in ("int8", "sign"):
+        raise ValueError(f'unknown qmode {qmode!r}; options: "int8", "sign"')
+    if ef is not None:
+        agg = agg + ef.astype(jnp.float32)
     a = agg.reshape(d // LANE, LANE)
-    maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
-    s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
-    y = a / s
-    if stochastic:
-        y = jnp.floor(y + r.reshape(d // LANE, LANE))
+    if qmode == "sign":
+        meanabs = jnp.mean(jnp.abs(a), axis=1, keepdims=True)
+        s = jnp.where(meanabs > 0.0, meanabs, 1.0)
+        q = jnp.sign(a).astype(jnp.int8)
     else:
-        y = jnp.round(y)
-    q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
-    return q.reshape(-1), s.reshape(-1)
+        maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
+        s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
+        y = a / s
+        if stochastic:
+            y = jnp.floor(y + r.reshape(d // LANE, LANE))
+        else:
+            y = jnp.round(y)
+        q = jnp.clip(y, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    ret = (q.reshape(-1), s.reshape(-1))
+    if return_residual:
+        resid = a - q.astype(jnp.float32) * s
+        ret = ret + (resid.reshape(-1),)
+    return ret
 
 
 def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,

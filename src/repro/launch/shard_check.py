@@ -52,6 +52,13 @@ key). The reference becomes the slab-resident jnp loop — the
 pytree-per-round API carries no streamed uplink path, so those rows
 are skipped, exactly like --track-alpha.
 
+``--uplink sign`` / ``--error-feedback`` / ``--downlink int8`` fill
+the wire-format matrix (PR 7): 1-bit signSGD payloads, the resident
+per-transmitter EF slab riding the scan carry, and the int8-quantized
+model broadcast. All three make the slab-resident jnp loop the oracle
+(the pytree API refuses them), and the quantized tiers use the loose
+quantization-error tolerance.
+
 The XLA flag below MUST precede any jax import (jax locks the device
 count at first backend init); at least ``--host-devices`` /
 ``$REPRO_HOST_DEVICES`` (default 8) host devices are forced, or the
@@ -133,7 +140,8 @@ def _run_resident(backend, mesh, n_shards, params, batches, ch, ad, fl,
     """Slab-resident trajectory: one scanned dispatch over R rounds."""
     run = make_slab_round_runner(_loss_fn, ch, ad, fl, backend=backend,
                                  mesh=mesh)
-    state = init_train_state(ad, params, shards=n_shards)
+    state = init_train_state(ad, params, shards=n_shards,
+                             error_feedback=ch.uplink.error_feedback)
     stacked = jax.tree.map(lambda b: jnp.stack([b] * rounds), batches)
     state, ms = run(state, _round_keys(rounds), stacked)
     p, s = unpack_train_state(ad, state)
@@ -176,16 +184,26 @@ def main(argv=None) -> int:
                          "from raw argv before jax import; also "
                          "settable via $REPRO_HOST_DEVICES)")
     ap.add_argument("--rounds", type=positive_int, default=5)
-    ap.add_argument("--uplink", default="f32", choices=["f32", "int8"],
+    ap.add_argument("--uplink", default="f32",
+                    choices=["f32", "int8", "sign"],
                     help="MAC payload format under test. f32 is the "
-                         "f32-rounding parity contract (tol ~1e-5). int8 "
-                         "compares the quantized engines against the jnp "
-                         "int8 oracle: the (1,)-mesh and the resident "
+                         "f32-rounding parity contract (tol ~1e-5). "
+                         "int8/sign compare the quantized engines against "
+                         "the jnp oracle: the (1,)-mesh and the resident "
                          "pallas engine consume identical draws (near-"
                          "exact), while P > 1 meshes quantize per "
                          "transmitter and agree only to accumulated "
                          "quantization-error order — pass a loose --tol "
                          "(e.g. 0.25) for those")
+    ap.add_argument("--downlink", default="f32", choices=["f32", "int8"],
+                    help="model-broadcast format under test; int8 makes "
+                         "the slab-resident jnp loop the oracle (the "
+                         "pytree API has no slab broadcast to quantize)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry per-transmitter error feedback (needs a "
+                         "quantized --uplink); the slab-resident jnp loop "
+                         "becomes the oracle and the resident EF slab "
+                         "rides the scan carry on every engine")
     ap.add_argument("--track-alpha", action="store_true",
                     help="run every trajectory with the closed alpha "
                          "loop (AdaptiveConfig.alpha='auto'): fused "
@@ -197,8 +215,12 @@ def main(argv=None) -> int:
                     help="max relative end-of-trajectory deviation "
                          "(default 1e-5 for --uplink f32, 0.25 for int8)")
     args = ap.parse_args(argv)
+    if args.error_feedback and args.uplink == "f32":
+        ap.error("--error-feedback needs a quantized uplink "
+                 "(--uplink int8 or sign)")
     if args.tol is None:
-        args.tol = 1e-5 if args.uplink == "f32" else 0.25
+        args.tol = (1e-5 if args.uplink == "f32"
+                    and args.downlink == "f32" else 0.25)
 
     params = {
         "emb": jax.random.normal(jax.random.key(0), (7, 33)),
@@ -209,17 +231,23 @@ def main(argv=None) -> int:
         lambda p: jax.random.normal(jax.random.key(3),
                                     (args.clients,) + p.shape), params)
     ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
-                          uplink=UplinkConfig(mode=args.uplink))
+                          uplink=UplinkConfig(
+                              mode=args.uplink,
+                              error_feedback=args.error_feedback),
+                          downlink=args.downlink)
     fl = FLConfig(n_clients=args.clients, client_chunk=args.client_chunk,
                   sample_rate=args.sample_rate)
 
-    print(f"uplink={args.uplink} track_alpha={args.track_alpha} "
+    print(f"uplink={args.uplink} downlink={args.downlink} "
+          f"ef={args.error_feedback} track_alpha={args.track_alpha} "
           f"chunk={args.client_chunk} sample_rate={args.sample_rate:g} "
           f"rounds={args.rounds} tol={args.tol:g}")
-    # Streamed / sampled rounds only exist on the slab-resident engines:
-    # the oracle becomes the slab-resident jnp loop and the pytree-per-
-    # round rows are skipped, exactly like --track-alpha.
-    slab_ref = args.track_alpha or fl.dynamic_round
+    # Streamed / sampled rounds — and the EF / quantized-downlink wire
+    # formats — only exist on the slab-resident engines: the oracle
+    # becomes the slab-resident jnp loop and the pytree-per-round rows
+    # are skipped, exactly like --track-alpha.
+    slab_ref = (args.track_alpha or fl.dynamic_round
+                or args.error_feedback or args.downlink != "f32")
     failures = 0
     for opt in args.optimizers:
         ad = AdaptiveConfig(optimizer=opt, lr=0.05,

@@ -16,8 +16,13 @@ from the latest one (all round randomness is keyed by absolute round
 index, so the resumed trajectory equals the uninterrupted one).
 ``--uplink int8`` switches the MAC payload to the quantized uplink
 (int8 codewords + per-128-block f32 scales, ~4x fewer collective bytes
-per round on the sharded mesh); the default f32 uplink is bitwise-
-identical to the pre-pipeline code.
+per round on the sharded mesh); ``--uplink sign`` to the 1-bit signSGD
+uplink (~32x, deterministic); the default f32 uplink is bitwise-
+identical to the pre-pipeline code. ``--error-feedback`` carries each
+transmitter's quantization residual across rounds (resident in the
+slab state, checkpointed) so the quantized uplinks recover the f32
+convergence trajectory; ``--downlink int8`` quantizes the per-round
+model broadcast the clients see (the server keeps f32 master weights).
 
 ``--client-chunk`` streams the client axis in O(chunk * d) memory
 (PR 6): each chunk's gradients are computed and folded into the
@@ -115,12 +120,27 @@ def main() -> None:
                     help="client-mesh shape for --backend pallas_sharded, "
                          "comma-separated (e.g. '2' or '4,2', default 2); "
                          "the client count must be divisible by its product")
-    ap.add_argument("--uplink", default="f32", choices=["f32", "int8"],
+    ap.add_argument("--uplink", default="f32",
+                    choices=["f32", "int8", "sign"],
                     help="MAC payload format: f32 is the analog uplink "
                          "(today's behaviour, bitwise); int8 quantizes each "
                          "transmitter's faded partial sum to int8 + "
                          "per-128-block f32 scales (stochastic rounding) — "
-                         "~4x fewer collective bytes on the sharded MAC")
+                         "~4x fewer collective bytes on the sharded MAC; "
+                         "sign is the 1-bit signSGD payload with blockwise "
+                         "mean-magnitude scales (deterministic, ~32x)")
+    ap.add_argument("--downlink", default="f32", choices=["f32", "int8"],
+                    help="model-broadcast format: f32 (default, bitwise) "
+                         "or int8 (per-128-block scales + stochastic "
+                         "rounding, ~4x fewer broadcast bytes; clients see "
+                         "the reconstruction, the server keeps f32 master "
+                         "weights)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="carry each transmitter's quantization residual "
+                         "across rounds and add it back before the next "
+                         "quantize (needs --uplink int8 or sign); resident "
+                         "in the slab state and checkpointed, so --resume "
+                         "continues the residual bitwise")
     ap.add_argument("--no-interpret", action="store_true",
                     help="force-compile the Pallas kernels instead of the "
                          "platform default (auto: compiled on TPU, "
@@ -233,9 +253,15 @@ def main() -> None:
     # None = auto-select from the platform (compiled on TPU only);
     # --no-interpret pins compiled mode explicitly.
     interpret = False if args.no_interpret else None
+    if args.error_feedback and args.uplink == "f32":
+        ap.error("--error-feedback needs a quantized uplink "
+                 "(--uplink int8 or sign); the f32 payload has no residual")
     ch = OTAChannelConfig(alpha=args.alpha, xi_scale=args.xi_scale,
                           backend=args.backend, interpret=interpret,
-                          uplink=UplinkConfig(mode=args.uplink))
+                          uplink=UplinkConfig(
+                              mode=args.uplink,
+                              error_feedback=args.error_feedback),
+                          downlink=args.downlink)
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
                         alpha=alpha_opt, beta2=0.3, backend=args.backend,
                         interpret=interpret)
@@ -255,7 +281,8 @@ def main() -> None:
                                        ad, fl, mesh=mesh)
     params = model.init(jax.random.key(args.seed))
     spec = make_slab_spec(params, shards=n_shards)
-    state = init_train_state(ad, params, spec=spec)
+    state = init_train_state(ad, params, spec=spec,
+                             error_feedback=args.error_feedback)
     del params   # resident from here on; pytrees only at boundaries
 
     start_round = 0
@@ -267,6 +294,20 @@ def main() -> None:
             state, _ = ckpt.load_slab_state(latest, spec)
             start_round = int(state.step)
             print(f"resumed from {latest} at round {start_round}")
+            # Reconcile the EF slab with this run's flags: a pre-EF (or
+            # EF-off) checkpoint resumed WITH --error-feedback starts
+            # the residual loop fresh (zeros); an EF checkpoint resumed
+            # WITHOUT the flag drops the carried residual.
+            if args.error_feedback and state.ef is None:
+                print("checkpoint carries no error-feedback residual; "
+                      "starting the EF loop from zeros")
+                state = dataclasses.replace(
+                    state, ef=jnp.zeros((spec.shards, spec.padded),
+                                        jnp.float32))
+            elif not args.error_feedback and state.ef is not None:
+                print("checkpoint carries an error-feedback residual but "
+                      "--error-feedback is off; dropping it")
+                state = dataclasses.replace(state, ef=None)
 
     t0 = time.time()
     base_key = jax.random.key(args.seed + 1)

@@ -135,11 +135,34 @@ def test_chunk_lt_n_close(backend, chunk):
     np.testing.assert_allclose(float(m_r.loss), float(m_s.loss), rtol=1e-5)
 
 
-def test_chunk_must_divide_n():
-    ch, ad, fl = _configs(client_chunk=3)
-    params = _params()
-    with pytest.raises(ValueError, match="divide"):
-        _trajectory(ch, ad, fl, "jnp", rounds=1, jit=False, params=params)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ragged_chunk_matches_resident(backend):
+    """A chunk that does NOT divide N is legal (PR 7): the final ragged
+    chunk is padded with zero-gain rows, so the trajectory matches the
+    resident round like any other chunking (f32 reassociation only) and
+    the padded rows fold in exactly 0.0."""
+    ch, ad, fl_res = _configs()
+    _, _, fl_rag = _configs(client_chunk=3)        # ceil(8/3) = 3 chunks
+    st_r, m_r = _trajectory(ch, ad, fl_res, backend)
+    st_s, m_s = _trajectory(ch, ad, fl_rag, backend)
+    for a, b in zip(_state_arrays(st_r), _state_arrays(st_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    assert float(m_s.n_participants) == float(m_r.n_participants)
+    np.testing.assert_allclose(float(m_r.loss), float(m_s.loss), rtol=1e-5)
+
+
+def test_ragged_chunk_matches_divisible_chunk():
+    """chunk=3 and chunk=2 over N=8 accumulate the same partial: the
+    zero-gain padding rows of the ragged tail contribute nothing."""
+    ch, ad, _ = _configs()
+    _, _, fl2 = _configs(client_chunk=2)
+    _, _, fl3 = _configs(client_chunk=3)
+    st_a, _ = _trajectory(ch, ad, fl2, "pallas")
+    st_b, _ = _trajectory(ch, ad, fl3, "pallas")
+    for a, b in zip(_state_arrays(st_a), _state_arrays(st_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_pytree_api_refuses_dynamic_rounds():
@@ -223,13 +246,18 @@ def test_sampling_identical_on_sharded_mesh():
 def test_zero_participation_skips_update():
     """A dead round must not divide by zero or move the server: state
     carries over bitwise, the round counter advances, and the metric
-    records n_participants == 0."""
-    ch, ad, fl = _configs(sample_rate=0.0)
+    records n_participants == 0. (``sample_rate=0.0`` is rejected at
+    config time since PR 7, so the dead round is produced the way it
+    happens in the field: a tiny rate and an unlucky round key.)"""
+    ch, ad, fl = _configs(sample_rate=0.05)
+    from repro.core import round_participation
+    mask, _ = round_participation(jax.random.key(2), fl)
+    assert float(jnp.sum(mask)) == 0.0     # pinned dead-round key
     params = _params()
     batches = _batches(params)
     step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="pallas")
     st0 = init_train_state(ad, params)
-    st1, m = step(st0, jax.random.key(11), batches)
+    st1, m = step(st0, jax.random.key(2), batches)
     assert int(st1.step) == int(st0.step) + 1
     np.testing.assert_array_equal(np.asarray(st0.w), np.asarray(st1.w))
     for a, b in zip(st0.opt, st1.opt):
@@ -289,11 +317,43 @@ def test_weighted_aggregate_matches_closed_form():
     assert float(parts.n_participants) == float(jnp.sum(mask))
 
 
+def test_datasize_weights_streamed_matches_jnp_oracle():
+    """Regression for the ``--client-weights datasize`` launch path
+    (PR 7): weights proportional to per-client dataset sizes, combined
+    with partial participation AND a multi-chunk streamed round, must
+    track the jnp oracle — the weight schedule is sliced per chunk from
+    the SAME full (N,) gain vector on every backend."""
+    sizes = (4.0, 2.0, 7.0, 1.0, 3.0, 5.0, 2.0, 8.0)   # len(parts_i)
+    ch, ad, fl = _configs(sample_rate=0.5, client_chunk=3,
+                          client_weights=sizes)
+    st_j, m_j = _trajectory(ch, ad, fl, "jnp")
+    st_p, m_p = _trajectory(ch, ad, fl, "pallas")
+    assert float(m_j.n_participants) == float(m_p.n_participants)
+    # RoundMetrics accounting agrees too: the loss is the mean over
+    # PARTICIPATING clients and the norms are of the weighted aggregate.
+    np.testing.assert_allclose(float(m_j.loss), float(m_p.loss), rtol=1e-5)
+    np.testing.assert_allclose(float(m_j.grad_norm), float(m_p.grad_norm),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(m_j.noisy_grad_norm),
+                               float(m_p.noisy_grad_norm), rtol=1e-5)
+    for a, b in zip(_state_arrays(st_j), _state_arrays(st_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    # And the weighting changed the aggregate: uniform weights over the
+    # same draws land on a different trajectory.
+    _, _, fl_u = _configs(sample_rate=0.5, client_chunk=3)
+    st_u, _ = _trajectory(ch, ad, fl_u, "pallas")
+    assert not np.allclose(np.asarray(st_p.w), np.asarray(st_u.w),
+                           rtol=1e-6, atol=1e-7)
+
+
 def test_flconfig_validates_streaming_fields():
     with pytest.raises(ValueError):
         FLConfig(n_clients=4, sample_rate=1.5)
     with pytest.raises(ValueError):
         FLConfig(n_clients=4, sample_rate=-0.1)
+    with pytest.raises(ValueError, match="dead"):
+        FLConfig(n_clients=4, sample_rate=0.0)   # every round dead (PR 7)
     with pytest.raises(ValueError):
         FLConfig(n_clients=4, client_chunk=0)
     with pytest.raises(ValueError):

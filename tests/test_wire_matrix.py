@@ -1,0 +1,375 @@
+"""Wire-format matrix (PR 7): {f32, int8, sign} uplink x {EF on/off}
+x {f32, int8} downlink, across backends.
+
+The acceptance contracts:
+
+* every VALID cell of the matrix runs on jnp and pallas and the two
+  engines agree at the cross-engine tier (1e-5) — the jnp cell is the
+  op-mirrored oracle of the fused kernel cell;
+* ``uplink="sign"`` is a deterministic 1-bit payload: sign bits +
+  per-128-block mean-magnitude scales, op-mirrored in the ref oracle
+  BITWISE, and it consumes NO stochastic-rounding draw (flipping
+  ``stochastic_rounding`` cannot perturb a sign trajectory);
+* error feedback carries the quantization residual
+  ``e' = (a + e) - dequant(quant(a + e))`` in resident per-transmitter
+  slab rows: it survives a checkpoint round-trip bitwise and recovers
+  adam_ota convergence under the sign uplink (round count to the f32
+  loss within 10%);
+* the int8 downlink quantizes the model BROADCAST (what clients see)
+  per-128-block with stochastic rounding keyed ``DL_FOLD`` off the
+  round key; the server keeps the f32 master, and the helper is
+  slice-local (quantize-then-slice == slice-then-quantize on lane
+  boundaries — the sharded engine's correctness basis);
+* the all-zero padded tail of a slab survives every wire format
+  exactly: zero blocks keep scale 1 and payload 0 on the uplink, the
+  downlink, and in the EF residual.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_slab_state, save_slab_state
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, downlink_quantize_slab,
+                        downlink_sr_slab_inputs, init_train_state,
+                        make_round_step, make_slab_round_step)
+from repro.core.channel import DL_FOLD
+
+N = 8
+SHAPES = [(3, 45), (130,), (1,)]
+
+
+def _params():
+    ks = jax.random.split(jax.random.key(0), len(SHAPES))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, SHAPES))}
+
+
+def _batches(params, n=N):
+    return jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3), (n,) + p.shape),
+        params)
+
+
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def _configs(uplink="f32", ef=False, downlink="f32", xi=0.1, **fl_kw):
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=xi, downlink=downlink,
+                          uplink=UplinkConfig(mode=uplink,
+                                              error_feedback=ef))
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    return ch, ad, FLConfig(n_clients=fl_kw.pop("n_clients", N), **fl_kw)
+
+
+def _trajectory(ch, ad, fl, backend, rounds=2, params=None, batches=None):
+    params = params or _params()
+    batches = batches if batches is not None else _batches(params)
+    step = make_slab_round_step(_loss_fn, ch, ad, fl, backend=backend)
+    st = init_train_state(ad, params,
+                          error_feedback=ch.uplink.error_feedback)
+    ms = None
+    for t in range(rounds):
+        st, ms = step(st, jax.random.fold_in(jax.random.key(7), t), batches)
+    return st, ms
+
+
+def _state_arrays(st):
+    out = [st.w, *st.opt, st.alpha_hat]
+    if st.ef is not None:
+        out.append(st.ef)
+    return out
+
+
+# Every valid cell: EF needs a residual, so f32+EF does not exist.
+CELLS = [(u, e, dl)
+         for u in ("f32", "int8", "sign")
+         for e in (False, True)
+         for dl in ("f32", "int8")
+         if not (u == "f32" and e)]
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: the full matrix, jnp oracle vs fused pallas kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("uplink,ef,downlink", CELLS)
+def test_matrix_cell_jnp_pallas_parity(uplink, ef, downlink):
+    """Each matrix cell runs on both engines and lands on the same
+    trajectory at the cross-engine tier; the EF slab (when on) is part
+    of the compared state."""
+    ch, ad, fl = _configs(uplink, ef, downlink)
+    st_j, m_j = _trajectory(ch, ad, fl, "jnp")
+    st_p, m_p = _trajectory(ch, ad, fl, "pallas")
+    assert (st_j.ef is not None) == ef
+    assert (st_p.ef is not None) == ef
+    for a, b in zip(_state_arrays(st_j), _state_arrays(st_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(m_j.loss), float(m_p.loss), rtol=1e-5)
+    if ef:
+        # A quantized round leaves a real residual behind.
+        assert float(jnp.max(jnp.abs(st_p.ef))) > 0.0
+
+
+@pytest.mark.parametrize("uplink,ef,downlink",
+                         [("int8", True, "f32"), ("sign", True, "int8")])
+def test_matrix_cell_streamed_parity(uplink, ef, downlink):
+    """The same cells through the STREAMED round body (chunked
+    accumulating transmit + partial participation): the EF rows ride
+    the scan carry on both engines."""
+    ch, ad, fl = _configs(uplink, ef, downlink, client_chunk=3,
+                          sample_rate=0.75)
+    st_j, m_j = _trajectory(ch, ad, fl, "jnp", rounds=3)
+    st_p, m_p = _trajectory(ch, ad, fl, "pallas", rounds=3)
+    assert float(m_j.n_participants) == float(m_p.n_participants)
+    for a, b in zip(_state_arrays(st_j), _state_arrays(st_p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_matrix_cell_sharded_mesh1_matches_pallas():
+    """The (1,)-mesh sharded engine runs the far-corner cell
+    (sign + EF + int8 downlink) as the same program as the
+    single-device pallas engine: near-exact trajectory, EF slab
+    included — quantize/EF/broadcast all happen on identical slices.
+    (P > 1 meshes quantize per-transmitter partials and sit in the
+    loose tier; shard_check covers them on forced host devices.)"""
+    from repro.core import make_slab_round_runner
+    from repro.launch.mesh import make_client_mesh
+    ch, ad, fl = _configs("sign", True, "int8")
+    params = _params()
+    batches = _batches(params)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(7), t)
+                      for t in range(2)])
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * 2), batches)
+    run_p = make_slab_round_runner(_loss_fn, ch, ad, fl, backend="pallas")
+    run_s = make_slab_round_runner(_loss_fn, ch, ad, fl,
+                                   backend="pallas_sharded",
+                                   mesh=make_client_mesh((1,)))
+    st_p, ms_p = run_p(init_train_state(ad, params, error_feedback=True),
+                       keys, stacked)
+    st_s, ms_s = run_s(init_train_state(ad, params, shards=1,
+                                        error_feedback=True),
+                       keys, stacked)
+    assert st_p.ef is not None and st_s.ef is not None
+    for a, b in zip(_state_arrays(st_p), _state_arrays(st_s)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ms_p.loss), np.asarray(ms_s.loss),
+                               rtol=1e-5)
+
+
+def test_f32_cell_ignores_new_fields():
+    """The PR 1-6 baseline cell is untouched: a config spelled with the
+    PR 7 defaults is the IDENTICAL object graph, the state carries no
+    EF slab, and the trajectory is bitwise the pre-matrix one."""
+    ch_new, ad, fl = _configs("f32", False, "f32")
+    ch_old = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                              uplink=UplinkConfig(mode="f32"))
+    st_a, _ = _trajectory(ch_new, ad, fl, "pallas")
+    st_b, _ = _trajectory(ch_old, ad, fl, "pallas")
+    assert st_a.ef is None and st_b.ef is None
+    for a, b in zip(_state_arrays(st_a), _state_arrays(st_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_invalid_cells_rejected():
+    with pytest.raises(ValueError, match="residual"):
+        UplinkConfig(mode="f32", error_feedback=True)
+    with pytest.raises(ValueError):
+        OTAChannelConfig(downlink="int4")
+    with pytest.raises(ValueError):
+        UplinkConfig(mode="fp8")
+    # The pytree-per-round API has no resident EF rows / broadcast hook.
+    ch, ad, fl = _configs("int8", ef=True)
+    with pytest.raises(ValueError):
+        make_round_step(_loss_fn, ch, ad, fl, backend="jnp")
+    ch2, _, _ = _configs("f32", downlink="int8")
+    with pytest.raises(ValueError):
+        make_round_step(_loss_fn, ch2, ad, fl, backend="jnp")
+    # An EF config refuses a state without the slab (e.g. stale init).
+    ch3, ad3, fl3 = _configs("sign", ef=True)
+    step = make_slab_round_step(_loss_fn, ch3, ad3, fl3, backend="jnp")
+    st = init_train_state(ad3, _params())            # no error_feedback
+    with pytest.raises(ValueError):
+        step(st, jax.random.key(0), _batches(_params()))
+
+
+# ---------------------------------------------------------------------------
+# Sign payload: kernel == ref bitwise, no SR draw
+# ---------------------------------------------------------------------------
+
+def test_sign_transmit_matches_ref():
+    """Kernel vs op-mirrored oracle under the documented quantized
+    contract: scales at f32 rounding, payloads exactly equal except
+    where the partial sits within f32 rounding of zero (a sign can
+    only flip there), residual reconstructing the EF-adjusted partial."""
+    from repro.kernels.ota_channel import ota_transmit_slab
+    from repro.kernels.ref import ota_transmit_ref
+    d, n = 512, 6
+    g = jax.random.normal(jax.random.key(0), (n, d))
+    h = jax.random.uniform(jax.random.key(1), (n,), minval=0.5, maxval=1.5)
+    e = 0.01 * jax.random.normal(jax.random.key(2), (d,))
+    for ef in (None, e):
+        q_k, s_k, r_k = ota_transmit_slab(
+            g, h, n_total=n, quantize=True, qmode="sign", ef=ef,
+            return_residual=True, interpret=True)
+        q_r, s_r, r_r = ota_transmit_ref(
+            g, h, n_total=n, quantize=True, qmode="sign", ef=ef,
+            return_residual=True)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   rtol=1e-6)
+        same = np.asarray(q_k) == np.asarray(q_r)
+        assert same.mean() > 0.99, f"{(~same).sum()} sign flips"
+        np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r),
+                                   rtol=1e-4, atol=1e-6)
+    assert q_k.dtype == jnp.int8
+    assert set(np.unique(np.asarray(q_k))) <= {-1, 0, 1}
+    # Per-block scale is the mean |block| of the (EF-adjusted) partial.
+    agg = np.asarray(jnp.sum(h[:, None] * g, axis=0) / n + e)
+    np.testing.assert_allclose(np.asarray(s_k),
+                               np.abs(agg.reshape(-1, 128)).mean(1),
+                               rtol=1e-5)
+    # EF residual identity: dequant + residual reconstructs a + e.
+    np.testing.assert_allclose(
+        np.asarray(q_k).astype(np.float32)
+        * np.repeat(np.asarray(s_k), 128) + np.asarray(r_k),
+        agg, rtol=1e-5, atol=1e-6)
+
+
+def test_sign_consumes_no_sr_draw():
+    """Sign is deterministic: toggling stochastic_rounding — which
+    redraws SR uniforms for int8 — cannot move a sign trajectory."""
+    ch_a, ad, fl = _configs("sign", ef=True)
+    ch_b = OTAChannelConfig(
+        alpha=1.5, xi_scale=0.1,
+        uplink=UplinkConfig(mode="sign", error_feedback=True,
+                            stochastic_rounding=False))
+    st_a, _ = _trajectory(ch_a, ad, fl, "pallas")
+    st_b, _ = _trajectory(ch_b, ad, fl, "pallas")
+    for a, b in zip(_state_arrays(st_a), _state_arrays(st_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Zero-tail wire survival
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qmode", ["int8", "sign"])
+def test_zero_tail_survives_uplink(qmode):
+    """The padded tail of a slab is all-zero blocks: scale 1, payload
+    0, residual 0 — the tail comes back EXACTLY zero, so padding can
+    never leak into real coordinates."""
+    from repro.kernels.ref import ota_transmit_ref
+    d, live = 640, 300
+    g = jnp.where(jnp.arange(d) < live,
+                  jax.random.normal(jax.random.key(0), (d,)), 0.0)[None, :]
+    h = jnp.ones((1,))
+    r = jax.random.uniform(jax.random.key(1), (d,))
+    q, s, resid = ota_transmit_ref(g, h, n_total=1, quantize=True,
+                                   qmode=qmode, r=r, ef=None,
+                                   return_residual=True)
+    tail_blocks = np.asarray(s)[(live + 127) // 128:]
+    np.testing.assert_array_equal(tail_blocks, np.ones_like(tail_blocks))
+    np.testing.assert_array_equal(np.asarray(q)[384:], np.zeros(d - 384))
+    np.testing.assert_array_equal(np.asarray(resid)[384:],
+                                  np.zeros(d - 384))
+
+
+def test_zero_tail_survives_downlink():
+    d, live = 640, 300
+    w = jnp.where(jnp.arange(d) < live,
+                  jax.random.normal(jax.random.key(0), (d,)), 0.0)
+    r = downlink_sr_slab_inputs(jax.random.key(5), d)
+    dq = downlink_quantize_slab(w, r)
+    np.testing.assert_array_equal(np.asarray(dq)[384:], np.zeros(d - 384))
+    # Per-block reconstruction error is bounded by one step (the scale).
+    s = np.abs(np.asarray(w).reshape(-1, 128)).max(1) / 127.0
+    err = np.abs(np.asarray(dq - w)).reshape(-1, 128).max(1)
+    assert np.all(err <= np.maximum(s, 1e-7) + 1e-7)
+
+
+def test_downlink_sr_keyed_dl_fold_and_slice_local():
+    key = jax.random.key(9)
+    r = downlink_sr_slab_inputs(key, 256)
+    np.testing.assert_array_equal(
+        np.asarray(r),
+        np.asarray(jax.random.uniform(jax.random.fold_in(key, DL_FOLD),
+                                      (256,))))
+    # Lane-aligned slice-locality: quantize-then-slice == slice-then-
+    # quantize — what lets each shard quantize its own slice before the
+    # all_gather.
+    w = jax.random.normal(jax.random.key(2), (512,))
+    full = downlink_quantize_slab(w, downlink_sr_slab_inputs(key, 512))
+    lo = downlink_quantize_slab(w[:256],
+                                downlink_sr_slab_inputs(key, 512)[:256])
+    hi = downlink_quantize_slab(w[256:],
+                                downlink_sr_slab_inputs(key, 512)[256:])
+    np.testing.assert_array_equal(np.asarray(full),
+                                  np.concatenate([np.asarray(lo),
+                                                  np.asarray(hi)]))
+
+
+# ---------------------------------------------------------------------------
+# Error feedback: checkpoint round-trip + convergence recovery
+# ---------------------------------------------------------------------------
+
+def test_ef_checkpoint_resume_bitwise(tmp_path):
+    """Save mid-trajectory with a live EF slab, resume, and land on the
+    uninterrupted trajectory BITWISE — the residual is state, losing it
+    at a restart would re-introduce the quantization bias EF exists to
+    cancel."""
+    ch, ad, fl = _configs("sign", ef=True, downlink="int8")
+    params = _params()
+    batches = _batches(params)
+    step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="pallas")
+    st = init_train_state(ad, params, error_feedback=True)
+    keys = [jax.random.fold_in(jax.random.key(7), t) for t in range(4)]
+    for k in keys[:2]:
+        st, _ = step(st, k, batches)
+    path = os.path.join(tmp_path, "round_2.npz")
+    save_slab_state(path, st)
+    resumed, _ = load_slab_state(path, st.spec)
+    assert resumed.ef is not None
+    np.testing.assert_array_equal(np.asarray(resumed.ef), np.asarray(st.ef))
+    for k in keys[2:]:
+        st, _ = step(st, k, batches)
+        resumed, _ = step(resumed, k, batches)
+    for a, b in zip(_state_arrays(st), _state_arrays(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sign_ef_recovers_adam_convergence():
+    """The acceptance bar: under the 1-bit uplink, adam_ota with EF
+    reaches the f32 loss level within 10% of the f32 round count; the
+    EF-off sign run never gets there in the horizon (the residual the
+    1-bit payload discards each round is exactly what EF carries)."""
+    params = _params()
+    batches = _batches(params)
+    horizon, target = 30, 3.5
+
+    def rounds_to_target(uplink, ef):
+        ch, ad, fl = _configs(uplink, ef, xi=0.02)
+        step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="jnp")
+        st = init_train_state(ad, params, error_feedback=ef)
+        for t in range(horizon):
+            st, m = step(st, jax.random.fold_in(jax.random.key(7), t),
+                         batches)
+            if float(m.loss) < target:
+                return t + 1
+        return None
+
+    r_f32 = rounds_to_target("f32", False)
+    r_ef = rounds_to_target("sign", True)
+    r_bare = rounds_to_target("sign", False)
+    assert r_f32 is not None
+    assert r_ef is not None and r_ef <= int(np.ceil(1.1 * r_f32)), \
+        (r_f32, r_ef)
+    assert r_bare is None, r_bare   # sign alone stalls above the target

@@ -13,6 +13,7 @@ on TPU:
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
 
@@ -21,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
                         init_server, make_round_step)
+from repro.kernels.interpret import INTERPRET_ENV, resolve_interpret
 from repro.kernels.ref import (adaptive_update_ref, flash_attention_ref,
                                ota_channel_ref)
 
@@ -121,6 +123,8 @@ def bench_round_step(n_params: int, n_clients: int = 8,
         records.append(dict(
             name=f"round_step_{backend}_{n_params}",
             backend=backend, n_params=n_params, n_clients=n_clients,
+            interpret={"resolved": resolve_interpret(None),
+                       "env": os.environ.get(INTERPRET_ENV)},
             us_per_round=us, us_per_call=us,
             hbm_bytes_est=bytes_mac + upd_transfers * 4 * n_params,
             derived=f"hbm_bytes_est={bytes_mac + upd_transfers * 4 * n_params}",

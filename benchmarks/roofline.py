@@ -1,4 +1,4 @@
-"""Roofline analysis from the dry-run artifacts.
+"""Roofline analysis from the dry-run AND slab-engine bench artifacts.
 
 Reads results/dryrun/*.json (written by repro.launch.dryrun), derives the
 three roofline terms per (arch x shape) on the single-pod mesh, and emits
@@ -11,17 +11,34 @@ the §Roofline markdown table.
 FLOPs/bytes/collective-bytes come from the depth-CALIBRATED measurements
 (XLA counts scan bodies once; dryrun extrapolates from unrolled depth-2/4
 compiles — see launch/dryrun.py:calibrate).
+
+**Slab-engine grading** (PR 8, ``--bench`` / ``grade_bench``): the
+tracked BENCH_round_step.json / BENCH_train_loop.json artifacts carry
+per-round HBM- and comms-byte models next to measured wall time. This
+module turns each record's byte model into its v5e roofline floor
+(``hbm_bytes / HBM_BW``, ``comms_bytes / ICI_BW``), names the binding
+term, and — ONLY when the record was produced by compiled kernels —
+grades the measured ``us_per_round`` against that floor (attainment =
+floor / measured). Interpret-mode wall clock is a Python-loop artifact,
+so records whose ``interpret`` provenance (the PR 8 stamp; absent means
+the pre-PR 8 CPU container, treated as interpret) resolves true keep
+their byte model and floor but get no attainment grade — the gate that
+stops a CPU CI run from "failing the roofline".
 """
 
 from __future__ import annotations
 
 import glob
 import json
+import os
 from typing import Dict, List, Optional
 
 PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
 ICI_BW = 4.9e10           # bytes/s per link (~50 GB/s)
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_FILES = ("BENCH_round_step.json", "BENCH_train_loop.json")
 
 
 def load_records(path_glob: str = "results/dryrun/*.json") -> List[Dict]:
@@ -120,7 +137,118 @@ def pick_hillclimb_targets(recs: List[Dict]) -> Dict[str, Dict]:
             "paper_representative": rep}
 
 
+def load_bench_payloads(root: str = REPO_ROOT) -> Dict[str, Dict]:
+    """The tracked slab-engine artifacts, ``{filename: {"meta", "records"}}``
+    (missing files are skipped — a fresh clone before the first full
+    bench run has none)."""
+    out = {}
+    for fn in BENCH_FILES:
+        p = os.path.join(root, fn)
+        if os.path.exists(p):
+            with open(p) as f:
+                out[fn] = json.load(f)
+    return out
+
+
+def _record_interpret(rec: Dict, meta: Optional[Dict]) -> bool:
+    """Resolved interpret provenance of a bench record. Preference
+    order: the record's own PR 8 ``interpret`` stamp, then the meta
+    config's; records predating the stamp came from the interpret-mode
+    CPU container, so absent means True — never grade unlabelled wall
+    clock against a TPU roofline."""
+    stamp = rec.get("interpret")
+    if isinstance(stamp, dict) and "resolved" in stamp:
+        return bool(stamp["resolved"])
+    if meta:
+        cfg = meta.get("config", {})
+        if "interpret" in cfg:
+            return bool(cfg["interpret"])
+    return True
+
+
+def grade_record(rec: Dict, meta: Optional[Dict] = None) -> Optional[Dict]:
+    """One slab-engine bench record -> its roofline grade, or None for
+    records with no byte model (e.g. the streamed clients/sec rows).
+
+    Always derived from the byte models: the HBM and comms floors and
+    which one binds. Derived from wall time ONLY in compiled mode:
+    ``attainment`` (floor / measured — 1.0 means the engine runs at the
+    roofline) and ``headroom_x`` (its inverse). Interpret-mode records
+    report ``measured_valid: False`` with both grades None.
+    """
+    hbm = rec.get("hbm_bytes_est")
+    if hbm is None:
+        return None
+    comms = rec.get("comms_bytes_per_round", 0) or 0
+    hbm_s = hbm / HBM_BW
+    comms_s = comms / ICI_BW
+    floor_s = max(hbm_s, comms_s)
+    bound = "hbm" if hbm_s >= comms_s else "comms"
+    interpret = _record_interpret(rec, meta)
+    measured_s = rec.get("us_per_round", 0.0) * 1e-6
+    grade = dict(
+        name=rec["name"], backend=rec.get("backend"),
+        n_params=rec.get("n_params"), uplink=rec.get("uplink"),
+        hbm_floor_s=hbm_s, comms_floor_s=comms_s, floor_s=floor_s,
+        bound=bound, interpret=interpret,
+        measured_valid=not interpret, measured_s=measured_s,
+        attainment=None, headroom_x=None)
+    if not interpret and measured_s > 0 and floor_s > 0:
+        grade["attainment"] = floor_s / measured_s
+        grade["headroom_x"] = measured_s / floor_s
+    return grade
+
+
+def grade_bench(payloads: Optional[Dict[str, Dict]] = None) -> List[Dict]:
+    """Grade every byte-model-carrying record in the tracked BENCH
+    artifacts against the v5e roofline constants."""
+    if payloads is None:
+        payloads = load_bench_payloads()
+    grades = []
+    for fn, payload in sorted(payloads.items()):
+        meta = payload.get("meta")
+        for rec in payload.get("records", []):
+            g = grade_record(rec, meta)
+            if g is not None:
+                g["source"] = fn
+                grades.append(g)
+    return grades
+
+
+def markdown_bench_table(grades: List[Dict]) -> str:
+    rows = ["| record | hbm floor | comms floor | bound | attainment |",
+            "|---|---|---|---|---|"]
+    for g in grades:
+        att = (f"{g['attainment']:.2f}" if g["attainment"] is not None
+               else "n/a (interpret)")
+        rows.append(f"| {g['name']} | {_fmt_s(g['hbm_floor_s'])} "
+                    f"| {_fmt_s(g['comms_floor_s'])} | **{g['bound']}** "
+                    f"| {att} |")
+    return "\n".join(rows)
+
+
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", action="store_true",
+                    help="grade the tracked BENCH_*.json slab-engine "
+                         "records against the v5e roofline instead of "
+                         "the model-zoo dryrun artifacts")
+    ap.add_argument("--bench-root", default=REPO_ROOT,
+                    help="directory holding the BENCH_*.json artifacts")
+    args = ap.parse_args()
+    if args.bench:
+        grades = grade_bench(load_bench_payloads(args.bench_root))
+        if not grades:
+            print("no BENCH_*.json artifacts found; run "
+                  "`python -m benchmarks.run --only round_step` first")
+            return
+        print(markdown_bench_table(grades))
+        n_graded = sum(1 for g in grades if g["attainment"] is not None)
+        print(f"\n{len(grades)} records, {n_graded} wall-clock graded "
+              f"({len(grades) - n_graded} interpret-mode: byte models "
+              f"only)")
+        return
     recs = load_records()
     print(markdown_table(recs, "single"))
     print()

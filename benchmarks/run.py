@@ -46,8 +46,11 @@ def bench_meta(quick: bool, config: dict) -> dict:
     produced it) makes cross-PR comparisons refuse-on-drift — two runs
     are comparable iff their fingerprints match."""
     import jax
+    from repro.kernels.interpret import INTERPRET_ENV, resolve_interpret
     cfg = dict(config, quick=quick, jax=jax.__version__,
                jax_backend=jax.default_backend(),
+               interpret=resolve_interpret(None),
+               interpret_env=os.environ.get(INTERPRET_ENV),
                python=".".join(map(str, sys.version_info[:3])))
     fp = hashlib.sha256(
         json.dumps(cfg, sort_keys=True).encode()).hexdigest()[:16]
@@ -215,6 +218,20 @@ def main() -> None:
                      f"dominant={t['dominant']};useful={t['useful_ratio']:.2f}")
     except Exception as e:  # noqa: BLE001
         _csv("roofline:ERROR", 0.0, repr(e)[:80])
+
+    # Slab-engine roofline grades from the tracked BENCH artifacts just
+    # (re)written above: v5e byte-model floors always; wall-clock
+    # attainment only for compiled-mode records (see benchmarks/
+    # roofline.py — interpret provenance gates the grading).
+    try:
+        from benchmarks import roofline
+        for g in roofline.grade_bench():
+            att = (f"{g['attainment']:.3f}" if g["attainment"] is not None
+                   else "interpret")
+            _csv(f"roofline_slab:{g['name']}", g["floor_s"] * 1e6,
+                 f"bound={g['bound']};attainment={att}")
+    except Exception as e:  # noqa: BLE001
+        _csv("roofline_slab:ERROR", 0.0, repr(e)[:80])
 
     with open(os.path.join(args.out, "paper_figs.json"), "w") as f:
         json.dump(all_records, f, indent=2)

@@ -70,9 +70,12 @@ def bench_sharded_round_step(n_params: int, n_clients: int = 8,
                      + 7 * n_params // n_dev
                      + (1 + 2 + (k_rows + 1)) * n_params)
     shape_tag = "x".join(str(s) for s in mesh_shape)
+    from repro.kernels.interpret import INTERPRET_ENV, resolve_interpret
     return dict(
         name=f"round_step_pallas_sharded_{n_params}",
         backend="pallas_sharded", n_params=n_params, n_clients=n_clients,
+        interpret={"resolved": resolve_interpret(None),
+                   "env": os.environ.get(INTERPRET_ENV)},
         mesh=shape_tag, us_per_round=us, us_per_call=us,
         hbm_bytes_est=bytes_dev,
         derived=f"hbm_bytes_per_device={bytes_dev};mesh={shape_tag}",

@@ -32,7 +32,14 @@ payload format (``--uplink``) scales:
                      block f32 scale rows = 2d + d/16 bytes  (~3.9x
                      fewer than f32)
     uplink sign    : 2 bit-packed sign rows + 2 scale rows
-                     = 2(d/8) + d/16 bytes  (~25x fewer than f32)
+                     = 2(d/8) + d/16 bytes  (~25x fewer than f32).
+                     Since PR 8 the exchange PHYSICALLY ships these
+                     uint32 bitplane words (--sign-pack fold, the
+                     default); the sign_c8 cell keeps the PR 7 int8
+                     container (2d + d/16 bytes) timed next to it, and
+                     every record carries a MEASURED
+                     uplink_wire_bytes_measured column asserted equal
+                     to the model
 
 The model broadcast — the downlink — gets the same treatment in
 ``downlink_bytes_per_round`` (PR 7). It is the server->client payload
@@ -91,18 +98,24 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
                 resident: bool, uplink: str = "f32",
-                downlink: str = "f32") -> dict:
+                downlink: str = "f32", sign_pack: str = "fold") -> dict:
     """Per-device, per-round traffic models (bytes).
 
     ``state_rows`` is the optimizer-slab count (2 for adam: delta, nu);
     the per-round pytree API regathers/repacks those plus the params row.
     ``uplink`` sets the MAC wire format: the f32 reduce-scatter carries
     2 rows of d 4-byte words, the int8 all-to-all carries 2 rows of d
-    1-byte codewords + 2 rows of d/128 4-byte scales, and sign packs
-    the codeword rows down to d/8 bytes of sign bits each.
+    1-byte codewords + 2 rows of d/128 4-byte scales, and sign ships 2
+    packed rows whose width ``sign_pack`` sets — d/8 bytes of sign bits
+    ('fold', the PR 8 uint32 bitplane wire), 2d/8 with the separate
+    nonzero-mask plane ('planes'), or d int8 codewords ('int8', the
+    PR 7 byte-per-coord container the packed wire replaced).
     ``downlink`` sets the model-broadcast format; its payload is
     reported for every mesh (it is the server->client wire even when
-    there is no device collective to time).
+    there is no device collective to time). Since PR 8 the sign models
+    are what the exchange PHYSICALLY ships (``pack_sign_slab`` words);
+    ``_measured_uplink_bytes`` counts the actual wire arrays so the
+    records carry model and measurement side by side.
     """
     d, p = n_params, n_dev
     boundary_rows = state_rows + 1
@@ -111,7 +124,9 @@ def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
     elif uplink == "int8":
         mac = 2 * d + 2 * (d // 128) * 4
     elif uplink == "sign":
-        mac = 2 * (d // 8) + 2 * (d // 128) * 4
+        payload = {"fold": d // 8, "planes": 2 * (d // 8),
+                   "int8": d}[sign_pack]
+        mac = 2 * payload + 2 * (d // 128) * 4
     else:
         mac = 2 * d * 4
     dl = (d + (d // 128) * 4) if downlink == "int8" else 4 * d
@@ -129,6 +144,42 @@ def _loop_bytes(n_params: int, n_clients: int, n_dev: int, state_rows: int,
             "hbm_bytes_est": hbm}
 
 
+def _interpret_meta() -> dict:
+    """Kernel-mode provenance stamped into every record: the resolved
+    interpret bool (what the Pallas launches in this process actually
+    did) plus the raw REPRO_PALLAS_INTERPRET env var. Interpret-mode
+    wall clock is a Python-loop artifact, so a record is only
+    roofline-gradable when this says compiled."""
+    from repro.kernels.interpret import INTERPRET_ENV, resolve_interpret
+    return {"resolved": resolve_interpret(None),
+            "env": os.environ.get(INTERPRET_ENV)}
+
+
+def _measured_uplink_bytes(n_params: int, n_dev: int, uplink: str,
+                           sign_pack: str = "fold") -> int:
+    """MEASURED per-device uplink wire bytes: build the actual arrays
+    one device contributes to the MAC exchange (2 payload rows — noisy
+    + clean — and their per-128-block scale rows, through the same
+    ``pack_sign_slab`` epilogue the engine runs) and count ``nbytes``.
+    This is the check that ``uplink_bytes_per_round`` (the model above)
+    claims what the wire carries — the two are asserted equal, so a
+    format change that forgets one side fails the bench, not CI months
+    later."""
+    import jax.numpy as jnp
+    from repro.kernels.ota_channel import pack_sign_slab
+
+    d = n_params
+    if n_dev == 1:
+        return 0
+    scales = jnp.zeros((2, d // 128), jnp.float32)
+    if uplink == "f32":
+        return 2 * jnp.zeros((d,), jnp.float32).nbytes
+    payload = jnp.zeros((2, d), jnp.int8)
+    if uplink == "sign" and sign_pack != "int8":
+        payload = pack_sign_slab(payload, planes=(sign_pack == "planes"))
+    return payload.nbytes + scales.nbytes
+
+
 def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
                      mesh_shape=(2,), iters: int = 2) -> list:
     import jax
@@ -140,16 +191,20 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     from repro.launch.mesh import make_client_mesh
 
     params, loss_fn, batches = _round_step_case(n_params, n_clients)
-    # (uplink, downlink) wire-format cells timed by the resident loop;
-    # the quantized uplinks carry the PR-7 error-feedback slab so the
-    # timing includes the residual read-modify-write.
-    wire_cells = (("f32", "f32"), ("int8", "f32"), ("sign", "f32"),
-                  ("sign", "int8"))
-    channels = {(u, dl): OTAChannelConfig(
+    # (uplink, downlink, sign_pack) wire-format cells timed by the
+    # resident loop; the quantized uplinks carry the PR-7 error-feedback
+    # slab so the timing includes the residual read-modify-write. The
+    # sign cells default to the PR 8 bit-packed 'fold' wire; the
+    # trailing 'int8'-container cell keeps the PR 7 byte-per-coord wire
+    # measurable next to it (the ~8x payload cut the packing buys).
+    wire_cells = (("f32", "f32", "fold"), ("int8", "f32", "fold"),
+                  ("sign", "f32", "fold"), ("sign", "int8", "fold"),
+                  ("sign", "f32", "int8"))
+    channels = {(u, dl, sp): OTAChannelConfig(
                     alpha=1.5, xi_scale=0.1, downlink=dl,
-                    uplink=UplinkConfig(mode=u,
+                    uplink=UplinkConfig(mode=u, sign_pack=sp,
                                         error_feedback=(u != "f32")))
-                for u, dl in wire_cells}
+                for u, dl, sp in wire_cells}
     ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5)
     fl = FLConfig(n_clients=n_clients)
     k_rows = 2   # adam: delta, nu
@@ -162,17 +217,26 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
     records = []
 
     def record(name, backend, variant, us_total, p, uplink,
-               downlink="f32"):
+               downlink="f32", sign_pack="fold"):
         us_round = us_total / rounds
         byt = _loop_bytes(n_params, n_clients, p, k_rows,
-                          variant == "resident", uplink, downlink)
+                          variant == "resident", uplink, downlink,
+                          sign_pack)
+        wire = _measured_uplink_bytes(n_params, p, uplink, sign_pack)
+        if wire != byt["uplink_bytes_per_round"]:
+            raise AssertionError(
+                f"{name}: uplink byte model claims "
+                f"{byt['uplink_bytes_per_round']} B/round but the wire "
+                f"arrays measure {wire} B — model and exchange drifted")
         records.append(dict(
             name=name, backend=backend, variant=variant, uplink=uplink,
-            downlink=downlink,
+            downlink=downlink, sign_pack=sign_pack,
+            interpret=_interpret_meta(),
             n_params=n_params, n_clients=n_clients, rounds=rounds,
             mesh="x".join(str(s) for s in mesh_shape) if p > 1 else "1",
             us_per_round=us_round, us_per_call=us_round,
-            rounds_per_sec=1e6 / us_round, **byt,
+            rounds_per_sec=1e6 / us_round,
+            uplink_wire_bytes_measured=wire, **byt,
             derived=(f"rounds_per_sec={1e6 / us_round:.2f};"
                      f"comms_bytes={byt['comms_bytes_per_round']};"
                      f"uplink_bytes={byt['uplink_bytes_per_round']};"
@@ -192,25 +256,33 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
                               n_dev)):
         # resident: R rounds, one scanned dispatch, state stays slabs;
         # timed per wire-format cell (int8/sign show the MAC-byte cut,
-        # the sign+dl8 cell adds the quantized model broadcast).
-        for uplink, downlink in wire_cells:
-            ch = channels[(uplink, downlink)]
+        # the sign+dl8 cell adds the quantized model broadcast, the
+        # sign_c8 cell times the unpacked PR 7 container). NOTE: the
+        # benches replay every cell from the same st0, so the runners
+        # must NOT donate (donation would invalidate st0 after the
+        # first call) — donate=False is the make_slab_round_runner
+        # default.
+        for uplink, downlink, sign_pack in wire_cells:
+            ch = channels[(uplink, downlink, sign_pack)]
             run = make_slab_round_runner(loss_fn, ch, ad, fl,
                                          backend=backend, mesh=mesh)
             st0 = init_train_state(ad, params, shards=p,
                                    error_feedback=ch.uplink.error_feedback)
             us = timeit(lambda: run(st0, keys, stacked))
             suffix = "" if uplink == "f32" else f"_{uplink}"
+            if uplink == "sign" and sign_pack == "int8":
+                suffix += "_c8"
             if downlink != "f32":
                 suffix += "_dl8"
             record(f"train_loop_{backend}_resident{suffix}_{n_params}",
-                   backend, "resident", us, p, uplink, downlink)
+                   backend, "resident", us, p, uplink, downlink,
+                   sign_pack)
 
         # per-round pytree API: pack/convert at every round boundary
         # (f32 only — the boundary-materialisation cost it isolates is
         # uplink-independent)
-        rs = make_round_step(loss_fn, channels[("f32", "f32")], ad, fl,
-                             backend=backend, mesh=mesh)
+        rs = make_round_step(loss_fn, channels[("f32", "f32", "fold")], ad,
+                             fl, backend=backend, mesh=mesh)
         s0 = init_server(params, ad)
 
         def loop(rs=rs, s0=s0):
@@ -270,7 +342,8 @@ def bench_streamed_loop(n_params: int, n_clients: int, chunk: int = 2000,
     resident = 4 * n_clients * n_params    # what the resident stack needs
     return [dict(
         name=f"train_loop_streamed_{n_clients}", backend=backend,
-        variant="streamed", uplink="f32", n_params=n_params,
+        variant="streamed", uplink="f32", interpret=_interpret_meta(),
+        n_params=n_params,
         n_clients=n_clients, client_chunk=chunk, sample_rate=sample_rate,
         rounds=rounds, mesh="1", us_per_round=us_round, us_per_call=us_round,
         clients_per_sec=cps, rounds_per_sec=1e6 / us_round,

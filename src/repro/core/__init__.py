@@ -8,10 +8,10 @@ from repro.core.channel import (OTAChannelConfig, UplinkConfig, cms_inputs,
                                 cms_transform, sample_alpha_stable,
                                 sample_fading, sample_interference, sr_inputs,
                                 upsilon)
-from repro.core.fl import (FLConfig, RoundMetrics, init_server,
-                           make_round_step, make_sharded_round_step,
-                           make_slab_round_runner, make_slab_round_step,
-                           run_rounds, run_rounds_slab)
+from repro.core.fl import (FLConfig, RoundMetrics, donation_report,
+                           init_server, make_round_step,
+                           make_sharded_round_step, make_slab_round_runner,
+                           make_slab_round_step, run_rounds, run_rounds_slab)
 from repro.core.ota import (add_interference, downlink_quantize_slab,
                             downlink_sr_slab_inputs, faded_loss_weights,
                             interference_log_moment_stats,
@@ -47,6 +47,7 @@ __all__ = [
     "n_client_shards", "shard_round_step", "SlabTrainState",
     "init_train_state", "pack_train_state", "unpack_train_state",
     "make_slab_round_step", "make_slab_round_runner", "run_rounds_slab",
+    "donation_report",
     "PART_FOLD", "StreamParts", "participation_mask", "round_participation",
     "streamed_round_parts",
 ]

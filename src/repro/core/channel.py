@@ -43,11 +43,18 @@ class UplinkConfig:
     * ``mode == "sign"``: 1-bit signSGD payload — each transmitter sends
       ``sign(x)`` plus one f32 magnitude per ``block`` entries (the
       blockwise mean|x|, so the dequantized payload is ±scale). The
-      payload rides the same int8 wire container as ``"int8"`` (values
-      in {-1, 0, +1}; the byte model counts 1 bit/entry), the receiver
-      dequantize stage is unchanged, and the quantizer is deterministic
-      (canonical EF-signSGD) — the SR uniforms are still drawn so no
-      other draw shifts, but the sign epilogue ignores them.
+      receiver dequantize stage is unchanged and the quantizer is
+      deterministic (canonical EF-signSGD) — the SR uniforms are still
+      drawn so no other draw shifts, but the sign epilogue ignores
+      them. ``sign_pack`` selects the WIRE representation (PR 8): the
+      default ``"fold"`` ships a true 1-bit/coord uint32 bitplane (the
+      quantizer folds zeros to +1 and gives all-zero blocks scale 0, so
+      the zero tail still reconstructs exactly); ``"planes"`` ships two
+      bitplanes (sign + nonzero mask, 2 bits/coord) and preserves
+      {-1, 0, +1} payloads bitwise; ``"int8"`` is the PR 7 int8
+      container (1 byte/coord on the wire — the parity oracle of the
+      packed formats, and what the byte model previously over-counted
+      by 8x).
 
     Sign (and aggressive int8) quantization is biased; pair it with
     ``error_feedback=True`` so each transmitter carries its residual
@@ -70,12 +77,27 @@ class UplinkConfig:
       error_feedback: carry each transmitter's quantization residual
         across rounds and add it into the faded partial before the next
         quantize. Requires a quantized mode (f32 has no residual).
+      sign_pack: wire representation of the sign payload ("fold" |
+        "planes" | "int8", sign mode only — see the mode docs above).
+      sr_inkernel: draw the int8 stochastic-rounding bits IN-KERNEL
+        (``pltpu`` PRNG seeded from the same round-key derivation as
+        ``sr_inputs``) on COMPILED pallas launches, instead of
+        streaming the d host-drawn uniforms through HBM. Interpret-mode
+        launches and the jnp backend always use the host-drawn path —
+        it is the cross-backend parity oracle — so a config with this
+        flag set runs everywhere; only compiled TPU rounds take the
+        in-kernel branch (their rounding decisions then differ from the
+        oracle's by at most one quantization step per entry, the
+        documented quantized-uplink agreement contract). int8 +
+        stochastic_rounding only.
     """
 
     mode: str = "f32"
     block: int = 128
     stochastic_rounding: bool = True
     error_feedback: bool = False
+    sign_pack: str = "fold"
+    sr_inkernel: bool = False
 
     def __post_init__(self):
         if self.mode not in ("f32", "int8", "sign"):
@@ -89,10 +111,34 @@ class UplinkConfig:
             raise ValueError(
                 'error_feedback requires a quantized uplink mode '
                 '("int8" or "sign"); the f32 payload has no residual')
+        if self.sign_pack not in ("fold", "planes", "int8"):
+            raise ValueError(f'unknown sign_pack {self.sign_pack!r}; '
+                             'options: "fold", "planes", "int8"')
+        if self.sr_inkernel and not (self.mode == "int8"
+                                     and self.stochastic_rounding):
+            raise ValueError(
+                "sr_inkernel needs the int8 uplink with "
+                "stochastic_rounding=True (the sign quantizer is "
+                "deterministic and f32 has no quantizer)")
 
     @property
     def quantized(self) -> bool:
         return self.mode != "f32"
+
+    @property
+    def packed_sign(self) -> Optional[str]:
+        """The packed wire format of the sign payload ("fold" or
+        "planes"), or None when the wire is the int8 container (any
+        non-sign mode, or ``sign_pack="int8"``)."""
+        if self.mode != "sign" or self.sign_pack == "int8":
+            return None
+        return self.sign_pack
+
+    @property
+    def zero_fold(self) -> bool:
+        """True when the sign quantizer folds zeros (+1 signs, scale-0
+        zero blocks) so the wire needs only the 1-bit sign plane."""
+        return self.mode == "sign" and self.sign_pack == "fold"
 
 
 # Domain separator folded into the round key for the stochastic-rounding
@@ -121,6 +167,27 @@ def sr_inputs(key: jax.Array, shape: Tuple[int, ...],
     per-transmitter, like the fading)."""
     return jax.random.uniform(jax.random.fold_in(key, SR_FOLD), shape,
                               dtype=dtype)
+
+
+def sr_kernel_seed(key: jax.Array, shard_index=0) -> jax.Array:
+    """(2,) int32 seeds for the IN-KERNEL stochastic-rounding PRNG
+    (``UplinkConfig.sr_inkernel``), derived from the same key chain as
+    the host-drawn oracle: shard index folded in first, then
+    ``SR_FOLD`` — exactly the ``uplink_sr_slab_inputs`` keying — so
+    turning the in-kernel path on or off never perturbs any other
+    sub-draw, and each shard's kernel seeds a distinct stream just as
+    each shard slices distinct host draws. Row 0 seeds the noisy faded
+    payload's rounding, row 1 the clean diagnostic payload's — the same
+    row convention as the host draw.
+
+    The in-kernel bits themselves are a DIFFERENT uniform stream from
+    ``sr_inputs`` (pltpu's counter PRNG vs threefry); the agreement
+    contract with the oracle is per-entry one-quantization-step, not
+    bitwise (see kernels/ref.py)."""
+    k = jax.random.fold_in(jax.random.fold_in(key, shard_index), SR_FOLD)
+    return jax.random.randint(k, (2,), minval=jnp.iinfo(jnp.int32).min,
+                              maxval=jnp.iinfo(jnp.int32).max,
+                              dtype=jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)

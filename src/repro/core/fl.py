@@ -579,7 +579,7 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
 def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                            adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
                            jit: bool = True, backend: Optional[str] = None,
-                           mesh=None, batch_gen=None):
+                           mesh=None, batch_gen=None, donate: bool = False):
     """R rounds as ONE ``jax.lax.scan`` over the resident state.
 
     Returns ``run(state, keys, client_batches) -> (state, metrics)``
@@ -593,9 +593,23 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
     ``make_slab_round_step``) there are no materialised batches: call
     ``run(state, keys)`` and the scan carries keys only — nothing in
     the round scales with N beyond O(N) scalars (fading, mask).
+
+    ``donate=True`` donates the incoming ``SlabTrainState`` buffers to
+    the call (``donate_argnums=(0,)``): the compiled executable aliases
+    every state slab (w, opt, alpha_hat, ef) to its output instead of
+    allocating a second copy — the resident update is genuinely
+    in-place, peak state memory is 1x across the scan-chunk boundary.
+    The argument is CONSUMED: reuse of the passed state raises jax's
+    donated-buffer error, so only enable it in linear state-threading
+    drivers (``run_rounds_slab`` threads linearly; benches that replay
+    from one initial state must not donate). Verify with
+    ``donation_report``. Requires ``jit``.
     """
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
+    if donate and not jit:
+        raise ValueError("donate=True needs jit=True: buffer donation "
+                         "is a property of the compiled executable")
     if backend == "pallas_sharded":
         from repro.core.shard import make_shard_slab_runner
         if mesh is None:
@@ -605,7 +619,7 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             raise ValueError('batch_gen= is only supported by the streamed '
                              'single-device backends, not "pallas_sharded"')
         return make_shard_slab_runner(loss_fn, channel_cfg, adaptive_cfg,
-                                      fl_cfg, mesh, jit=jit)
+                                      fl_cfg, mesh, jit=jit, donate=donate)
     step = make_slab_round_step(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
                                 jit=False, backend=backend, mesh=mesh,
                                 batch_gen=batch_gen)
@@ -620,17 +634,62 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
                 return step(s, key)
 
             return jax.lax.scan(scanned, state, keys)
+    else:
+        def run(state: SlabTrainState, keys, client_batches):
+            def scanned(s, xs):
+                key, batch = xs
+                return step(s, key, batch)
 
-        return jax.jit(run) if jit else run
+            return jax.lax.scan(scanned, state, (keys, client_batches))
 
-    def run(state: SlabTrainState, keys, client_batches):
-        def scanned(s, xs):
-            key, batch = xs
-            return step(s, key, batch)
+    if not jit:
+        return run
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
-        return jax.lax.scan(scanned, state, (keys, client_batches))
 
-    return jax.jit(run) if jit else run
+def donation_report(run_jit, *example_args) -> dict:
+    """Lower + compile a jitted round runner on example arguments and
+    report what the executable actually aliases — the check that
+    ``donate=True`` buys the in-place resident update it claims.
+
+    Returns ``{"aliased_bytes", "donated_bytes", "aliased_pairs",
+    "supported"}``: ``donated_bytes`` is the total byte size of the
+    donatable state leaves (argument 0), ``aliased_bytes`` what the
+    compiled memory analysis reports as input-output aliased, and
+    ``aliased_pairs`` the executable's ``input_output_alias`` entries
+    parsed from the HLO. On backends whose memory analysis does not
+    expose aliasing, ``supported`` is False and the byte fields are
+    None (callers/tests should skip, not fail).
+    """
+    lowered = run_jit.lower(*example_args)
+    compiled = lowered.compile()
+    state_leaves = jax.tree.leaves(example_args[0])
+    donated = sum(x.size * x.dtype.itemsize for x in state_leaves
+                  if hasattr(x, "size"))
+    report = {"supported": False, "aliased_bytes": None,
+              "donated_bytes": donated, "aliased_pairs": None}
+    try:
+        mem = compiled.memory_analysis()
+        aliased = getattr(mem, "alias_size_in_bytes", None)
+    except Exception:
+        aliased = None
+    if aliased is not None:
+        report["supported"] = True
+        report["aliased_bytes"] = int(aliased)
+    try:
+        hlo = compiled.as_text()
+        import re
+        m = re.search(r"input_output_alias=\{([^}]*(?:\}[^}]*)*?)\}\s*\n",
+                      hlo)
+        if m is None:
+            m = re.search(r"input_output_alias=\{(.*?)\}\n", hlo, re.S)
+        if m is not None:
+            pairs = re.findall(r"\{[\d,\s]*\}:\s*\([^)]*\)", m.group(0))
+            report["aliased_pairs"] = pairs
+            report["supported"] = True
+    except Exception:
+        pass
+    return report
 
 
 def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,

@@ -60,8 +60,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.channel import (DL_FOLD, OTAChannelConfig, cms_inputs,
-                                sample_fading, sample_interference, sr_inputs)
+                                sample_fading, sample_interference, sr_inputs,
+                                sr_kernel_seed)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
+from repro.kernels.interpret import resolve_interpret
 
 PyTree = Any
 
@@ -105,6 +107,37 @@ def _cms_slab_inputs(kx: jax.Array, spec: SlabSpec
     u = jnp.pad(jnp.concatenate(us), (0, pad))
     e = jnp.pad(jnp.concatenate(es), (0, pad), constant_values=1.0)
     return u, e
+
+
+def restore_zero_tail(x, spec: SlabSpec, offset=None, width=None):
+    """Re-pin the slab's zero padding tail after a zero-folded wire.
+
+    The 1-bit ``fold`` container cannot represent 0: padding coords in
+    the slab's final PARTIAL 128-block (a block mixing real and padding
+    coords has a nonzero scale) ride the wire as +1 and dequantize to
+    +scale, which would let the resident engines accumulate updates in
+    the tail that the pytree-materialising oracle discards. Padding is
+    a layout artifact, not model state — a real deployment would never
+    transmit those coordinates — so the slab layer re-masks the fold
+    wire's outputs here, mirroring how ``_cms_slab_inputs`` pins the
+    padding to the interference fixed point. Plain jnp, identical on
+    every backend, applied ONLY on the fold wire (every other wire
+    keeps the tail exact in-kernel, and their graphs must stay
+    bitwise-untouched). Note the pilot-stats epilogue runs before this
+    mask and sees the polluted tail — a per-slab-constant perturbation
+    well inside the tail-index estimator's tolerance.
+
+    ``offset``/``width`` select a shard's local slice of the mask (the
+    sharded engine masks its own ``shard_len`` columns).
+    """
+    if x is None:
+        return x
+    if width is None:
+        width = spec.padded
+    pos = jnp.arange(width)
+    if offset is not None:
+        pos = pos + offset
+    return jnp.where(pos < spec.total, x, jnp.zeros((), x.dtype))
 
 
 def uplink_sr_slab_inputs(key: jax.Array, spec: SlabSpec,
@@ -215,35 +248,64 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
     ef_new = None
 
     if cfg.uplink.quantized:
+        from repro.kernels.ota_channel import pack_sign_slab
         qmode = cfg.uplink.mode
+        zero_fold = cfg.uplink.zero_fold
+        # The wire representation of the sign payload: when packed
+        # ("fold"/"planes") the transmitted words go through
+        # pack_sign_slab and the receiver's packed prologue — a bitwise
+        # round trip, so taking the packed wire never perturbs values,
+        # it just makes the trajectory ride the bits that actually move.
+        packed = cfg.uplink.packed_sign
         # The sign quantizer is deterministic — it draws no SR uniforms
         # (fold_in is stateless, so skipping the draw perturbs nothing).
         stochastic = cfg.uplink.stochastic_rounding and qmode == "int8"
-        r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        # In-kernel SR (compiled pallas only): replace the host-drawn
+        # uniforms with the kernel-seeded PRNG; interpret/jnp keep the
+        # host path — it is the cross-backend parity oracle.
+        inkernel = (stochastic and cfg.uplink.sr_inkernel
+                    and cfg.backend != "jnp"
+                    and not resolve_interpret(cfg.interpret))
+        r = (uplink_sr_slab_inputs(key, spec)[0]
+             if stochastic and not inkernel else None)
         want_ef = ef is not None
         if cfg.backend == "jnp":
             from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
             tx = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
                                   stochastic=stochastic, qmode=qmode,
+                                  zero_fold=zero_fold,
                                   ef=ef, return_residual=want_ef)
-            g_slab = ota_receive_ref(tx[0][None], tx[1][None], u, e,
+            payload = (pack_sign_slab(tx[0][None],
+                                      planes=(packed == "planes"))
+                       if packed else tx[0][None])
+            g_slab = ota_receive_ref(payload, tx[1][None], u, e,
                                      alpha=cfg.alpha, scale=scale,
+                                     packed=packed,
                                      pilot_stats=pilot_stats)
         else:
             from repro.kernels.ota_channel import (ota_receive_slab,
                                                    ota_transmit_slab)
+            sr_seed = sr_kernel_seed(key)[0] if inkernel else None
             tx = ota_transmit_slab(grads_slab, h, quantize=True, r=r,
                                    stochastic=stochastic, qmode=qmode,
+                                   zero_fold=zero_fold, sr_seed=sr_seed,
                                    ef=ef, return_residual=want_ef,
                                    interpret=cfg.interpret)
-            g_slab = ota_receive_slab(tx[0][None], tx[1][None], u, e,
+            payload = (pack_sign_slab(tx[0][None],
+                                      planes=(packed == "planes"))
+                       if packed else tx[0][None])
+            g_slab = ota_receive_slab(payload, tx[1][None], u, e,
                                       alpha=cfg.alpha, scale=scale,
+                                      packed=packed,
                                       pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
         if want_ef:
             ef_new = tx[2]
         if pilot_stats:
             g_slab, stats = g_slab
+        if cfg.uplink.zero_fold:
+            g_slab = restore_zero_tail(g_slab, spec)
+            ef_new = restore_zero_tail(ef_new, spec)
         return g_slab, h, grads_slab, stats, ef_new
 
     if cfg.backend == "jnp":

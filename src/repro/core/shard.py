@@ -74,9 +74,14 @@ payload entry per round), not f32 rounding — tested with error bounds
 remains bitwise-equal to the single-device pallas engine.
 
 **Wire-format matrix** (PR 7). ``uplink="sign"`` rides the same
-exchange as ``"int8"`` with 1-bit payloads (sign values in the int8
-wire container, blockwise mean-magnitude scales, no SR draws —
-deterministic). ``UplinkConfig.error_feedback`` carries one FULL-WIDTH
+exchange as ``"int8"`` with 1-bit payloads (blockwise mean-magnitude
+scales, no SR draws — deterministic). Since PR 8 the sign payload is
+bit-packed for the exchange by default (``UplinkConfig.sign_pack``):
+the (P, 2, len) int8 rows become (P, 2, len/32) uint32 sign-plane
+words before the ``all_to_all`` — a true 1 bit/coord wire under
+zero-folding ("fold"), 2 bits/coord with the exact {-1, 0, +1}
+bitplane pair ("planes"), or the PR 7 int8 container ("int8") — and
+each device's receive launches unpack their own slice. ``UplinkConfig.error_feedback`` carries one FULL-WIDTH
 residual row per transmitter (``SlabTrainState.ef``, sharded
 ``P(axes)`` on dim 0, scanned as carry by the runner): each device's
 residual joins its noisy faded partial before the quantizer and the
@@ -110,7 +115,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.adaptive import AdaptiveConfig, slab_update_slabs
-from repro.core.channel import OTAChannelConfig, cms_transform, sample_fading
+from repro.core.channel import (OTAChannelConfig, cms_transform,
+                                sample_fading, sr_kernel_seed)
 from repro.core.fl import FLConfig, RoundMetrics, _client_update
 from repro.core.ota import (_cms_slab_inputs, _interference_slab_inputs,
                             linear_shard_index, uplink_sr_slab_inputs)
@@ -186,6 +192,17 @@ def exchange_uplink_payload(x: jax.Array, axes: Tuple[str, ...],
     return x.reshape((-1,) + rest)
 
 
+def _use_inkernel_sr(channel_cfg: OTAChannelConfig,
+                     stochastic: bool) -> bool:
+    """Whether this launch draws its rounding bits in-kernel: the
+    config opts in AND the launch is a compiled pallas one (interpret
+    mode keeps the host-drawn oracle — the pltpu PRNG only lowers on
+    TPU)."""
+    from repro.kernels.interpret import resolve_interpret
+    return (stochastic and channel_cfg.uplink.sr_inkernel
+            and not resolve_interpret(channel_cfg.interpret))
+
+
 def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
                  h_loc: jax.Array, key: jax.Array, kx: jax.Array,
                  idx: jax.Array, spec: SlabSpec, axes: Tuple[str, ...],
@@ -226,28 +243,40 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
     from repro.kernels.ota_channel import ota_transmit_slab
 
     qmode = channel_cfg.uplink.mode
+    zero_fold = channel_cfg.uplink.zero_fold
     stochastic = channel_cfg.uplink.stochastic_rounding and qmode == "int8"
-    if stochastic:
+    inkernel = _use_inkernel_sr(channel_cfg, stochastic)
+    if stochastic and not inkernel:
         r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
         r_noisy, r_clean = r2[0], r2[1]
     else:
         r_noisy = r_clean = None
+    if inkernel:
+        seeds = sr_kernel_seed(key, shard_index=idx)
+        seed_noisy, seed_clean = seeds[0], seeds[1]
+    else:
+        seed_noisy = seed_clean = None
 
     want_ef = ef is not None
     tx = ota_transmit_slab(
         g_stack, h_loc, n_total=n_total, quantize=True, r=r_noisy,
-        stochastic=stochastic, qmode=qmode, ef=ef,
+        stochastic=stochastic, qmode=qmode, zero_fold=zero_fold,
+        sr_seed=seed_noisy, ef=ef,
         return_residual=want_ef, interpret=channel_cfg.interpret)
     q_noisy, s_noisy = tx[0], tx[1]
     ef_new = tx[2] if want_ef else None
     ones = jnp.ones((g_stack.shape[0],), jnp.float32)
     q_clean, s_clean = ota_transmit_slab(
         g_stack, ones, n_total=1, quantize=True, r=r_clean,
-        stochastic=stochastic, qmode=qmode,
+        stochastic=stochastic, qmode=qmode, zero_fold=zero_fold,
+        sr_seed=seed_clean,
         interpret=channel_cfg.interpret)
     g_slice, clean_slice, stats = _exchange_and_receive(
         channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx, idx, spec,
         axes, axis_sizes, pilot_stats=pilot_stats)
+    if channel_cfg.uplink.zero_fold and ef_new is not None:
+        from repro.core.ota import restore_zero_tail
+        ef_new = restore_zero_tail(ef_new, spec)
     return g_slice, clean_slice, stats, ef_new
 
 
@@ -260,8 +289,15 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
     quantized payloads (noisy faded + clean diagnostic) over the wire
     and run the fused receive launches on this device's slice. Shared by
     the resident and the streamed uplink (which differ only in HOW the
-    partial sums were formed before quantization)."""
-    from repro.kernels.ota_channel import LANE, ota_receive_slab
+    partial sums were formed before quantization).
+
+    With a packed sign wire (``UplinkConfig.packed_sign``) the payload
+    rows are bit-packed into uint32 words BEFORE the ``all_to_all`` —
+    the collective moves 1 bit/coord (zero-folded) or 2 bits/coord
+    (planes) instead of the 8-bit int8 container — and the receive
+    launches unpack their own slice."""
+    from repro.kernels.ota_channel import (LANE, ota_receive_slab,
+                                           pack_sign_slab)
 
     n_shards = math.prod(axis_sizes)
     shard_len = spec.shard_len
@@ -273,6 +309,9 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
         2, n_shards, shard_len).transpose(1, 0, 2)        # (P, 2, len)
     scales = jnp.stack([s_noisy, s_clean]).reshape(
         2, n_shards, shard_len // LANE).transpose(1, 0, 2)
+    packed = channel_cfg.uplink.packed_sign
+    if packed:
+        payload = pack_sign_slab(payload, planes=(packed == "planes"))
     payload = exchange_uplink_payload(payload, axes, axis_sizes)
     scales = exchange_uplink_payload(scales, axes, axis_sizes)
 
@@ -283,14 +322,25 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
     stats = None
     g_slice = ota_receive_slab(
         payload[:, 0], scales[:, 0], u, e, alpha=channel_cfg.alpha,
-        scale=xi_scale, pilot_stats=pilot_stats,
+        scale=xi_scale, packed=packed, pilot_stats=pilot_stats,
         interpret=channel_cfg.interpret)
     if pilot_stats:
         g_slice, stats = g_slice
     clean_slice = ota_receive_slab(
         payload[:, 1], scales[:, 1], jnp.zeros_like(u), jnp.ones_like(e),
-        alpha=channel_cfg.alpha, scale=0.0,
+        alpha=channel_cfg.alpha, scale=0.0, packed=packed,
         interpret=channel_cfg.interpret)
+    if channel_cfg.uplink.zero_fold:
+        # The fold wire dequantizes padding coords to +scale; the slab
+        # layer owns the zero-tail contract, so this shard re-masks its
+        # own columns (see ota.restore_zero_tail — fold-only, every
+        # other wire's graph stays bitwise-untouched).
+        from repro.core.ota import restore_zero_tail
+        off = idx * shard_len
+        g_slice = restore_zero_tail(g_slice, spec, offset=off,
+                                    width=shard_len)
+        clean_slice = restore_zero_tail(clean_slice, spec, offset=off,
+                                        width=shard_len)
     return g_slice, clean_slice, stats
 
 
@@ -472,17 +522,25 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 # divides by the participant count).
                 noisy_part = partial / norm_safe if dynamic_norm else partial
                 qmode = uplink.mode
+                zero_fold = uplink.zero_fold
                 stochastic = (uplink.stochastic_rounding
                               and qmode == "int8")
-                if stochastic:
+                inkernel = _use_inkernel_sr(channel_cfg, stochastic)
+                if stochastic and not inkernel:
                     r2 = uplink_sr_slab_inputs(key, spec, shard_index=idx)
                     r_noisy, r_clean = r2[0], r2[1]
                 else:
                     r_noisy = r_clean = None
+                if inkernel:
+                    seeds = sr_kernel_seed(key, shard_index=idx)
+                    seed_noisy, seed_clean = seeds[0], seeds[1]
+                else:
+                    seed_noisy = seed_clean = None
                 one = jnp.ones((1,), jnp.float32)
                 tx = ota_transmit_slab(
                     noisy_part[None], one, n_total=1, quantize=True,
                     r=r_noisy, stochastic=stochastic, qmode=qmode,
+                    zero_fold=zero_fold, sr_seed=seed_noisy,
                     ef=ef, return_residual=use_ef,
                     interpret=channel_cfg.interpret)
                 q_noisy, s_noisy = tx[0], tx[1]
@@ -491,10 +549,14 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 q_clean, s_clean = ota_transmit_slab(
                     clean_part[None], one, n_total=1, quantize=True,
                     r=r_clean, stochastic=stochastic, qmode=qmode,
+                    zero_fold=zero_fold, sr_seed=seed_clean,
                     interpret=channel_cfg.interpret)
                 g_slice, clean_slice, stats = _exchange_and_receive(
                     channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx,
                     idx, spec, axes, axis_sizes, pilot_stats=track)
+                if channel_cfg.uplink.zero_fold and use_ef:
+                    from repro.core.ota import restore_zero_tail
+                    ef_new = restore_zero_tail(ef_new, spec)
             else:
                 both = psum_scatter_slab(jnp.stack([partial, clean_part]),
                                          axes, dim=1)
@@ -650,7 +712,7 @@ def make_shard_slab_step(loss_fn, channel_cfg: OTAChannelConfig,
 
 def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
                            adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
-                           mesh, jit: bool = True):
+                           mesh, jit: bool = True, donate: bool = False):
     """R resident rounds as ONE ``jax.lax.scan`` inside ``shard_map``:
     ``run(state, keys, client_batches) -> (state, metrics)`` with
     ``keys`` a (R,) key array and ``client_batches`` leaves shaped
@@ -658,6 +720,14 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
     as ``make_shard_slab_step`` — state slices are the carry, so the
     whole R-round trajectory executes with zero full-model regathers and
     zero host round trips; metrics come back stacked (R,).
+
+    ``donate=True`` donates the incoming ``SlabTrainState`` buffers
+    (``donate_argnums=(0,)``): XLA aliases each slab (w, opt, alpha_hat,
+    ef) to its output — the resident update is genuinely in place, no
+    2x copy of the training state lives across the call. The caller's
+    state object is CONSUMED (reusing it raises jax's donated-buffer
+    error) — thread the returned state forward, as ``run_rounds_slab``
+    and ``launch.train`` do. Requires ``jit``.
     """
     axes, axis_sizes = _validate_mesh(fl_cfg, mesh)
     n_shards = math.prod(axis_sizes)
@@ -697,7 +767,12 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
                               state.spec, ef_out if use_ef else state.ef
                               ), ms
 
-    return jax.jit(run) if jit else run
+    if donate and not jit:
+        raise ValueError("donate=True needs jit=True: buffer donation "
+                         "is a property of the compiled executable")
+    if not jit:
+        return run
+    return jax.jit(run, donate_argnums=(0,)) if donate else jax.jit(run)
 
 
 def shard_round_step(loss_fn, channel_cfg: OTAChannelConfig,

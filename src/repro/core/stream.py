@@ -53,9 +53,11 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import OTAChannelConfig, sample_fading
+from repro.core.channel import (OTAChannelConfig, sample_fading,
+                                sr_kernel_seed)
 from repro.core.ota import _interference_slab_inputs, uplink_sr_slab_inputs
 from repro.core.slab import SlabSpec, stack_to_slab
+from repro.kernels.interpret import resolve_interpret
 
 PyTree = Any
 
@@ -263,20 +265,32 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     stats = None
     ef_new = None
     if cfg.uplink.quantized:
+        from repro.kernels.ota_channel import pack_sign_slab
         qmode = cfg.uplink.mode
+        zero_fold = cfg.uplink.zero_fold
+        packed = cfg.uplink.packed_sign
         stochastic = cfg.uplink.stochastic_rounding and qmode == "int8"
-        r = (uplink_sr_slab_inputs(key, spec)[0] if stochastic else None)
+        inkernel = (stochastic and cfg.uplink.sr_inkernel and use_kernels
+                    and not resolve_interpret(cfg.interpret))
+        r = (uplink_sr_slab_inputs(key, spec)[0]
+             if stochastic and not inkernel else None)
         want_ef = ef is not None
         if use_kernels:
             from repro.kernels.ota_channel import (ota_receive_slab,
                                                    ota_transmit_slab)
+            sr_seed = sr_kernel_seed(key)[0] if inkernel else None
             tx = ota_transmit_slab(g_pre[None], one, n_total=1,
                                    quantize=True, r=r,
                                    stochastic=stochastic, qmode=qmode,
+                                   zero_fold=zero_fold, sr_seed=sr_seed,
                                    ef=ef, return_residual=want_ef,
                                    interpret=cfg.interpret)
-            g_slab = ota_receive_slab(tx[0][None], tx[1][None], u, e,
+            payload = (pack_sign_slab(tx[0][None],
+                                      planes=(packed == "planes"))
+                       if packed else tx[0][None])
+            g_slab = ota_receive_slab(payload, tx[1][None], u, e,
                                       alpha=cfg.alpha, scale=scale,
+                                      packed=packed,
                                       pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
         else:
@@ -284,9 +298,14 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
             tx = ota_transmit_ref(g_pre[None], one, n_total=1,
                                   quantize=True, r=r,
                                   stochastic=stochastic, qmode=qmode,
+                                  zero_fold=zero_fold,
                                   ef=ef, return_residual=want_ef)
-            g_slab = ota_receive_ref(tx[0][None], tx[1][None], u, e,
+            payload = (pack_sign_slab(tx[0][None],
+                                      planes=(packed == "planes"))
+                       if packed else tx[0][None])
+            g_slab = ota_receive_ref(payload, tx[1][None], u, e,
                                      alpha=cfg.alpha, scale=scale,
+                                     packed=packed,
                                      pilot_stats=pilot_stats)
         if want_ef:
             ef_new = tx[2]
@@ -304,6 +323,10 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
                                      pilot_stats=pilot_stats)
     if pilot_stats:
         g_slab, stats = g_slab
+    if cfg.uplink.quantized and cfg.uplink.zero_fold:
+        from repro.core.ota import restore_zero_tail
+        g_slab = restore_zero_tail(g_slab, spec)
+        ef_new = restore_zero_tail(ef_new, spec)
 
     return StreamParts(g_slab=g_slab, h=h, mask=mask,
                        n_participants=n_part, norm=norm,

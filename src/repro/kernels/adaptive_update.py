@@ -59,7 +59,8 @@ from jax.experimental import pallas as pl
 # the tree.map reference. (Import is cycle-safe: core.adaptive pulls in
 # this module only lazily, inside apply_slab_update.)
 from repro.core.adaptive import _abs_pow
-from repro.kernels.interpret import resolve_interpret
+from repro.kernels.interpret import (INTERPRET_BLOCK_CAP, coarse_block,
+                                     resolve_interpret)
 
 LANE = 128
 DEFAULT_BLOCK_ROWS = 256     # (256, 128) f32 tile = 128 KiB per operand
@@ -150,6 +151,11 @@ def adaptive_update_slab(g: jax.Array, delta: Optional[jax.Array],
                     and mode in ("adagrad", "adam", "amsgrad", "yogi"))
     n = g.shape[0]
     rows = -(-n // LANE)
+    # Interpret-mode grid coarsening (cap in rows: cap * LANE elements
+    # per interpreted step; the update is elementwise, so any tiling of
+    # the row axis is bitwise-equivalent).
+    block_rows = coarse_block(rows, block_rows, interpret,
+                              cap=INTERPRET_BLOCK_CAP // LANE)
     rows_pad = -(-rows // block_rows) * block_rows
     total = rows_pad * LANE
 

@@ -28,6 +28,11 @@ from typing import Optional
 
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
+# Interpret-mode grid coarsening cap: axis units per interpreted grid
+# step (columns for the channel kernels, slab rows for the update
+# kernel). See ``coarse_block``.
+INTERPRET_BLOCK_CAP = 1 << 18
+
 _TRUE = ("1", "true", "yes", "on")
 _FALSE = ("0", "false", "no", "off")
 
@@ -50,3 +55,32 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """An explicit flag wins; ``None`` means auto (env, then platform)."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def coarse_block(n: int, block: int, interpret: bool,
+                 cap: int = INTERPRET_BLOCK_CAP) -> int:
+    """Interpret-mode grid coarsening: the block size to launch with.
+
+    Compiled launches keep the hardware tile ``block`` untouched. In
+    interpret mode the grid loop is evaluated step by step on the host
+    (each step paying block-index resolution + operand slicing on the
+    full buffers), so a d = 256k slab at the TPU tile size means 512
+    interpreted steps per launch — the host overhead that made the
+    interpret-mode slab engine slower than the jnp path it replaces.
+    Here the block grows to cover the whole padded axis (capped at
+    ``cap`` axis units, in multiples of ``block``), collapsing the grid
+    to ~1 step.
+
+    Value-safe by construction for this package's kernels: every
+    per-coordinate output and every per-LANE-block scale is computed
+    from within-column / within-128-block data only — invariant to how
+    the d axis is tiled (asserted bitwise against the fixed-tile launch
+    in the test suite). The one exception is the pilot-stats scalar
+    reductions, whose cross-tile accumulation order follows the grid —
+    those re-associate at the ULP (asserted to ~1 ULP in the same
+    test), within the estimator's existing cross-backend tolerance.
+    """
+    if not interpret or n <= block:
+        return block
+    padded = -(-n // block) * block
+    return min(padded, max(block, (cap // block) * block))

@@ -6,13 +6,16 @@ applies the fused ADOTA update kernel in ONE launch over the whole
 model, replacing the ~10-pass jnp expression chain of
 ``repro.core.adaptive`` with one read-modify-write HBM pass. The jnp
 reference implementations remain the default on non-TPU backends; the
-kernels run in interpret mode there (tests) and compiled on TPU.
+kernels run in interpret mode there (tests) and compiled on TPU —
+``interpret=None`` defers to ``repro.kernels.interpret`` (platform
+auto + the ``REPRO_PALLAS_INTERPRET`` env var), so these entry points
+compile on TPU without every caller opting in.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +36,7 @@ _MODE_TO_OPTIMIZER = {mode: name for name, mode in _SLAB_MODES.items()}
 def fused_server_update(g: PyTree, state: ServerOptState, params: PyTree, *,
                         lr: float, beta1: float, beta2: float, alpha: float,
                         eps: float, mode: str = "adam",
-                        interpret: bool = True
+                        interpret: Optional[bool] = None
                         ) -> Tuple[PyTree, ServerOptState]:
     """Kernel-fused equivalent of any registered server optimizer's
     .update(): one ``adaptive_update_slab`` launch over the whole model
@@ -54,7 +57,7 @@ def fused_server_update(g: PyTree, state: ServerOptState, params: PyTree, *,
 @functools.partial(jax.jit, static_argnames=("alpha", "scale", "interpret"))
 def fused_ota_aggregate(grads: jax.Array, h: jax.Array, key: jax.Array, *,
                         alpha: float, scale: float,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: Optional[bool] = None) -> jax.Array:
     """Kernel-fused OTA MAC on stacked client gradients (N, d)."""
     import math
     d = grads.shape[1]

@@ -98,11 +98,33 @@ the multiple-access channel) and the receive kernel runs on each
 device's slab slice. The grid covers just the local rows/columns, so
 the launch cost scales down with the shard, not the model.
 
-A compiled-TPU variant of the quantize epilogue could draw its rounding
-bits in-kernel (``pltpu.prng_random_bits`` + ``pltpu.stochastic_round``)
-instead of streaming the upstream uniforms; that breaks the cross-
-backend PRNG contract the parity suites pin, so it is left as a
-TPU-perf follow-up.
+**Compiled-mode fast path** (PR 8) — two compiled-only refinements
+close the gap between the byte model and what actually moves:
+
+* *In-kernel stochastic rounding* (``sr_seed=`` on the quantized
+  transmit): the epilogue draws its rounding bits inside the kernel —
+  ``pltpu.prng_seed(seed, program_id)`` + ``pltpu.prng_random_bits``,
+  the seed derived from the round key by
+  ``repro.core.channel.sr_kernel_seed`` (the same fold chain as the
+  host-drawn uniforms) — instead of streaming the (1, d) f32 host
+  draws through HBM: one less d-word read per transmit. The pltpu PRNG
+  only lowers on TPU, so ``sr_seed`` demands a compiled launch
+  (interpret raises); the host-drawn path stays the interpret/parity
+  oracle, and because the in-kernel bits are a *different* uniform
+  stream, agreement with that oracle is the one-quantization-step
+  contract documented in ``kernels/ref.py``, not bitwise.
+
+* *Bit-packed sign wire* (``pack_sign_slab`` / ``unpack_sign_slab``,
+  ``ota_receive_slab(packed=...)``): the {-1, 0, +1} sign payload
+  leaves the transmit WRAPPER packed 32 coords per uint32 word — the
+  sign plane alone when the quantizer zero-folds (``zero_fold=True``:
+  q in {-1, +1}, all-zero blocks scale 0 — a true 1 bit/coord wire),
+  or sign + nonzero planes (2 bits/coord) preserving arbitrary
+  {-1, 0, +1} bitwise. The receive prologue unpacks before the fused
+  dequantize launch. Packing sits at the XLA level rather than in the
+  kernel body deliberately: a (1, block_cols // 32) uint32 output tile
+  would violate the lane alignment the compiled epilogue must keep,
+  and XLA fuses the word-assembly into the payload's consumer anyway.
 """
 
 from __future__ import annotations
@@ -113,9 +135,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.channel import cms_transform
-from repro.kernels.interpret import resolve_interpret
+from repro.kernels.interpret import coarse_block, resolve_interpret
 
 LANE = 128
 DEFAULT_BLOCK_COLS = 512
@@ -182,6 +205,7 @@ def ota_channel_slab(grads: jax.Array, h: jax.Array, u: jax.Array,
     n, d = grads.shape
     if n_total is None:
         n_total = n
+    block_cols = coarse_block(d, block_cols, interpret)
     d_pad = -(-d // block_cols) * block_cols
     gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
     up = jnp.pad(u, (0, d_pad - d)).reshape(1, d_pad)
@@ -241,7 +265,11 @@ def _tx_stream_kernel(g_ref, h_ref, acc_ref, out_ref, *, n_clients: int):
 
 
 def _tx_quant_kernel(*refs, n_clients: int, stochastic: bool, qmode: str,
-                     ef: bool, resid: bool):
+                     ef: bool, resid: bool, zero_fold: bool,
+                     inkernel_sr: bool):
+    # refs[2] is the (1, d) host-drawn SR uniforms, EXCEPT under
+    # inkernel_sr where the same slot carries the (1, 1) int32 SMEM
+    # seed (the host draws are never materialized then).
     if ef:
         g_ref, h_ref, r_ref, ef_ref = refs[:4]
         outs = refs[4:]
@@ -262,20 +290,41 @@ def _tx_quant_kernel(*refs, n_clients: int, stochastic: bool, qmode: str,
     if qmode == "sign":
         # 1-bit signSGD payload: per-block magnitude = mean|x| (the L1
         # scale that makes +/-s the least-squares sign reconstruction),
-        # payload = sign(x) in {-1, 0, +1} on the int8 wire container.
-        # Deterministic (canonical EF-signSGD) — the SR draws are
-        # ignored. All-zero blocks keep scale 1 -> payload 0, the same
-        # zero-tail fixed point as int8.
+        # payload = sign(x) on the int8 wire container. Deterministic
+        # (canonical EF-signSGD) — the SR draws are ignored.
         meanabs = jnp.mean(jnp.abs(a), axis=1, keepdims=True)  # (nb, 1)
-        s = jnp.where(meanabs > 0.0, meanabs, 1.0)
-        q = jnp.sign(a).astype(jnp.int8)
+        if zero_fold:
+            # Zero-folding (the 1-bit packable variant): q in {-1, +1}
+            # only — exact zeros fold to +1 — and all-zero blocks keep
+            # scale 0, so the slab's zero tail still dequantizes to
+            # exactly 0 (+1 * 0). An isolated exact zero inside a
+            # nonzero block dequantizes to +s: one quantization step,
+            # within the documented wire contract, and measure-zero in
+            # gradient data.
+            s = meanabs
+            q = jnp.where(a < 0.0, -1, 1).astype(jnp.int8)
+        else:
+            # {-1, 0, +1} container variant: all-zero blocks keep scale
+            # 1 -> payload 0, the same zero-tail fixed point as int8.
+            s = jnp.where(meanabs > 0.0, meanabs, 1.0)
+            q = jnp.sign(a).astype(jnp.int8)
     else:
         maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)    # (nb, 1)
         # All-zero blocks (the slab's zero tail) keep scale 1 -> payload
         # 0, so quantization preserves the zero-padding contract exactly.
         s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
         y = a / s
-        if stochastic:
+        if stochastic and inkernel_sr:
+            # Compiled-mode fast path: draw the rounding uniforms
+            # in-kernel. Seeding folds the grid step in so every column
+            # block draws a distinct stream; the low 24 bits of each
+            # word become a uniform on [0, 1) at float32's native SR
+            # granularity (2^-24 = one ulp at 1.0).
+            pltpu.prng_seed(r_ref[0, 0], pl.program_id(0))
+            bits = pltpu.prng_random_bits(y.shape)
+            u24 = jnp.bitwise_and(bits, (1 << 24) - 1)
+            y = jnp.floor(y + u24.astype(jnp.float32) * (1.0 / (1 << 24)))
+        elif stochastic:
             y = jnp.floor(y + r_ref[...].reshape(bc // LANE, LANE))
         else:
             y = jnp.round(y)
@@ -292,7 +341,8 @@ def _tx_quant_kernel(*refs, n_clients: int, stochastic: bool, qmode: str,
 def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
                       n_total: int | None = None, quantize: bool = False,
                       r: Optional[jax.Array] = None, stochastic: bool = True,
-                      qmode: str = "int8",
+                      qmode: str = "int8", zero_fold: bool = False,
+                      sr_seed: Optional[jax.Array] = None,
                       ef: Optional[jax.Array] = None,
                       return_residual: bool = False,
                       acc: Optional[jax.Array] = None,
@@ -320,7 +370,16 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     stochastic rounding) or ``"sign"`` (1-bit signSGD: payload =
     sign(x) in {-1, 0, +1} on the int8 wire, scale = blockwise mean|x|;
     deterministic, ``r`` may be None). Both dequantize through the same
-    ``ota_receive_slab``.
+    ``ota_receive_slab``. ``zero_fold=True`` (sign only) selects the
+    1-bit-packable sign variant: q in {-1, +1} (exact zeros fold to
+    +1), all-zero blocks scale 0 — see the module docstring.
+
+    ``sr_seed`` (int8 + stochastic only) switches the epilogue to
+    IN-KERNEL rounding draws: pass the int32 scalar from
+    ``repro.core.channel.sr_kernel_seed`` instead of ``r`` (which must
+    then be None — the host draws are never materialized). Compiled
+    launches only; the pltpu PRNG does not lower in interpret mode, so
+    ``interpret=True`` (or auto-resolving to it) raises.
 
     **Error feedback**: ``ef`` is this transmitter's (d,) carried
     residual — it is added into the faded partial BEFORE quantization.
@@ -342,6 +401,7 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     n, d = grads.shape
     if n_total is None:
         n_total = n
+    block_cols = coarse_block(d, block_cols, interpret)
     streamed = acc is not None or row_chunk is not None
     if streamed and quantize:
         raise ValueError(
@@ -405,7 +465,25 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
             "by construction")
     if qmode not in ("int8", "sign"):
         raise ValueError(f'unknown qmode {qmode!r}; options: "int8", "sign"')
-    if (qmode == "int8" and stochastic
+    if zero_fold and qmode != "sign":
+        raise ValueError("zero_fold is a sign-quantizer variant; "
+                         f"qmode is {qmode!r}")
+    inkernel_sr = sr_seed is not None
+    if inkernel_sr:
+        if not (qmode == "int8" and stochastic):
+            raise ValueError(
+                "sr_seed selects in-kernel stochastic rounding: it needs "
+                "qmode='int8' with stochastic=True")
+        if r is not None:
+            raise ValueError(
+                "pass EITHER the host-drawn uniforms r (the parity "
+                "oracle) OR the in-kernel seed sr_seed, not both")
+        if interpret:
+            raise ValueError(
+                "sr_seed needs a compiled launch: the pltpu PRNG does "
+                "not lower in interpret mode — use the host-drawn r "
+                "path there (it is the parity oracle)")
+    elif (qmode == "int8" and stochastic
             and (r is None or r.shape != (d,))):
         raise ValueError("stochastic rounding needs r of shape "
                          f"({d},), got {None if r is None else r.shape}")
@@ -414,18 +492,23 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
                          f"got {ef.shape}")
     d_pad = -(-d // block_cols) * block_cols
     gp = jnp.pad(grads, ((0, 0), (0, d_pad - d)))
-    if r is None:
-        r = jnp.zeros((d,), jnp.float32)
-    rp = jnp.pad(r, (0, d_pad - d)).reshape(1, d_pad)
 
     use_ef = ef is not None
     spec_row = pl.BlockSpec((1, block_cols), lambda i: (0, i))
     in_specs = [
         pl.BlockSpec((n, block_cols), lambda i: (0, i)),
         pl.BlockSpec((n, 1), lambda i: (0, 0)),
-        spec_row,
     ]
-    operands = [gp, h2, rp]
+    operands = [gp, h2]
+    if inkernel_sr:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0),
+                                     memory_space=pltpu.SMEM))
+        operands.append(jnp.asarray(sr_seed, jnp.int32).reshape(1, 1))
+    else:
+        if r is None:
+            r = jnp.zeros((d,), jnp.float32)
+        in_specs.append(spec_row)
+        operands.append(jnp.pad(r, (0, d_pad - d)).reshape(1, d_pad))
     if use_ef:
         in_specs.append(spec_row)
         operands.append(jnp.pad(ef.astype(jnp.float32),
@@ -444,7 +527,8 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     outs = pl.pallas_call(
         functools.partial(_tx_quant_kernel, n_clients=n_total,
                           stochastic=stochastic, qmode=qmode, ef=use_ef,
-                          resid=return_residual),
+                          resid=return_residual, zero_fold=zero_fold,
+                          inkernel_sr=inkernel_sr),
         grid=(d_pad // block_cols,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -456,6 +540,70 @@ def ota_transmit_slab(grads: jax.Array, h: jax.Array, *,
     if return_residual:
         ret = ret + (outs[2].reshape(-1)[:d],)
     return ret
+
+
+def sign_words(d: int, *, planes: bool = False) -> int:
+    """Packed word count for a d-coordinate sign payload: d // 32
+    uint32 words for the 1-bit zero-folded wire, twice that for the
+    sign + nonzero bitplane pair."""
+    if d % 32 != 0:
+        raise ValueError(f"packing needs d to be a multiple of 32, got {d}")
+    return (2 if planes else 1) * (d // 32)
+
+
+def _bit_pos():
+    return jnp.arange(32, dtype=jnp.uint32)  # XLA constant-folds this
+
+
+def pack_sign_slab(payload: jax.Array, *, planes: bool = False) -> jax.Array:
+    """Pack a {-1, 0, +1} int8 sign payload (..., d) into uint32 words
+    (..., sign_words(d, planes)) — the transmit epilogue of the packed
+    sign wire (see the module docstring).
+
+    ``planes=False``: the sign plane alone — bit j of word w is 1 iff
+    ``payload[32 w + j] < 0``. 1 bit/coord; zeros pack as +1, which is
+    only faithful for the ``zero_fold=True`` quantizer (whose payloads
+    carry no zeros and whose all-zero blocks ship scale 0).
+    ``planes=True``: sign plane words followed by nonzero-mask plane
+    words along the last axis — 2 bits/coord, any {-1, 0, +1} payload
+    round-trips bitwise.
+    """
+    d = payload.shape[-1]
+    nw = sign_words(d, planes=False)
+    pos = _bit_pos()
+
+    def plane(mask):
+        b = mask.astype(jnp.uint32).reshape(*payload.shape[:-1], nw, 32)
+        return jnp.sum(b << pos, axis=-1, dtype=jnp.uint32)
+
+    sign_plane = plane(payload < 0)
+    if not planes:
+        return sign_plane
+    return jnp.concatenate([sign_plane, plane(payload != 0)], axis=-1)
+
+
+def unpack_sign_slab(words: jax.Array, d: int, *,
+                     planes: bool = False) -> jax.Array:
+    """Inverse of ``pack_sign_slab``: (..., sign_words(d, planes))
+    uint32 words back to the (..., d) int8 sign payload the receive
+    kernel dequantizes. The 1-bit wire decodes to {-1, +1} only (zeros
+    were folded at the quantizer); the 2-plane wire restores exact
+    {-1, 0, +1}."""
+    nw = sign_words(d, planes=planes)
+    if words.shape[-1] != nw:
+        raise ValueError(f"expected {nw} packed words for d={d} "
+                         f"(planes={planes}), got {words.shape[-1]}")
+    pos = _bit_pos()
+
+    def bits(w):
+        b = (w[..., None] >> pos) & jnp.uint32(1)
+        return (b > 0).reshape(*w.shape[:-1], w.shape[-1] * 32)
+
+    if not planes:
+        return jnp.where(bits(words), -1, 1).astype(jnp.int8)
+    neg = bits(words[..., :nw // 2])
+    nz = bits(words[..., nw // 2:])
+    return jnp.where(nz, jnp.where(neg, -1, 1), 0).astype(jnp.int8)
 
 
 def _rx_kernel(*refs, alpha: float, scale: float, stats: bool):
@@ -473,6 +621,7 @@ def _rx_kernel(*refs, alpha: float, scale: float, stats: bool):
 
 def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
                      e: jax.Array, *, alpha: float, scale: float,
+                     packed: Optional[str] = None,
                      pilot_stats: bool = False,
                      block_cols: int = DEFAULT_BLOCK_COLS,
                      interpret: Optional[bool] = None):
@@ -488,10 +637,24 @@ def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
     residual log-moment statistics when ``pilot_stats=True`` (the fused
     epilogue; on the sharded engine each device reduces its own slice
     and the 3-vectors psum).
+
+    ``packed="fold"|"planes"`` accepts the bit-packed sign wire
+    instead: payload is then the (R, sign_words(d, ...)) uint32 words
+    ``pack_sign_slab`` produced (d inferred from ``scales``), unpacked
+    in the prologue before the fused dequantize launch.
     """
     if not (1.0 < alpha <= 2.0):
         raise ValueError(f"tail index alpha must be in (1, 2], got {alpha}")
     interpret = resolve_interpret(interpret)
+    if packed is not None:
+        if packed not in ("fold", "planes"):
+            raise ValueError(f'unknown packed wire {packed!r}; '
+                             'options: "fold", "planes"')
+        if payload.dtype != jnp.uint32:
+            raise ValueError("packed payloads are uint32 words, got "
+                             f"{payload.dtype}")
+        d = scales.shape[1] * LANE
+        payload = unpack_sign_slab(payload, d, planes=(packed == "planes"))
     rows, d = payload.shape
     if d % LANE != 0:
         raise ValueError(f"receive needs d to be a multiple of {LANE}, "
@@ -499,6 +662,7 @@ def ota_receive_slab(payload: jax.Array, scales: jax.Array, u: jax.Array,
     if scales.shape != (rows, d // LANE):
         raise ValueError(f"scales must be ({rows}, {d // LANE}), "
                          f"got {scales.shape}")
+    block_cols = coarse_block(d, block_cols, interpret)
     d_pad = -(-d // block_cols) * block_cols
     qp = jnp.pad(payload, ((0, 0), (0, d_pad - d)))
     sp = jnp.pad(scales, ((0, 0), (0, (d_pad - d) // LANE)))

@@ -103,7 +103,7 @@ INT8_MAX = 127.0
 def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
                      n_total: Optional[int] = None, quantize: bool = False,
                      r: Optional[jax.Array] = None, stochastic: bool = True,
-                     qmode: str = "int8",
+                     qmode: str = "int8", zero_fold: bool = False,
                      ef: Optional[jax.Array] = None,
                      return_residual: bool = False,
                      acc: Optional[jax.Array] = None,
@@ -111,7 +111,9 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     """Transmit-stage oracle: faded partial sum, optionally quantized
     (``qmode="int8"``: per-LANE-block max|x|/127 scales + stochastic
     rounding; ``qmode="sign"``: 1-bit signSGD, payload = sign(x) with
-    blockwise mean|x| magnitudes, deterministic).
+    blockwise mean|x| magnitudes, deterministic; ``zero_fold=True``
+    selects the 1-bit-packable sign variant — q in {-1, +1}, exact
+    zeros fold to +1, all-zero blocks scale 0).
 
     Mirrors ``ota_channel.ota_transmit_slab`` op for op. Note the
     agreement contract is *one quantization step*, not bitwise: the
@@ -123,6 +125,16 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     equality on the overwhelming majority), not allclose at f32
     rounding. (Sign payloads flip only where the partial sits within
     f32 rounding of 0 or of a block-mean boundary — same contract.)
+
+    The same one-quantization-step contract covers the compiled
+    in-kernel SR path (``sr_seed=`` on the kernel wrapper, no oracle
+    equivalent here): its rounding uniforms come from the pltpu counter
+    PRNG rather than this module's host-drawn threefry stream, so an
+    individual entry's rounding decision may differ from the oracle's —
+    but both are uniform on [0, 1), so every entry still lands within
+    one block scale of ``x/s`` rounded either way, and both estimators
+    are unbiased. Tests that pin trajectories bitwise must use the
+    host-drawn path (the default everywhere interpret mode can run).
 
     ``ef`` (error feedback) is the (d,) carried residual added into the
     faded partial before quantization; ``return_residual=True`` appends
@@ -167,10 +179,17 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
     if ef is not None:
         agg = agg + ef.astype(jnp.float32)
     a = agg.reshape(d // LANE, LANE)
+    if zero_fold and qmode != "sign":
+        raise ValueError("zero_fold is a sign-quantizer variant; "
+                         f"qmode is {qmode!r}")
     if qmode == "sign":
         meanabs = jnp.mean(jnp.abs(a), axis=1, keepdims=True)
-        s = jnp.where(meanabs > 0.0, meanabs, 1.0)
-        q = jnp.sign(a).astype(jnp.int8)
+        if zero_fold:
+            s = meanabs
+            q = jnp.where(a < 0.0, -1, 1).astype(jnp.int8)
+        else:
+            s = jnp.where(meanabs > 0.0, meanabs, 1.0)
+            q = jnp.sign(a).astype(jnp.int8)
     else:
         maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
         s = jnp.where(maxabs > 0.0, maxabs / INT8_MAX, 1.0)
@@ -189,6 +208,7 @@ def ota_transmit_ref(grads: jax.Array, h: jax.Array, *,
 
 def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,
                     e: jax.Array, *, alpha: float, scale: float,
+                    packed: Optional[str] = None,
                     pilot_stats: bool = False):
     """Receive-stage oracle: dequantize + superpose R int8 payload rows,
     then add the CMS interference. Mirrors ``ota_channel.ota_receive_slab``
@@ -197,8 +217,15 @@ def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,
     interference (the fused-epilogue oracle).
 
     payload: (R, d) int8; scales: (R, d // 128) f32; u, e: (d,).
-    Returns (d,) f32, or ``(out, stats)``.
+    Returns (d,) f32, or ``(out, stats)``. ``packed="fold"|"planes"``
+    accepts the bit-packed uint32 sign wire instead — the unpack is
+    shared with the kernel wrapper (same words, same decode), so the
+    oracle exercises the identical wire bits.
     """
+    if packed is not None:
+        from repro.kernels.ota_channel import unpack_sign_slab
+        payload = unpack_sign_slab(payload, scales.shape[1] * LANE,
+                                   planes=(packed == "planes"))
     rows, d = payload.shape
     deq = (payload.astype(jnp.float32).reshape(rows, d // LANE, LANE)
            * scales[..., None])

@@ -24,6 +24,16 @@ slab state, checkpointed) so the quantized uplinks recover the f32
 convergence trajectory; ``--downlink int8`` quantizes the per-round
 model broadcast the clients see (the server keeps f32 master weights).
 
+The compiled-mode fast path (PR 8) is on by default where it applies:
+the slab state is DONATED into each scan chunk (in-place resident
+update, no 2x state copy — ``--no-donate`` to disable,
+``--donation-report`` to verify the executable aliases the buffers),
+``--uplink sign`` rides a uint32 bit-packed wire (``--sign-pack``:
+'fold' 1 bit/coord, 'planes' 2, 'int8' the PR 7 container), and
+``--sr-inkernel`` moves the int8 stochastic-rounding draws into the
+transmit kernel's pltpu PRNG (compiled mode only; same quantization
+contract, different uniform stream).
+
 ``--client-chunk`` streams the client axis in O(chunk * d) memory
 (PR 6): each chunk's gradients are computed and folded into the
 running MAC partial in-kernel, so the client count is no longer bound
@@ -62,7 +72,7 @@ import numpy as np
 import repro.checkpoint as ckpt
 from repro.configs import ARCHS, get_config, smoke_config
 from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
-                        UplinkConfig, init_train_state,
+                        UplinkConfig, donation_report, init_train_state,
                         make_slab_round_runner, make_slab_spec,
                         run_rounds_slab)
 from repro.data import dirichlet_partition, token_stream
@@ -146,6 +156,35 @@ def main() -> None:
                          "platform default (auto: compiled on TPU, "
                          "interpret mode elsewhere; see also the "
                          "REPRO_PALLAS_INTERPRET env var)")
+    ap.add_argument("--sign-pack", default="fold",
+                    choices=["fold", "planes", "int8"],
+                    help="wire container for --uplink sign: 'fold' packs "
+                         "the signs into uint32 bitplanes at 1 bit/coord "
+                         "(exact zeros fold to +1, all-zero blocks keep "
+                         "scale 0 so the padded tail survives), 'planes' "
+                         "keeps a separate nonzero-mask plane (2 bits/"
+                         "coord, zeros exact), 'int8' is the PR 7 "
+                         "byte-per-coord container")
+    ap.add_argument("--sr-inkernel", action="store_true",
+                    help="draw the int8 stochastic-rounding uniforms "
+                         "inside the Pallas transmit kernel (pltpu PRNG) "
+                         "instead of streaming a host-drawn f32 row "
+                         "through HBM; compiled mode only (ignored under "
+                         "interpret / --backend jnp), same one-block-"
+                         "scale quantization contract, different uniform "
+                         "stream — not bitwise vs the host-drawn path")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="keep a second resident copy of the slab state "
+                         "across the scan dispatch instead of donating "
+                         "the input slabs to the compiled runner "
+                         "(donation is safe here: run_rounds_slab "
+                         "threads the state linearly)")
+    ap.add_argument("--donation-report", action="store_true",
+                    help="before training, lower+compile the round runner "
+                         "and print how many donated input bytes the "
+                         "executable actually aliases to outputs "
+                         "(verifies the slabs are updated in place, not "
+                         "copied)")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--alpha", type=float, default=1.5,
                     help="TRUE tail index of the channel's alpha-stable "
@@ -256,11 +295,16 @@ def main() -> None:
     if args.error_feedback and args.uplink == "f32":
         ap.error("--error-feedback needs a quantized uplink "
                  "(--uplink int8 or sign); the f32 payload has no residual")
+    if args.sr_inkernel and args.uplink != "int8":
+        ap.error("--sr-inkernel applies to the stochastically rounded "
+                 f"int8 uplink only (got --uplink {args.uplink})")
     ch = OTAChannelConfig(alpha=args.alpha, xi_scale=args.xi_scale,
                           backend=args.backend, interpret=interpret,
                           uplink=UplinkConfig(
                               mode=args.uplink,
-                              error_feedback=args.error_feedback),
+                              error_feedback=args.error_feedback,
+                              sign_pack=args.sign_pack,
+                              sr_inkernel=args.sr_inkernel),
                           downlink=args.downlink)
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
                         alpha=alpha_opt, beta2=0.3, backend=args.backend,
@@ -277,8 +321,12 @@ def main() -> None:
         weights = tuple(float(len(p)) for p in parts)
     fl = FLConfig(n_clients=args.clients, client_chunk=args.client_chunk,
                   sample_rate=args.sample_rate, client_weights=weights)
+    # The driver threads the state linearly through run_rounds_slab, so
+    # donating the slabs is safe by construction: each chunk's output
+    # state is the only live reference to the next chunk's input.
     run_chunk = make_slab_round_runner(lambda p, b: model.loss_fn(p, b), ch,
-                                       ad, fl, mesh=mesh)
+                                       ad, fl, mesh=mesh,
+                                       donate=not args.no_donate)
     params = model.init(jax.random.key(args.seed))
     spec = make_slab_spec(params, shards=n_shards)
     state = init_train_state(ad, params, spec=spec,
@@ -309,8 +357,24 @@ def main() -> None:
                       "--error-feedback is off; dropping it")
                 state = dataclasses.replace(state, ef=None)
 
-    t0 = time.time()
     base_key = jax.random.key(args.seed + 1)
+
+    if args.donation_report and start_round < args.rounds:
+        r = min(args.scan_rounds, args.rounds - start_round)
+        ks = jnp.stack([jax.random.fold_in(base_key, start_round + i)
+                        for i in range(r)])
+        bs = [batch_fn(start_round + i, None) for i in range(r)]
+        ex = jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+        rep = donation_report(run_chunk, state, ks, ex)
+        if rep["supported"]:
+            print(f"donation: {rep['aliased_bytes']:,} / "
+                  f"{rep['donated_bytes']:,} state bytes aliased "
+                  f"in-place ({len(rep['aliased_pairs'] or [])} buffers)")
+        else:
+            print("donation: memory analysis not exposed on this backend; "
+                  "aliasing unverified")
+
+    t0 = time.time()
 
     def chunk_hook(t, st, history):
         # run_rounds_slab clips chunks to the align periods, so every

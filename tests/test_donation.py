@@ -1,0 +1,125 @@
+"""Donated resident slabs (PR 8).
+
+``make_slab_round_runner(donate=True)`` donates the incoming
+``SlabTrainState`` buffers into the compiled scan chunk, so the
+executable aliases every state slab to its output instead of holding a
+second resident copy. Contracts:
+
+* ``donation_report`` proves the aliasing from the compiled
+  executable itself (memory analysis + the HLO ``input_output_alias``
+  table): every donated state byte is aliased, none copied;
+* the donated runner computes the SAME trajectory as the undonated one
+  (donation is an allocation contract, not a numeric change) — and the
+  donated input is genuinely consumed (jax raises on reuse);
+* ``run_rounds_slab`` threads state linearly, so a donated runner
+  drives it end to end;
+* ``donate=True`` without ``jit`` is rejected (there is nothing to
+  donate into).
+
+Backends whose compiled memory analysis does not expose alias sizes
+report ``supported=False`` and the assertions skip (not fail).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, donation_report, init_train_state,
+                        make_slab_round_runner, run_rounds_slab)
+
+N = 4
+ROUNDS = 3
+
+
+def _case(uplink="f32", ef=False):
+    params = {"w": jax.random.normal(jax.random.key(0), (300,)),
+              "b": jax.random.normal(jax.random.key(1), (7,))}
+
+    def loss_fn(p, batch):
+        return sum(jnp.mean((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(batch)))
+
+    batches = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.key(3), (N,) + p.shape),
+        params)
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                          uplink=UplinkConfig(mode=uplink,
+                                              error_feedback=ef))
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5, beta2=0.3)
+    fl = FLConfig(n_clients=N)
+    return params, loss_fn, batches, ch, ad, fl
+
+
+def _example_args(ad, params, batches, ef=False):
+    st = init_train_state(ad, params, error_feedback=ef)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(7), t)
+                      for t in range(ROUNDS)])
+    stacked = jax.tree.map(lambda b: jnp.stack([b] * ROUNDS), batches)
+    return st, keys, stacked
+
+
+@pytest.mark.parametrize("uplink,ef", [("f32", False), ("sign", True)])
+def test_donated_slabs_fully_aliased(uplink, ef):
+    """Every byte of the donated state — params, opt slabs, alpha_hat,
+    and (when on) the EF slab — is aliased input->output by the
+    compiled executable: the resident update is in-place, no 2x state
+    copy."""
+    params, loss_fn, batches, ch, ad, fl = _case(uplink, ef)
+    run = make_slab_round_runner(loss_fn, ch, ad, fl, donate=True)
+    st, keys, stacked = _example_args(ad, params, batches, ef)
+    rep = donation_report(run, st, keys, stacked)
+    if not rep["supported"]:
+        pytest.skip("compiled memory analysis does not expose aliasing "
+                    "on this backend")
+    assert rep["donated_bytes"] > 0
+    assert rep["aliased_bytes"] == rep["donated_bytes"]
+    n_leaves = len(jax.tree.leaves(st))
+    assert rep["aliased_pairs"] is not None
+    assert len(rep["aliased_pairs"]) == n_leaves
+
+
+def test_donated_trajectory_matches_and_consumes():
+    params, loss_fn, batches, ch, ad, fl = _case()
+    run_plain = make_slab_round_runner(loss_fn, ch, ad, fl)
+    run_don = make_slab_round_runner(loss_fn, ch, ad, fl, donate=True)
+    st_a, keys, stacked = _example_args(ad, params, batches)
+    st_b, _, _ = _example_args(ad, params, batches)
+    out_a, ms_a = run_plain(st_a, keys, stacked)
+    out_b, ms_b = run_don(st_b, keys, stacked)
+    for a, b in zip(jax.tree.leaves(out_a), jax.tree.leaves(out_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(ms_a.loss),
+                                  np.asarray(ms_b.loss))
+    # the donated argument is consumed — reuse must raise, a buffer
+    # that silently survived would mean no aliasing happened
+    deleted = [x for x in jax.tree.leaves(st_b)
+               if isinstance(x, jax.Array) and x.is_deleted()]
+    if deleted:
+        with pytest.raises(RuntimeError):
+            _ = np.asarray(deleted[0])
+    else:
+        pytest.skip("backend did not consume donated buffers")
+
+
+def test_run_rounds_slab_threads_donated_state():
+    """The driver threads state linearly (each chunk's output is the
+    next chunk's input), so a donating runner drives it end to end."""
+    params, loss_fn, batches, ch, ad, fl = _case()
+    run = make_slab_round_runner(loss_fn, ch, ad, fl, donate=True)
+    st = init_train_state(ad, params)
+    final, history = run_rounds_slab(
+        run, st, jax.random.key(9), lambda t, k: batches, 6, chunk=2)
+    assert len(history) == 6
+    assert np.isfinite(history[-1]["loss"])
+    assert int(final.step) == 6
+
+
+def test_donate_requires_jit():
+    params, loss_fn, batches, ch, ad, fl = _case()
+    with pytest.raises(ValueError, match="jit"):
+        make_slab_round_runner(loss_fn, ch, ad, fl, jit=False, donate=True)

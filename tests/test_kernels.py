@@ -230,3 +230,61 @@ def test_fused_server_update_all_modes(name, mode):
     with pytest.raises(ValueError):
         fused_server_update(g, st0, params, lr=0.01, beta1=0.9, beta2=0.3,
                             alpha=1.5, eps=1e-8, mode="rmsprop")
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode grid coarsening (PR 8)
+# ---------------------------------------------------------------------------
+
+def test_coarse_block_policy():
+    """coarse_block only ever grows the tile under interpret, in whole
+    multiples of the requested block, capped, and never past the padded
+    axis."""
+    from repro.kernels.interpret import INTERPRET_BLOCK_CAP, coarse_block
+    # compiled mode: untouched, whatever the size
+    assert coarse_block(1 << 20, 256, False) == 256
+    # already a single tile: untouched
+    assert coarse_block(100, 256, True) == 256
+    # grows to the whole padded axis...
+    assert coarse_block(1000, 256, True) == 1024
+    # ...capped (in multiples of block), for huge axes
+    big = coarse_block(1 << 22, 256, True)
+    assert big == (INTERPRET_BLOCK_CAP // 256) * 256
+    assert big % 256 == 0
+    # a custom cap below the axis still yields a block multiple
+    assert coarse_block(10_000, 256, True, cap=1000) == 768
+
+
+def test_coarse_block_bitwise_invariant():
+    """The coarsened interpret launch is BITWISE identical to the
+    fixed-tile launch on the channel output — per-column math and the
+    per-128-block scales are invariant to the d-axis tiling (the
+    assertion coarse_block's docstring promises). The pilot-stats
+    scalars reduce ACROSS tiles, so their accumulation order follows
+    the grid: those are held to ~1 ULP instead."""
+    import repro.kernels.ota_channel as oc
+
+    n, d = 4, 1000   # 4 x 256-tiles when fixed, 1 tile when coarsened
+    ks = jax.random.split(jax.random.key(42), 4)
+    g = jax.random.normal(ks[0], (n, d))
+    h = jnp.abs(jax.random.normal(ks[1], (n,))) + 0.1
+    u = jax.random.uniform(ks[2], (d,), minval=-1.5, maxval=1.5)
+    e = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.01
+
+    def launch():
+        return oc.ota_channel_slab(g, h, u, e, alpha=1.5, scale=0.1,
+                                   pilot_stats=True, block_cols=256,
+                                   interpret=True)
+
+    coarse_out, coarse_stats = launch()
+    orig = oc.coarse_block
+    oc.coarse_block = lambda n_, b, i, cap=None: b   # fixed-tile baseline
+    try:
+        fixed_out, fixed_stats = launch()
+    finally:
+        oc.coarse_block = orig
+    np.testing.assert_array_equal(np.asarray(coarse_out),
+                                  np.asarray(fixed_out))
+    for a, b in zip(coarse_stats, fixed_stats):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=0)

@@ -83,21 +83,82 @@ def _bench_subprocess(module: str, argv: list) -> list:
     return json.loads(out.stdout)
 
 
+def _load_prev_bench(filename: str) -> dict:
+    """The tracked repo-root artifact this run is about to replace (the
+    PREVIOUS PR's records), or {} when absent/unreadable."""
+    path = os.path.join(REPO_ROOT, filename)
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+        return prev if isinstance(prev, dict) else {}
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _delta_column(rec: dict, prev: dict, comparable: bool) -> str:
+    """Per-record delta vs the previous artifact's same-name record:
+    throughput change in percent (positive == faster) on the record's
+    headline rate (clients/sec for streamed records, rounds/sec
+    otherwise). Non-comparable runs (config fingerprint drift) refuse a
+    number rather than reporting a meaningless one."""
+    by_name = {r.get("name"): r for r in prev.get("records", [])}
+    old = by_name.get(rec["name"])
+    if old is None:
+        return "delta=new"
+    if not comparable:
+        return "delta=incomparable(fingerprint-drift)"
+    key = ("clients_per_sec" if "clients_per_sec" in rec
+           else "rounds_per_sec")
+    if key not in old or not old[key]:
+        return "delta=new-metric"
+    pct = (rec[key] / old[key] - 1.0) * 100.0
+    sha = str(prev.get("meta", {}).get("git_sha", "unknown"))[:7]
+    return f"delta_{key}={pct:+.1f}%_vs_{sha}"
+
+
 def _write_bench_json(filename: str, records: list, quick: bool,
-                      out_dir: str, config: dict) -> None:
+                      out_dir: str, config: dict,
+                      compare: bool = False) -> None:
     """Tracked artifacts live at the repo root; a --quick run is
     reduced-fidelity, so it writes under ``out_dir`` instead of
     clobbering them. The payload is ``{"meta": ..., "records": [...]}``
-    — see ``bench_meta`` for the provenance contract."""
+    — see ``bench_meta`` for the provenance contract.
+
+    ``compare`` appends a per-record delta column against the previous
+    repo-root artifact (matched by record name, attributed to its
+    ``meta.git_sha``) and, full runs only, carries the lineage forward:
+    ``meta.trajectory`` lists the provenance (sha, date, fingerprint)
+    of every prior run of this artifact, newest last, so a tracked
+    BENCH_*.json records its own perf history across PRs."""
+    meta = bench_meta(quick, config)
+    prev = _load_prev_bench(filename)
+    prev_meta = prev.get("meta", {}) if isinstance(
+        prev.get("meta"), dict) else {}
+    comparable = (prev_meta.get("config_fingerprint")
+                  == meta["config_fingerprint"])
     for r in records:
-        _csv(r["name"], r["us_per_round"], r["derived"])
+        derived = r["derived"]
+        if compare and prev:
+            derived = f"{derived};{_delta_column(r, prev, comparable)}"
+        _csv(r["name"], r["us_per_round"], derived)
+    if not quick:
+        # Lineage rides the artifact itself (bounded — the artifact
+        # must not grow without limit in git).
+        trajectory = list(prev_meta.get("trajectory", []))
+        if prev_meta.get("git_sha"):
+            trajectory.append({
+                k: prev_meta.get(k)
+                for k in ("git_sha", "date", "config_fingerprint")})
+        meta["trajectory"] = trajectory[-20:]
     dest = out_dir if quick else REPO_ROOT
     with open(os.path.join(dest, filename), "w") as f:
-        json.dump({"meta": bench_meta(quick, config), "records": records},
-                  f, indent=2)
+        json.dump({"meta": meta, "records": records}, f, indent=2)
 
 
-def run_round_step_bench(quick: bool, out_dir: str) -> list:
+def run_round_step_bench(quick: bool, out_dir: str,
+                         compare: bool = False) -> list:
     """Full-round benchmark, jnp vs pallas-slab vs mesh-sharded slab, on
     >= 2 model sizes; the records land in BENCH_round_step.json at the
     repo root so the perf trajectory is tracked across PRs."""
@@ -114,11 +175,12 @@ def run_round_step_bench(quick: bool, out_dir: str) -> list:
         ["--sizes", *[str(s) for s in sizes], "--iters", str(iters)]))
     _write_bench_json("BENCH_round_step.json", records, quick, out_dir,
                       {"bench": "round_step", "sizes": list(sizes),
-                       "iters": iters})
+                       "iters": iters}, compare=compare)
     return records
 
 
-def run_train_loop_bench(quick: bool, out_dir: str) -> list:
+def run_train_loop_bench(quick: bool, out_dir: str,
+                         compare: bool = False) -> list:
     """Multi-round loop benchmark: the slab-RESIDENT engine (scan over a
     SlabTrainState) vs the per-round pytree API, single-device and on a
     (2,)-mesh, with rounds/sec and per-round bytes-moved estimates. The
@@ -140,7 +202,7 @@ def run_train_loop_bench(quick: bool, out_dir: str) -> list:
     _write_bench_json("BENCH_train_loop.json", records, quick, out_dir,
                       {"bench": "train_loop", "sizes": list(sizes),
                        "rounds": rounds, "iters": iters,
-                       "stream_clients": stream_clients})
+                       "stream_clients": stream_clients}, compare=compare)
     return records
 
 
@@ -165,6 +227,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--out", default="results/bench")
+    ap.add_argument("--compare", action="store_true",
+                    help="append a per-record delta column vs the previous "
+                         "tracked BENCH_*.json (matched by record name, "
+                         "attributed to its meta.git_sha; refuses a number "
+                         "when the config fingerprints drifted)")
     args = ap.parse_args()
     if args.only and args.only not in BENCH_NAMES:
         ap.error(f"unknown bench name {args.only!r} for --only; "
@@ -189,16 +256,16 @@ def main() -> None:
     failed = False
     if not args.only or args.only == "round_step":
         try:
-            all_records["round_step"] = run_round_step_bench(args.quick,
-                                                             args.out)
+            all_records["round_step"] = run_round_step_bench(
+                args.quick, args.out, compare=args.compare)
         except Exception as e:  # noqa: BLE001
             _csv("round_step:ERROR", 0.0, repr(e)[:80])
             failed = True
 
     if not args.only or args.only == "train_loop":
         try:
-            all_records["train_loop"] = run_train_loop_bench(args.quick,
-                                                             args.out)
+            all_records["train_loop"] = run_train_loop_bench(
+                args.quick, args.out, compare=args.compare)
         except Exception as e:  # noqa: BLE001
             _csv("train_loop:ERROR", 0.0, repr(e)[:80])
             failed = True

@@ -181,7 +181,8 @@ def _measured_uplink_bytes(n_params: int, n_dev: int, uplink: str,
 
 
 def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
-                     mesh_shape=(2,), iters: int = 2) -> list:
+                     mesh_shape=(2,), iters: int = 2,
+                     comm_buckets: int = 4) -> list:
     import jax
     import jax.numpy as jnp
     from benchmarks.kernel_bench import _round_step_case
@@ -278,6 +279,26 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
                    backend, "resident", us, p, uplink, downlink,
                    sign_pack)
 
+        if backend == "pallas_sharded" and comm_buckets > 1:
+            # Overlap engine (PR 9): the f32 resident cell again with
+            # the MAC collective split into comm_buckets bucketed
+            # scatters interleaved with the per-bucket GEMM epilogue +
+            # fast-exp CMS transform, fused metric psum, prefetched
+            # downlink gather. Same wire bytes per round; compare its
+            # rounds_per_sec against the adjacent plain resident record.
+            ch = OTAChannelConfig(
+                alpha=1.5, xi_scale=0.1,
+                uplink=UplinkConfig(mode="f32"),
+                comm_buckets=comm_buckets)
+            run = make_slab_round_runner(loss_fn, ch, ad, fl,
+                                         backend=backend, mesh=mesh)
+            st0 = init_train_state(ad, params, shards=p)
+            us = timeit(lambda: run(st0, keys, stacked))
+            record(f"train_loop_{backend}_resident_cb{comm_buckets}"
+                   f"_{n_params}", backend, "resident", us, p, "f32")
+            records[-1]["comm_buckets"] = comm_buckets
+            records[-1]["derived"] += f";comm_buckets={comm_buckets}"
+
         # per-round pytree API: pack/convert at every round boundary
         # (f32 only — the boundary-materialisation cost it isolates is
         # uplink-independent)
@@ -299,7 +320,8 @@ def bench_train_loop(n_params: int, n_clients: int = 8, rounds: int = 8,
 
 def bench_streamed_loop(n_params: int, n_clients: int, chunk: int = 2000,
                         sample_rate: float = 1.0, rounds: int = 2,
-                        iters: int = 1, backend: str = "jnp") -> list:
+                        iters: int = 1, backend: str = "jnp",
+                        double_buffer: bool = False) -> list:
     """Streamed-client-axis rounds at population sizes the resident loop
     cannot hold: batches are synthesized in-graph per chunk, so peak
     memory is O(chunk * d) no matter how large N gets."""
@@ -324,7 +346,7 @@ def bench_streamed_loop(n_params: int, n_clients: int, chunk: int = 2000,
     ad = AdaptiveConfig(optimizer="adam_ota", lr=0.02, alpha=1.5,
                         backend=backend)
     fl = FLConfig(n_clients=n_clients, client_chunk=chunk,
-                  sample_rate=sample_rate)
+                  sample_rate=sample_rate, double_buffer=double_buffer)
     run = make_slab_round_runner(loss_fn, ch, ad, fl, backend=backend,
                                  batch_gen=batch_gen)
     st0 = init_train_state(ad, params)
@@ -339,16 +361,20 @@ def bench_streamed_loop(n_params: int, n_clients: int, chunk: int = 2000,
     us_round = (time.perf_counter() - t0) / iters / rounds * 1e6
     cps = n_clients * 1e6 / us_round
     peak = 4 * chunk * n_params            # streamed gradient stack bytes
+    if double_buffer:
+        peak *= 2                          # two resident pipeline slots
     resident = 4 * n_clients * n_params    # what the resident stack needs
+    suffix = "_dbuf" if double_buffer else ""
     return [dict(
-        name=f"train_loop_streamed_{n_clients}", backend=backend,
+        name=f"train_loop_streamed{suffix}_{n_clients}", backend=backend,
         variant="streamed", uplink="f32", interpret=_interpret_meta(),
-        n_params=n_params,
+        n_params=n_params, double_buffer=double_buffer,
         n_clients=n_clients, client_chunk=chunk, sample_rate=sample_rate,
         rounds=rounds, mesh="1", us_per_round=us_round, us_per_call=us_round,
         clients_per_sec=cps, rounds_per_sec=1e6 / us_round,
         stream_peak_bytes=peak, resident_equiv_bytes=resident,
         derived=(f"clients_per_sec={cps:.0f};chunk={chunk};"
+                 f"double_buffer={double_buffer};"
                  f"stream_peak_bytes={peak};resident_equiv_bytes={resident}"))]
 
 
@@ -378,18 +404,30 @@ def main() -> None:
                          "kernel loop)")
     ap.add_argument("--stream-only", action="store_true",
                     help="skip the resident/perround records")
+    ap.add_argument("--comm-buckets", type=positive_int, default=4,
+                    help="bucket count of the overlapped sharded "
+                         "resident record (1 skips the record)")
+    ap.add_argument("--no-stream-dbuf", action="store_true",
+                    help="skip the double-buffered twins of the "
+                         "streamed records")
     args = ap.parse_args()
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
     records = []
     if not args.stream_only:
         for n in args.sizes:
             records.extend(bench_train_loop(n, args.clients, args.rounds,
-                                            mesh_shape, args.iters))
+                                            mesh_shape, args.iters,
+                                            comm_buckets=args.comm_buckets))
     for n_clients in args.stream_clients:
         records.extend(bench_streamed_loop(
             args.stream_size, n_clients, args.stream_chunk,
             args.stream_sample_rate, args.stream_rounds,
             backend=args.stream_backend))
+        if not args.no_stream_dbuf:
+            records.extend(bench_streamed_loop(
+                args.stream_size, n_clients, args.stream_chunk,
+                args.stream_sample_rate, args.stream_rounds,
+                backend=args.stream_backend, double_buffer=True))
     json.dump(records, sys.stdout)
 
 

@@ -19,7 +19,8 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+import threading
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +29,36 @@ import numpy as np
 PyTree = Any
 _SEP = "|"
 _BF16 = "~bf16"   # npz cannot store ml_dtypes.bfloat16; stored as uint16 view
+
+# In-flight async checkpoint writers (save_slab_state(blocking=False)).
+# Joined at the next checkpoint boundary and by wait_for_async_saves();
+# the list only ever holds host-side snapshots, so a pending entry
+# never pins (or races) device buffers.
+_PENDING_SAVES: List[threading.Thread] = []
+_PENDING_LOCK = threading.Lock()
+_PENDING_ERRORS: List[BaseException] = []
+
+
+def wait_for_async_saves() -> None:
+    """Join every in-flight ``save_slab_state(blocking=False)`` write.
+
+    Call at loop exit (and before reading a file that may still be in
+    flight). Re-raises the first background write failure, so a crashed
+    async save cannot pass silently.
+    """
+    while True:
+        with _PENDING_LOCK:
+            if not _PENDING_SAVES:
+                break
+            t = _PENDING_SAVES.pop(0)
+        t.join()
+    with _PENDING_LOCK:
+        if _PENDING_ERRORS:
+            err = _PENDING_ERRORS[:]
+            _PENDING_ERRORS.clear()
+            raise RuntimeError(
+                f"{len(err)} async checkpoint write(s) failed; first "
+                f"failure: {err[0]!r}") from err[0]
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
@@ -88,14 +119,25 @@ def load(path: str, template: PyTree) -> PyTree:
         jax.tree_util.tree_structure(template), leaves)
 
 
-def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None
-                    ) -> None:
+def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None,
+                    blocking: bool = True) -> None:
     """Atomic save of a ``SlabTrainState`` (slabs stored raw, no unpack).
 
     The layout fingerprint (``slab_state.spec_meta``) rides along so
     ``load_slab_state`` can verify the resuming process rebuilds the
     SAME layout. ``extra`` adds named arrays (e.g. an rng key) under an
     ``x_`` prefix.
+
+    ``blocking=False`` overlaps the serialize+compress+write with the
+    training loop: the device->host snapshot happens HERE, synchronously
+    (``np.asarray`` materialises every slab before the call returns, so
+    a donating runner is free to consume the buffers immediately after),
+    and only the npz encode + atomic rename run on a background thread.
+    Any previous in-flight write is joined first — checkpoints hit disk
+    in order, at most one writer runs behind the loop, and the file
+    bytes are IDENTICAL to the blocking path (same arrays, same
+    deterministic zip). Join stragglers with
+    :func:`wait_for_async_saves` at loop exit.
     """
     from repro.core.slab_state import spec_meta
     arrays = {"step": np.asarray(state.step), "w": np.asarray(state.w),
@@ -108,7 +150,22 @@ def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None
         arrays["ef"] = np.asarray(state.ef)
     for k, v in (extra or {}).items():
         arrays[f"x_{k}"] = np.asarray(v)
-    _atomic_savez(path, arrays)
+    if blocking:
+        _atomic_savez(path, arrays)
+        return
+    wait_for_async_saves()
+
+    def write():
+        try:
+            _atomic_savez(path, arrays)
+        except BaseException as ex:          # surfaced by the next join
+            with _PENDING_LOCK:
+                _PENDING_ERRORS.append(ex)
+
+    t = threading.Thread(target=write, name="ckpt-async-save", daemon=True)
+    with _PENDING_LOCK:
+        _PENDING_SAVES.append(t)
+    t.start()
 
 
 def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
@@ -121,6 +178,7 @@ def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
     at save time.
     """
     from repro.core.slab_state import SlabTrainState, check_spec_meta
+    wait_for_async_saves()       # never read a file still in flight
     with np.load(path) as data:
         stored = {k: data[k] for k in data.files}
     check_spec_meta(spec, json.loads(str(stored["spec_meta"])), where=path)
@@ -144,6 +202,7 @@ def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
 
 
 def latest_round(ckpt_dir: str, prefix: str = "round_") -> Optional[str]:
+    wait_for_async_saves()       # an in-flight file must be listable
     if not os.path.isdir(ckpt_dir):
         return None
     rounds = []

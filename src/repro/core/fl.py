@@ -100,6 +100,16 @@ class FLConfig:
     # normalised by sum_n mask_n w_n, so any uniform tuple (c, ..., c)
     # reduces to the 1/N path.
     client_weights: Optional[Tuple[float, ...]] = None
+    # Double-buffered streaming (PR 9): the client scan carries a
+    # two-slot pipeline — chunk c's gradients are computed while chunk
+    # c-1's prefetched slot is folded into the accumulators in one
+    # fused pass — so the accumulation of one chunk overlaps the
+    # compute of the next. Same draws, same chunk schedule; the fold
+    # reassociates the per-chunk reduction, so the double-buffered
+    # round is held to the loose cross-engine tolerance tier, not the
+    # bitwise one (default off == today's serial scan, bit for bit).
+    # Requires client_chunk (there is no scan to pipeline without it).
+    double_buffer: bool = False
 
     def __post_init__(self):
         if not 0.0 < self.sample_rate <= 1.0:
@@ -110,6 +120,11 @@ class FLConfig:
         if self.client_chunk is not None and self.client_chunk < 1:
             raise ValueError(f"client_chunk must be >= 1, got "
                              f"{self.client_chunk}")
+        if self.double_buffer and self.client_chunk is None:
+            raise ValueError(
+                "double_buffer pipelines the STREAMED client scan; set "
+                "client_chunk (the resident round has no chunk schedule "
+                "to double-buffer)")
         if self.client_weights is not None:
             w = tuple(float(x) for x in self.client_weights)
             if len(w) != self.n_clients:
@@ -692,6 +707,39 @@ def donation_report(run_jit, *example_args) -> dict:
     return report
 
 
+class _DeadRoundAggregator:
+    """One WARNING line per log interval instead of one per dead round.
+
+    ``record(t)`` counts a dead round (no participants, server update
+    skipped); ``flush()`` emits a single summary line — count plus the
+    round span — if any were recorded since the last flush. The drivers
+    flush at every ``log_every`` boundary and once at the end of the
+    run, so a low ``sample_rate`` at small N (where a majority of
+    rounds can be dead) cannot flood the log between loss lines.
+    """
+
+    def __init__(self, log):
+        self._log = log
+        self._count = 0
+        self._first = self._last = 0
+
+    def record(self, t: int) -> None:
+        if self._count == 0:
+            self._first = t
+        self._last = t
+        self._count += 1
+
+    def flush(self) -> None:
+        if not self._count:
+            return
+        span = (f"round {self._first + 1:5d}" if self._first == self._last
+                else f"rounds {self._first + 1}-{self._last + 1}")
+        self._log(f"{span}  WARNING: {self._count} dead round(s) — no "
+                  "participants, server update skipped; consider a higher "
+                  "sample_rate")
+        self._count = 0
+
+
 def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
                     n_rounds: int, chunk: int = 8,
                     adaptive_cfg: Optional[AdaptiveConfig] = None,
@@ -727,6 +775,7 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
                          "keying); the sequential split would replay "
                          "round-0 draws")
     history = []
+    dead = _DeadRoundAggregator(log)
     t = start_round
     while t < n_rounds:
         r = min(chunk, n_rounds - t)
@@ -755,9 +804,7 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
                             "alpha_hat": float(ah[i]),
                             "n_participants": float(np_[i])})
             if float(np_[i]) == 0.0:
-                log(f"round {t + i + 1:5d}  WARNING: no participants "
-                    "(dead round, server update skipped) — consider a "
-                    "higher sample_rate")
+                dead.record(t + i)
         t += r
         if eval_fn is not None and eval_every and t % eval_every == 0:
             params, _ = unpack_train_state(adaptive_cfg, state)
@@ -765,9 +812,12 @@ def run_rounds_slab(run_chunk, state: SlabTrainState, key, batch_fn,
         if log_every:
             for i in range(t - r, t):
                 if (i + 1) % log_every == 0:
-                    _log_round(log, i, history[i])
+                    dead.flush()
+                    # history is indexed from start_round, i is absolute
+                    _log_round(log, i, history[i - start_round])
         if chunk_hook is not None:
             chunk_hook(t, state, history)
+    dead.flush()
     return state, history
 
 
@@ -802,6 +852,7 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
     Returns (params, opt_state, history list of dicts).
     """
     history = []
+    dead = _DeadRoundAggregator(log)
     for t in range(n_rounds):
         key, k_round, k_data = jax.random.split(key, 3)
         batches = batch_fn(t, k_data)
@@ -812,11 +863,12 @@ def run_rounds(round_step, params, opt_state, key, batch_fn, n_rounds: int,
                "alpha_hat": float(m.alpha_hat),
                "n_participants": float(m.n_participants)}
         if rec["n_participants"] == 0.0:
-            log(f"round {t + 1:5d}  WARNING: no participants (dead round, "
-                "server update skipped) — consider a higher sample_rate")
+            dead.record(t)
         if eval_fn is not None and eval_every and (t + 1) % eval_every == 0:
             rec.update(eval_fn(params))
         history.append(rec)
         if log_every and (t + 1) % log_every == 0:
+            dead.flush()
             _log_round(log, t, rec)
+    dead.flush()
     return params, opt_state, history

@@ -59,8 +59,9 @@ from typing import Any, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.channel import (DL_FOLD, OTAChannelConfig, cms_inputs,
-                                sample_fading, sample_interference, sr_inputs,
+from repro.core.channel import (CMS_E_FLOOR, CMS_U_BOUND, DL_FOLD,
+                                OTAChannelConfig, cms_inputs, sample_fading,
+                                sample_interference, sr_inputs,
                                 sr_kernel_seed)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
 from repro.kernels.interpret import resolve_interpret
@@ -107,6 +108,100 @@ def _cms_slab_inputs(kx: jax.Array, spec: SlabSpec
     u = jnp.pad(jnp.concatenate(us), (0, pad))
     e = jnp.pad(jnp.concatenate(es), (0, pad), constant_values=1.0)
     return u, e
+
+
+def _uniform_from_bits(bits: jax.Array, minval: float,
+                       maxval: float) -> jax.Array:
+    """``jax.random.uniform``'s f32 bit pipeline applied to raw threefry
+    words: randomize the 23 mantissa bits at exponent 1, bitcast to
+    [1, 2), shift-scale into [minval, maxval). Bitwise the values
+    ``uniform`` produces at these counter positions (jax's threefry
+    path with ``threefry_partitionable`` off — the repo-wide default;
+    ``tests/test_overlap.py`` pins the equality, so a jax upgrade that
+    reworks the pipeline fails loudly instead of silently skewing the
+    interference draws)."""
+    fb = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    f = jax.lax.bitcast_convert_type(fb, jnp.float32) - jnp.float32(1.0)
+    lo = jnp.float32(minval)
+    return jnp.maximum(lo, f * (jnp.float32(maxval) - lo) + lo)
+
+
+def cms_slab_inputs_partial(kx: jax.Array, spec: SlabSpec, n_shards: int,
+                            shard_index) -> Tuple[jax.Array, jax.Array]:
+    """This shard's 1/P share of ``_cms_slab_inputs``, as full-width
+    contribution rows whose element-wise sum over the mesh equals the
+    full draw — the overlap engine's replacement for P devices each
+    hashing the whole slab.
+
+    The threefry draw behind ``jax.random.uniform`` is counter-based:
+    for an l-length draw, output position j is lane 0 (j < h) or lane 1
+    (j >= h) of counter pair (j, j + h), h = ceil(l / 2) (odd l pads
+    counter value 0 and drops the final lane-1 word). Counters hash
+    independently, so each shard evaluates only its contiguous share of
+    the pairs — ``jax.extend.random.threefry_2x32`` on explicit counts
+    — converts those words with ``_uniform_from_bits``, and scatters
+    the values at their true positions into zero rows. The values ARE
+    the full-draws-sliced contract's (same draw, same order) at 1/P the
+    hashing work per device, and the combine rides the MAC
+    reduce-scatter instead of a dedicated collective.
+
+    The padding tail rides as u = 0, e = 0 (nobody's share writes it);
+    ``_cms_slab_inputs`` pins e's tail to 1.0, so consumers of the
+    combined rows re-pin it on their received slice (``pin_pad_tail``)
+    before the CMS transform."""
+    from jax.extend.random import threefry_2x32
+    u_parts, e_parts = [], []
+    for i, shape in enumerate(spec.shapes):
+        kl = jax.random.fold_in(kx, i)
+        ku, kw = jax.random.split(kl)
+        l = math.prod(shape) if shape else 1
+        h = (l + 1) // 2
+        s = -(-h // n_shards)
+        start = jnp.asarray(shard_index, jnp.uint32) * jnp.uint32(s)
+        c0 = start + jnp.arange(s, dtype=jnp.uint32)
+        if l % 2:
+            # Odd draw: the last pair's lane-1 counter is the zero pad.
+            c1 = jnp.where(c0 == jnp.uint32(h - 1), jnp.uint32(0),
+                           c0 + jnp.uint32(h))
+        else:
+            c1 = c0 + jnp.uint32(h)
+        counts = jnp.concatenate([c0, c1])
+
+        def leaf_rows(key, convert):
+            kd = jax.random.key_data(key)
+            bits = threefry_2x32((kd[0], kd[1]), counts)
+            vals = convert(bits)
+            # Out-of-range pairs (the ragged last share) write into the
+            # buffer's slack zone past h and are truncated away.
+            z = jnp.zeros((n_shards * s,), jnp.float32)
+            lane0 = jax.lax.dynamic_update_slice(z, vals[:s], (start,))
+            lane1 = jax.lax.dynamic_update_slice(z, vals[s:], (start,))
+            return jnp.concatenate([lane0[:h], lane1[:l - h]])
+
+        u_parts.append(leaf_rows(
+            ku, lambda b: _uniform_from_bits(b, -CMS_U_BOUND, CMS_U_BOUND)))
+        e_parts.append(leaf_rows(
+            kw, lambda b: jnp.maximum(
+                -jnp.log(_uniform_from_bits(
+                    b, float(jnp.finfo(jnp.float32).tiny), 1.0)),
+                jnp.float32(CMS_E_FLOOR))))
+    pad = spec.padded - spec.total
+    u = jnp.pad(jnp.concatenate(u_parts), (0, pad))
+    e = jnp.pad(jnp.concatenate(e_parts), (0, pad))
+    return u, e
+
+
+def pin_pad_tail(x, spec: SlabSpec, offset=None, width=None, value=1.0):
+    """Pin a slab's (or shard slice's) padding tail to ``value`` —
+    the post-combine fixup for ``cms_slab_inputs_partial``'s e rows
+    (the CMS fixed point wants e = 1 on padding, but the partial rows
+    sum the tail to 0)."""
+    if width is None:
+        width = spec.padded
+    pos = jnp.arange(width)
+    if offset is not None:
+        pos = pos + offset
+    return jnp.where(pos < spec.total, x, jnp.asarray(value, x.dtype))
 
 
 def restore_zero_tail(x, spec: SlabSpec, offset=None, width=None):

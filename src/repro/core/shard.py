@@ -116,7 +116,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.core.adaptive import AdaptiveConfig, slab_update_slabs
 from repro.core.channel import (OTAChannelConfig, cms_transform,
-                                sample_fading, sr_kernel_seed)
+                                cms_transform_fast, sample_fading,
+                                sr_kernel_seed)
 from repro.core.fl import FLConfig, RoundMetrics, _client_update
 from repro.core.ota import (_cms_slab_inputs, _interference_slab_inputs,
                             linear_shard_index, uplink_sr_slab_inputs)
@@ -312,8 +313,9 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
     packed = channel_cfg.uplink.packed_sign
     if packed:
         payload = pack_sign_slab(payload, planes=(packed == "planes"))
-    payload = exchange_uplink_payload(payload, axes, axis_sizes)
-    scales = exchange_uplink_payload(scales, axes, axis_sizes)
+    comm_buckets = channel_cfg.comm_buckets
+    payload = _bucketed_exchange(payload, comm_buckets, axes, axis_sizes)
+    scales = _bucketed_exchange(scales, comm_buckets, axes, axis_sizes)
 
     # Full-width draws (or the disabled channel's (0, 1, 0.0) fixed
     # point), sliced — same helper as the single-device engines.
@@ -344,17 +346,163 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
     return g_slice, clean_slice, stats
 
 
+def _bucketed_psum_scatter(rows: jax.Array, comm_buckets: int,
+                           axes: Tuple[str, ...],
+                           axis_sizes: Tuple[int, ...]) -> jax.Array:
+    """Bucketed reduce-scatter of full-width rows: the MAC collective
+    of the overlap engine.
+
+    Device p owns contiguous columns [p*shard_len, (p+1)*shard_len) of
+    each row, so bucket b must take the (P, B, sub) SUB-BLOCK view —
+    columns [b*sub, (b+1)*sub) within every device block, not a flat
+    split — and each of the B scatters moves a (R, P*sub) block whose
+    result is this device's b-th sub-slice; concatenating the B results
+    reassembles the slice exactly. Issued bucket by bucket so on
+    backends with async collectives bucket b's ring transfer is in
+    flight while bucket b+1's epilogue math runs. ``comm_buckets=1`` is
+    the single ``psum_scatter_slab`` call, graph-identical to the
+    default engine.
+    """
+    n_shards = math.prod(axis_sizes)
+    if comm_buckets == 1:
+        return psum_scatter_slab(rows, axes, dim=1)
+    nrows = rows.shape[0]
+    sub = rows.shape[1] // (n_shards * comm_buckets)
+    blocks = rows.reshape(nrows, n_shards, comm_buckets, sub)
+    outs = [psum_scatter_slab(
+        blocks[:, :, b, :].reshape(nrows, n_shards * sub), axes, dim=1)
+        for b in range(comm_buckets)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def _bucketed_mac_f32(g_stack: jax.Array, coeff: jax.Array,
+                      comm_buckets: int, axes: Tuple[str, ...],
+                      axis_sizes: Tuple[int, ...]):
+    """Resident-branch f32 MAC of the overlap engine: per bucket, the
+    faded partial and the clean diagnostic sum fold as ONE
+    (2, n_local) @ (n_local, cols) GEMM over that bucket's columns
+    (``coeff`` rows: ``h*(1/n)`` and the all-ones diagnostic), and its
+    reduce-scatter is issued before the next bucket's fold — transmit
+    epilogue b+1 overlaps collective b. The GEMM reassociates the
+    transmit kernel's per-row accumulation (tolerance parity tier, like
+    ``repro.core.stream``'s fold); ``comm_buckets=1`` callers keep the
+    kernel path instead. Returns ``(g_slice, clean_slice)``."""
+    n_shards = math.prod(axis_sizes)
+    n_loc = g_stack.shape[0]
+    sub = g_stack.shape[1] // (n_shards * comm_buckets)
+    blocks = g_stack.reshape(n_loc, n_shards, comm_buckets, sub)
+    outs = [psum_scatter_slab(
+        coeff @ blocks[:, :, b, :].reshape(n_loc, n_shards * sub),
+        axes, dim=1) for b in range(comm_buckets)]
+    both = jnp.concatenate(outs, axis=1)
+    return both[0], both[1]
+
+
+def _bucketed_exchange(x: jax.Array, comm_buckets: int,
+                       axes: Tuple[str, ...],
+                       axis_sizes: Tuple[int, ...]) -> jax.Array:
+    """Bucketed ``exchange_uplink_payload``: split the per-destination
+    payload columns into B buckets and exchange bucket by bucket, so
+    bucket b's ``all_to_all`` overlaps bucket b+1's staging. The result
+    is VALUE-identical to the single exchange (a column split of every
+    (source, dest) block, re-concatenated in order); ``comm_buckets=1``
+    is the plain call."""
+    if comm_buckets == 1:
+        return exchange_uplink_payload(x, axes, axis_sizes)
+    sub = x.shape[-1] // comm_buckets
+    outs = [exchange_uplink_payload(
+        x[..., b * sub:(b + 1) * sub], axes, axis_sizes)
+        for b in range(comm_buckets)]
+    return jnp.concatenate(outs, axis=-1)
+
+
+def _overlap_interference(channel_cfg: OTAChannelConfig, kx: jax.Array,
+                          sl, spec: SlabSpec, g_slice: jax.Array,
+                          track: bool):
+    """Interference injection for the overlap engine's f32 branches:
+    the SAME full-width per-leaf draws as the default engine (the PRNG
+    contract never changes with ``comm_buckets``), but the slice goes
+    through :func:`cms_transform_fast` — the single-exp reformulation,
+    ~2x cheaper and a few float32 ulps off the pinned form, which is
+    what puts the whole ``comm_buckets > 1`` engine on the tolerance
+    parity tier. Returns ``(g_slice, stats)``."""
+    if not channel_cfg.interference:
+        return g_slice, None
+    u, e = _cms_slab_inputs(kx, spec)
+    xi_slice = channel_cfg.xi_scale * cms_transform_fast(
+        sl(u), sl(e), channel_cfg.alpha)
+    g_slice = g_slice + xi_slice
+    stats = log_moment_stats(xi_slice) if track else None
+    return g_slice, stats
+
+
+def _make_bcast_fn(channel_cfg: OTAChannelConfig, spec: SlabSpec,
+                   axes: Tuple[str, ...]):
+    """The model-broadcast leg as a reusable closure: quantize this
+    device's slice (int8 downlink only; the SR draw is the one
+    full-width downlink draw off ``key``, sliced at the shard offset)
+    and all-gather to full width. Shared by the in-round broadcast and
+    the overlap engine's PREFETCHED broadcast (round t issues round
+    t+1's gather with round t+1's key, so the collective is in flight
+    across the round boundary)."""
+    dl_int8 = channel_cfg.downlink == "int8"
+    shard_len = spec.shard_len
+
+    def bcast(w_slice, key):
+        if dl_int8:
+            from repro.core.ota import (downlink_quantize_slab,
+                                        downlink_sr_slab_inputs)
+            idx = linear_shard_index(axes)
+            r_dl = jax.lax.dynamic_slice_in_dim(
+                downlink_sr_slab_inputs(key, spec.padded),
+                idx * shard_len, shard_len)
+            b_slice = downlink_quantize_slab(w_slice, r_dl)
+        else:
+            b_slice = w_slice
+        return all_gather_slab(b_slice, axes)
+
+    return bcast
+
+
 def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                      adaptive_cfg: AdaptiveConfig, fl_cfg: FLConfig,
                      axes: Tuple[str, ...], axis_sizes: Tuple[int, ...],
-                     spec: SlabSpec):
+                     spec: SlabSpec, prefetch_bcast: bool = False):
     """Per-device resident round: slices in, slices out (call inside
     ``shard_map``). One transmit and one ``adaptive_update_slab``
     launch per device, one ``all_gather`` (the model broadcast) and one
     MAC collective per round — ``psum_scatter`` of the f32 partial sums
     at ``uplink="f32"``, an ``all_to_all`` of int8 payloads + per-block
-    f32 scales (~4x fewer wire bytes) at ``uplink="int8"``."""
+    f32 scales (~4x fewer wire bytes) at ``uplink="int8"``.
+
+    ``channel_cfg.comm_buckets > 1`` selects the OVERLAP engine: the
+    MAC collective splits into B bucketed collectives interleaved with
+    the per-bucket transmit epilogue, the f32 branches fold the partial
+    sums as per-bucket GEMMs with the fast-exp CMS transform, and the
+    per-round scalar reductions (loss, both norms, pilot stats) fuse
+    into one stacked psum — the tolerance parity tier. ``comm_buckets
+    == 1`` keeps the default engine's graph bitwise-untouched.
+
+    ``prefetch_bcast`` (overlap runner only): the body takes two extra
+    trailing operands ``(next_key, w_bcast)`` — the CURRENT round's
+    already-gathered broadcast — skips its own gather, and returns the
+    NEXT round's broadcast as an extra output, issued with ``next_key``
+    at the end of this round's program so the gather is in flight
+    across the scan's round boundary."""
     n = fl_cfg.n_clients
+    comm_buckets = channel_cfg.comm_buckets
+    overlap = comm_buckets > 1
+    if overlap:
+        from repro.kernels.ota_channel import LANE
+        if (spec.shard_len // LANE) % comm_buckets != 0:
+            raise ValueError(
+                f"comm_buckets={comm_buckets} must divide the per-shard "
+                f"{LANE}-block count {spec.shard_len // LANE} "
+                f"(shard_len={spec.shard_len}); pick a power-of-two "
+                f"bucket count or a smaller one")
+    if prefetch_bcast and not overlap:
+        raise ValueError("prefetch_bcast is the overlap engine's round "
+                         "shape; it needs comm_buckets > 1")
     n_shards = math.prod(axis_sizes)
     n_local = n // n_shards
     shard_len = spec.shard_len
@@ -376,9 +524,10 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     n_chunks_loc = -(-n_local // chunk)
     n_local_pad = n_chunks_loc * chunk
     ragged = n_local_pad != n_local
+    bcast_fn = _make_bcast_fn(channel_cfg, spec, axes)
 
     def round_body(step, w_slice, opt_slices, alpha_hat, ef_rows, key,
-                   local_batches):
+                   local_batches, next_key=None, w_bcast=None):
         idx = linear_shard_index(axes)
         sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
                                                     shard_len)
@@ -392,15 +541,13 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
         # the full slab and slicing — the gathered broadcast is bitwise
         # the single-device reconstruction). The SR draw is the one
         # full-width downlink draw, sliced at the shard offset. The
-        # resident master slice w_slice stays f32.
-        if dl_int8:
-            from repro.core.ota import (downlink_quantize_slab,
-                                        downlink_sr_slab_inputs)
-            r_dl = sl(downlink_sr_slab_inputs(key, spec.padded))
-            bcast_slice = downlink_quantize_slab(w_slice, r_dl)
+        # resident master slice w_slice stays f32. Under the prefetched
+        # round shape the broadcast already happened — at the END of
+        # the previous round's program, with THIS round's key.
+        if prefetch_bcast:
+            w_full = w_bcast
         else:
-            bcast_slice = w_slice
-        w_full = all_gather_slab(bcast_slice, axes)
+            w_full = bcast_fn(w_slice, key)
         params = slab_to_tree(spec, w_full)
 
         kh, kx = jax.random.split(key)
@@ -419,6 +566,17 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 g_slice, clean_slice, stats, ef_new = _int8_uplink(
                     channel_cfg, g_stack, h_loc, key, kx, idx, spec, axes,
                     axis_sizes, n, pilot_stats=track, ef=ef)
+            elif overlap:
+                # Overlap engine: both reductions (faded partial +
+                # clean diagnostic) fold as one GEMM per bucket,
+                # interleaved with the bucketed reduce-scatter; the
+                # interference slice takes the fast-exp CMS transform.
+                coeff = jnp.stack([h_loc * (1.0 / n),
+                                   jnp.ones_like(h_loc)])
+                g_slice, clean_slice = _bucketed_mac_f32(
+                    g_stack, coeff, comm_buckets, axes, axis_sizes)
+                g_slice, stats = _overlap_interference(
+                    channel_cfg, kx, sl, spec, g_slice, track)
             else:
                 # Fused transmit: the faded partial sum over the local
                 # client rows, full slab width, analog (f32) wire format.
@@ -449,7 +607,12 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                         # epilogue — the f32 sharded interference is
                         # injected in jnp).
                         stats = log_moment_stats(xi_slice)
-            loss_metric = jax.lax.pmean(jnp.mean(losses), axes)
+            if overlap:
+                # Deferred: the loss term rides the fused metrics psum.
+                loss_in = jnp.mean(losses)
+                loss_div = jnp.asarray(float(n_shards), jnp.float32)
+            else:
+                loss_metric = jax.lax.pmean(jnp.mean(losses), axes)
             norm = den = jnp.asarray(float(n), jnp.float32)
             n_part = jnp.asarray(float(n), jnp.float32)
         else:
@@ -479,8 +642,9 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 h_loc = jnp.pad(h_loc, (0, n_local_pad - n_local))
                 m_loc = jnp.pad(m_loc, (0, n_local_pad - n_local))
 
-            def chunk_body(carry, c):
-                acc, clean, loss_sum = carry
+            def produce_loc(c):
+                """Chunk c's local client compute + operand slices (the
+                double-buffer SLOT; see repro.core.stream.produce)."""
                 start = c * chunk
                 if ragged:
                     cidx = jnp.minimum(start + jnp.arange(chunk),
@@ -497,6 +661,11 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 g_stack = stack_to_slab(spec, grads)
                 h_c = jax.lax.dynamic_slice_in_dim(h_loc, start, chunk)
                 m_c = jax.lax.dynamic_slice_in_dim(m_loc, start, chunk)
+                return g_stack, h_c, m_c, losses
+
+            def chunk_body(carry, c):
+                acc, clean, loss_sum = carry
+                g_stack, h_c, m_c, losses = produce_loc(c)
                 acc = ota_transmit_slab(g_stack, h_c, n_total=n_div,
                                         acc=acc,
                                         interpret=channel_cfg.interpret)
@@ -504,10 +673,34 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 loss_sum = loss_sum + jnp.sum(m_c * losses)
                 return (acc, clean, loss_sum), None
 
+            def fold_loc(carry, slot):
+                # Fused dual reduction of a completed slot (the
+                # double-buffered fold — same tolerance-tier
+                # reassociation as repro.core.stream.fold).
+                acc, clean, loss_sum = carry
+                g_stack, h_c, m_c, losses = slot
+                coeff = jnp.stack([h_c * (1.0 / n_div), m_c])
+                both = coeff @ g_stack
+                return (acc + both[0], clean + both[1],
+                        loss_sum + jnp.sum(m_c * losses))
+
+            def db_chunk_body(carry, c):
+                acc, clean, loss_sum, slot = carry
+                new_slot = produce_loc(c)
+                acc, clean, loss_sum = fold_loc((acc, clean, loss_sum),
+                                                slot)
+                return (acc, clean, loss_sum, new_slot), None
+
             zeros = jnp.zeros((spec.padded,), jnp.float32)
             carry = (zeros, zeros, jnp.zeros((), jnp.float32))
             if chunk == n_local:
                 carry, _ = chunk_body(carry, jnp.zeros((), jnp.int32))
+            elif fl_cfg.double_buffer:
+                carry = (*carry, produce_loc(0))
+                carry, _ = jax.lax.scan(
+                    db_chunk_body, carry,
+                    jnp.arange(1, n_chunks_loc, dtype=jnp.int32))
+                carry = fold_loc(carry[:3], carry[3])
             else:
                 carry, _ = jax.lax.scan(
                     chunk_body, carry,
@@ -557,6 +750,15 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 if channel_cfg.uplink.zero_fold and use_ef:
                     from repro.core.ota import restore_zero_tail
                     ef_new = restore_zero_tail(ef_new, spec)
+            elif overlap:
+                both = _bucketed_psum_scatter(
+                    jnp.stack([partial, clean_part]), comm_buckets, axes,
+                    axis_sizes)
+                g_slice, clean_slice = both[0], both[1]
+                if dynamic_norm:
+                    g_slice = g_slice / norm_safe
+                g_slice, stats = _overlap_interference(
+                    channel_cfg, kx, sl, spec, g_slice, track)
             else:
                 both = psum_scatter_slab(jnp.stack([partial, clean_part]),
                                          axes, dim=1)
@@ -571,13 +773,36 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                     if track:
                         stats = log_moment_stats(xi_slice)
             den = jnp.maximum(n_part, 1.0)
-            loss_metric = jax.lax.psum(loss_sum, axes) / den
+            if overlap:
+                loss_in = loss_sum
+                loss_div = den
+            else:
+                loss_metric = jax.lax.psum(loss_sum, axes) / den
 
         # --- alpha loop: psum the per-slice stats, fold into the EMA --
+        if overlap:
+            # Fused cross-device reduction: the loss term, both norm
+            # squared-sums and (when tracked) the 3 pilot moments ride
+            # ONE stacked psum instead of 3-4 scalar collectives —
+            # fewer rendezvous on the round's critical path. Elementwise
+            # the sums are the same reductions the default engine runs.
+            parts = [loss_in[None],
+                     jnp.sum(jnp.square(clean_slice))[None],
+                     jnp.sum(jnp.square(g_slice))[None]]
+            if track:
+                parts.append(stats if stats is not None
+                             else jnp.zeros((3,), jnp.float32))
+            red = jax.lax.psum(jnp.concatenate(parts), axes)
+            loss_metric = red[0] / loss_div
+            grad_norm_metric = jnp.sqrt(red[1])
+            noisy_norm_metric = jnp.sqrt(red[2])
+            if track:
+                stats = red[3:6]
         if track:
-            if stats is None:        # interference disabled: no residual
-                stats = jnp.zeros((3,), jnp.float32)
-            stats = jax.lax.psum(stats, axes)
+            if not overlap:
+                if stats is None:    # interference disabled: no residual
+                    stats = jnp.zeros((3,), jnp.float32)
+                stats = jax.lax.psum(stats, axes)
             alpha_hat = update_alpha_ema(alpha_hat, stats,
                                          adaptive_cfg.alpha_ema)
             alpha_arg = effective_alpha(alpha_hat)
@@ -616,16 +841,28 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                 alpha_metric = alpha_hat
 
         # Norms from per-slice squared sums: no full-width regather.
+        if not overlap:
+            grad_norm_metric = jnp.sqrt(jax.lax.psum(
+                jnp.sum(jnp.square(clean_slice)), axes))
+            noisy_norm_metric = jnp.sqrt(jax.lax.psum(
+                jnp.sum(jnp.square(g_slice)), axes))
         metrics = RoundMetrics(
             loss=loss_metric,
-            grad_norm=jnp.sqrt(jax.lax.psum(
-                jnp.sum(jnp.square(clean_slice)), axes)) / den,
-            noisy_grad_norm=jnp.sqrt(jax.lax.psum(
-                jnp.sum(jnp.square(g_slice)), axes)),
+            grad_norm=grad_norm_metric / den,
+            noisy_grad_norm=noisy_norm_metric,
             fading_mean=jnp.mean(h),
             alpha_hat=alpha_metric,
             n_participants=n_part,
         )
+        if prefetch_bcast:
+            # Issue the NEXT round's broadcast before handing the carry
+            # back to the scan: its gather is in flight while the scan
+            # crosses the round boundary into round t+1's client
+            # compute. The draw key is round t+1's — the int8 downlink
+            # reconstruction must be bitwise what an in-round broadcast
+            # would produce.
+            return (step + 1, w_new, new_opt, alpha_hat, ef_out, metrics,
+                    bcast_fn(w_new, next_key))
         return step + 1, w_new, new_opt, alpha_hat, ef_out, metrics
 
     return round_body
@@ -734,35 +971,67 @@ def make_shard_slab_runner(loss_fn, channel_cfg: OTAChannelConfig,
     use_ef = channel_cfg.uplink.error_feedback
     ef_spec = P(axes) if use_ef else P()
 
+    prefetch = channel_cfg.comm_buckets > 1
+
     def run(state: SlabTrainState, keys, client_batches):
         _check_spec_shards(state.spec, n_shards)
         _check_ef_rows(state, use_ef, n_shards)
+        spec_ = state.spec
         body = _make_round_body(loss_fn, channel_cfg, adaptive_cfg, fl_cfg,
-                                axes, axis_sizes, state.spec)
+                                axes, axis_sizes, spec_,
+                                prefetch_bcast=prefetch)
 
         def scan_rounds(step0, w_slice, opt_slices, alpha0, ef0, keys,
-                        batches):
-            def scanned(carry, xs):
-                step, w, opt, alpha_hat, ef = carry
-                key, batch = xs
-                step, w, opt, alpha_hat, ef, m = body(
-                    step, w, opt, alpha_hat, ef, key, batch)
-                return (step, w, opt, alpha_hat, ef), m
+                        keys_next, batches):
+            if prefetch:
+                # Overlap engine: the broadcast moves to the END of the
+                # previous round's program (issued with the next round's
+                # key), so its all_gather is in flight across the scan's
+                # round boundary; the prologue gathers round 0's
+                # broadcast once, outside the scan.
+                bcast = _make_bcast_fn(channel_cfg, spec_, axes)
 
-            (step, w, opt, alpha_hat, ef), ms = jax.lax.scan(
-                scanned, (step0, w_slice, opt_slices, alpha0, ef0),
-                (keys, batches))
+                def scanned(carry, xs):
+                    step, w, opt, alpha_hat, ef, wb = carry
+                    key, nkey, batch = xs
+                    step, w, opt, alpha_hat, ef, m, wb = body(
+                        step, w, opt, alpha_hat, ef, key, batch, nkey, wb)
+                    return (step, w, opt, alpha_hat, ef, wb), m
+
+                wb0 = bcast(w_slice, keys[0])
+                (step, w, opt, alpha_hat, ef, _), ms = jax.lax.scan(
+                    scanned,
+                    (step0, w_slice, opt_slices, alpha0, ef0, wb0),
+                    (keys, keys_next, batches))
+            else:
+                def scanned(carry, xs):
+                    step, w, opt, alpha_hat, ef = carry
+                    key, batch = xs
+                    step, w, opt, alpha_hat, ef, m = body(
+                        step, w, opt, alpha_hat, ef, key, batch)
+                    return (step, w, opt, alpha_hat, ef), m
+
+                (step, w, opt, alpha_hat, ef), ms = jax.lax.scan(
+                    scanned, (step0, w_slice, opt_slices, alpha0, ef0),
+                    (keys, batches))
             return step, w, opt, alpha_hat, ef, ms
 
         sharded = shard_map(
             scan_rounds, mesh,
-            in_specs=(P(), P(axes), P(axes), P(), ef_spec, P(),
+            in_specs=(P(), P(axes), P(axes), P(), ef_spec, P(), P(),
                       P(None, axes)),
             out_specs=(P(), P(axes), P(axes), P(), ef_spec, P()))
         ef_in = state.ef if use_ef else jnp.zeros((), jnp.float32)
+        if prefetch:
+            # Round t's body prefetches round t+1's broadcast with round
+            # t+1's key; the final round's prefetch result is dropped,
+            # so its (arbitrary) key only has to exist.
+            keys_next = jnp.concatenate([keys[1:], keys[-1:]])
+        else:
+            keys_next = jnp.zeros((), jnp.float32)
         new_step, w, opt, alpha_hat, ef_out, ms = sharded(
             state.step, state.w, state.opt, state.alpha_hat, ef_in, keys,
-            client_batches)
+            keys_next, client_batches)
         return SlabTrainState(new_step, w, tuple(opt), alpha_hat,
                               state.spec, ef_out if use_ef else state.ef
                               ), ms

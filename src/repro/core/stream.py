@@ -197,8 +197,10 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
 
     ragged = n_padded != n
 
-    def body(carry, c):
-        acc, clean, loss_sum = carry
+    def produce(c):
+        """Chunk c's client compute + per-chunk operand slices: the
+        SLOT of the double-buffered pipeline (everything chunk c
+        contributes, before any accumulator is touched)."""
         start = c * chunk
         idx = start + jnp.arange(chunk)
         if ragged:
@@ -219,10 +221,39 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
         g_stack = stack_to_slab(spec, grads)
         h_c = jax.lax.dynamic_slice_in_dim(h_sched, start, chunk)
         m_c = jax.lax.dynamic_slice_in_dim(mask_sched, start, chunk)
+        return g_stack, h_c, m_c, losses
+
+    def body(carry, c):
+        acc, clean, loss_sum = carry
+        g_stack, h_c, m_c, losses = produce(c)
         acc = transmit(g_stack, h_c, acc)
         clean = clean + jnp.sum(m_c[:, None] * g_stack, axis=0)
         loss_sum = loss_sum + jnp.sum(m_c * losses)
         return (acc, clean, loss_sum), None
+
+    def fold(carry, slot):
+        """Double-buffered fold: one fused pass folds a completed slot
+        into the accumulators. The faded and clean partials reduce
+        TOGETHER as a (2, chunk) @ (chunk, d) product — one read of the
+        gradient stack instead of two elementwise-multiply+reduce
+        passes — which reassociates the per-chunk sum (the documented
+        tolerance-tier trade of ``FLConfig.double_buffer``)."""
+        acc, clean, loss_sum = carry
+        g_stack, h_c, m_c, losses = slot
+        coeff = jnp.stack([h_c * (1.0 / n_div), m_c])
+        both = coeff @ g_stack
+        return (acc + both[0], clean + both[1],
+                loss_sum + jnp.sum(m_c * losses))
+
+    def db_body(carry, c):
+        """Two-slot pipeline step: issue chunk c's client compute, then
+        fold chunk c-1's prefetched slot. The two stages share no data
+        dependency, so the runtime is free to run chunk c's gradients
+        while chunk c-1's accumulation is in flight."""
+        acc, clean, loss_sum, slot = carry
+        new_slot = produce(c)
+        acc, clean, loss_sum = fold((acc, clean, loss_sum), slot)
+        return (acc, clean, loss_sum, new_slot), None
 
     zeros = jnp.zeros((spec.padded,), jnp.float32)
     if n == chunk:
@@ -238,6 +269,16 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
         acc = transmit(g_stack, h_eff, zeros)
         clean = jnp.sum(mask[:, None] * g_stack, axis=0)
         loss_sum = jnp.sum(mask * losses)
+    elif fl_cfg.double_buffer:
+        # Prologue: chunk 0 fills the slot before the pipeline starts;
+        # steady state overlaps produce(c) with fold(c-1); the epilogue
+        # drains the final slot. Same draws, same chunk schedule, same
+        # batch selection as the serial scan — only the accumulation
+        # order moves.
+        carry = (zeros, zeros, jnp.zeros((), jnp.float32), produce(0))
+        carry, _ = jax.lax.scan(db_body, carry,
+                                jnp.arange(1, n_chunks, dtype=jnp.int32))
+        acc, clean, loss_sum = fold(carry[:3], carry[3])
     else:
         carry = (zeros, zeros, jnp.zeros((), jnp.float32))
         carry, _ = jax.lax.scan(body, carry,

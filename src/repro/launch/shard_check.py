@@ -59,6 +59,15 @@ model broadcast. All three make the slab-resident jnp loop the oracle
 (the pytree API refuses them), and the quantized tiers use the loose
 quantization-error tolerance.
 
+``--comm-buckets`` switches the pallas_sharded rows to the OVERLAPPED
+round (PR 9): the uplink exchange splits into B slab buckets of
+psum_scatter, the scalar metrics fuse into one stacked psum, and the
+downlink all_gather for round t+1 is issued at the end of round t's
+body. References keep the default single-collective round, so the
+parity columns measure the bucketed engine against today's graph —
+a TOLERANCE tier on f32 (default 1e-4: bucketed summation order plus
+the fast-exp CMS transform), still bitwise on rerun determinism.
+
 The XLA flag below MUST precede any jax import (jax locks the device
 count at first backend init); at least ``--host-devices`` /
 ``$REPRO_HOST_DEVICES`` (default 8) host devices are forced, or the
@@ -74,6 +83,7 @@ from repro.launch.hostdev import (force_host_devices, mesh_device_count,
 force_host_devices(mesh_device_count(sys.argv, "--meshes"))
 
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -211,6 +221,15 @@ def main(argv=None) -> int:
                          "alpha operand; the reference becomes the "
                          "slab-resident jnp loop and the alpha_hat "
                          "deviation joins the parity columns")
+    ap.add_argument("--comm-buckets", type=positive_int, default=1,
+                    help="bucket the sharded MAC exchange into this many "
+                         "slab buckets (the overlapped round, PR 9): the "
+                         "pallas_sharded rows switch to bucketed "
+                         "psum_scatter + fused metrics psum + prefetched "
+                         "broadcast while every reference stays on the "
+                         "default engine; > 1 loosens the default f32 "
+                         "tol to 1e-4 (bucketed reassociation + fast-exp "
+                         "CMS transform are a tolerance tier)")
     ap.add_argument("--tol", type=float, default=None,
                     help="max relative end-of-trajectory deviation "
                          "(default 1e-5 for --uplink f32, 0.25 for int8)")
@@ -219,14 +238,26 @@ def main(argv=None) -> int:
         ap.error("--error-feedback needs a quantized uplink "
                  "(--uplink int8 or sign)")
     if args.tol is None:
-        args.tol = (1e-5 if args.uplink == "f32"
-                    and args.downlink == "f32" else 0.25)
+        if args.uplink == "f32" and args.downlink == "f32":
+            args.tol = 1e-4 if args.comm_buckets > 1 else 1e-5
+        else:
+            args.tol = 0.25
 
-    params = {
-        "emb": jax.random.normal(jax.random.key(0), (7, 33)),
-        "w": jax.random.normal(jax.random.key(1), (257,)),
-        "b": jax.random.normal(jax.random.key(2), (1,)),
-    }
+    if args.comm_buckets > 1:
+        # The bucketed engine needs the per-shard LANE-block count
+        # divisible by B on every mesh under test: 4096 elements give
+        # 32/16/8/4 blocks on 1/2/4/8 shards — divisible by 2 and 4.
+        params = {
+            "emb": jax.random.normal(jax.random.key(0), (16, 128)),
+            "w": jax.random.normal(jax.random.key(1), (2047,)),
+            "b": jax.random.normal(jax.random.key(2), (1,)),
+        }
+    else:
+        params = {
+            "emb": jax.random.normal(jax.random.key(0), (7, 33)),
+            "w": jax.random.normal(jax.random.key(1), (257,)),
+            "b": jax.random.normal(jax.random.key(2), (1,)),
+        }
     batches = jax.tree.map(
         lambda p: jax.random.normal(jax.random.key(3),
                                     (args.clients,) + p.shape), params)
@@ -241,7 +272,13 @@ def main(argv=None) -> int:
     print(f"uplink={args.uplink} downlink={args.downlink} "
           f"ef={args.error_feedback} track_alpha={args.track_alpha} "
           f"chunk={args.client_chunk} sample_rate={args.sample_rate:g} "
+          f"comm_buckets={args.comm_buckets} "
           f"rounds={args.rounds} tol={args.tol:g}")
+    # Only the sharded rows run the overlap engine; the references keep
+    # the default (comm_buckets=1) round so the check measures the
+    # bucketed engine against today's graph.
+    ch_mesh = (dataclasses.replace(ch, comm_buckets=args.comm_buckets)
+               if args.comm_buckets > 1 else ch)
     # Streamed / sampled rounds — and the EF / quantized-downlink wire
     # formats — only exist on the slab-resident engines: the oracle
     # becomes the slab-resident jnp loop and the pytree-per-round rows
@@ -273,15 +310,15 @@ def main(argv=None) -> int:
             mesh = make_client_mesh(shape)
             n_shards = int(np.prod(shape))
             out = _run_resident("pallas_sharded", mesh, n_shards, params,
-                                batches, ch, ad, fl, args.rounds)
+                                batches, ch_mesh, ad, fl, args.rounds)
             devs, ok = _devs(ref, out, args.tol, args.track_alpha)
             failures += not ok
             print(f"{opt:12s} resident mesh={mesh_str:5s} "
                   + " ".join(f"{k}={v:.2e}" for k, v in devs.items())
                   + ("  OK" if ok else "  FAIL"))
             if opt in PERROUND_OPTIMIZERS and not slab_ref:
-                out_pr = _run_perround(mesh, params, batches, ch, ad, fl,
-                                       args.rounds)
+                out_pr = _run_perround(mesh, params, batches, ch_mesh, ad,
+                                       fl, args.rounds)
                 devs, ok = _devs(ref, out_pr, args.tol)
                 failures += not ok
                 print(f"{opt:12s} perround mesh={mesh_str:5s} "
@@ -290,7 +327,7 @@ def main(argv=None) -> int:
             # Seeded determinism: the identical trajectory must be
             # bitwise equal on rerun.
             out2 = _run_resident("pallas_sharded", mesh, n_shards, params,
-                                 batches, ch, ad, fl, args.rounds)
+                                 batches, ch_mesh, ad, fl, args.rounds)
             for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
                 if not np.array_equal(np.asarray(x), np.asarray(y)):
                     print(f"{opt:12s} resident mesh={mesh_str}: "

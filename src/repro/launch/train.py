@@ -173,6 +173,26 @@ def main() -> None:
                          "interpret / --backend jnp), same one-block-"
                          "scale quantization contract, different uniform "
                          "stream — not bitwise vs the host-drawn path")
+    ap.add_argument("--comm-buckets", type=int, default=1,
+                    help="split the sharded MAC collective into this many "
+                         "slab buckets, interleaved with the per-bucket "
+                         "transmit epilogue (pallas_sharded only; the "
+                         "overlap engine, tolerance-tier vs the default); "
+                         "1 (default) keeps the single-collective graph "
+                         "bitwise")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="two-slot pipeline for the streamed client scan: "
+                         "chunk c's gradients are computed while chunk "
+                         "c-1's slot folds into the accumulators (needs "
+                         "--client-chunk; tolerance-tier reassociation "
+                         "of the per-chunk fold)")
+    ap.add_argument("--ckpt-async", action="store_true",
+                    help="write checkpoints on a background thread: the "
+                         "host snapshot is taken synchronously (safe "
+                         "under donation), the npz encode + atomic "
+                         "rename overlap training; files are bitwise "
+                         "identical to the blocking path and all writes "
+                         "are joined at loop exit")
     ap.add_argument("--no-donate", action="store_true",
                     help="keep a second resident copy of the slab state "
                          "across the scan dispatch instead of donating "
@@ -298,6 +318,14 @@ def main() -> None:
     if args.sr_inkernel and args.uplink != "int8":
         ap.error("--sr-inkernel applies to the stochastically rounded "
                  f"int8 uplink only (got --uplink {args.uplink})")
+    if args.comm_buckets < 1:
+        ap.error("--comm-buckets must be >= 1")
+    if args.comm_buckets > 1 and args.backend != "pallas_sharded":
+        ap.error("--comm-buckets > 1 buckets the sharded MAC collective; "
+                 f"it needs --backend pallas_sharded (got {args.backend})")
+    if args.double_buffer and args.client_chunk is None:
+        ap.error("--double-buffer pipelines the streamed client scan; "
+                 "it needs --client-chunk")
     ch = OTAChannelConfig(alpha=args.alpha, xi_scale=args.xi_scale,
                           backend=args.backend, interpret=interpret,
                           uplink=UplinkConfig(
@@ -305,7 +333,8 @@ def main() -> None:
                               error_feedback=args.error_feedback,
                               sign_pack=args.sign_pack,
                               sr_inkernel=args.sr_inkernel),
-                          downlink=args.downlink)
+                          downlink=args.downlink,
+                          comm_buckets=args.comm_buckets)
     ad = AdaptiveConfig(optimizer=args.optimizer, lr=args.lr,
                         alpha=alpha_opt, beta2=0.3, backend=args.backend,
                         interpret=interpret)
@@ -320,7 +349,8 @@ def main() -> None:
     if args.client_weights == "datasize":
         weights = tuple(float(len(p)) for p in parts)
     fl = FLConfig(n_clients=args.clients, client_chunk=args.client_chunk,
-                  sample_rate=args.sample_rate, client_weights=weights)
+                  sample_rate=args.sample_rate, client_weights=weights,
+                  double_buffer=args.double_buffer)
     # The driver threads the state linearly through run_rounds_slab, so
     # donating the slabs is safe by construction: each chunk's output
     # state is the only live reference to the next chunk's input.
@@ -388,7 +418,8 @@ def main() -> None:
                   f"({dt / (t - start_round):.2f}s/round)", flush=True)
         if args.ckpt_dir and args.ckpt_every and t % args.ckpt_every == 0:
             ckpt.save_slab_state(os.path.join(args.ckpt_dir,
-                                              f"round_{t}.npz"), st)
+                                              f"round_{t}.npz"), st,
+                                 blocking=not args.ckpt_async)
 
     state, history = run_rounds_slab(
         run_chunk, state, None, batch_fn, args.rounds,
@@ -396,6 +427,8 @@ def main() -> None:
         key_fn=lambda t: jax.random.fold_in(base_key, t),
         start_round=start_round, chunk_hook=chunk_hook,
         align=(args.log_every, args.ckpt_every if args.ckpt_dir else 0))
+    if args.ckpt_async:
+        ckpt.wait_for_async_saves()
     if args.history_out:
         os.makedirs(os.path.dirname(os.path.abspath(args.history_out)),
                     exist_ok=True)

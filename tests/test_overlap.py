@@ -1,0 +1,390 @@
+"""Overlapped round (PR 9): bucketed MAC collectives, double-buffered
+client streaming, async slab checkpointing.
+
+Parity tiers under test:
+
+* ``comm_buckets=1`` and ``double_buffer=False`` ARE the default
+  configs — the overlap knobs off must leave the existing engine's
+  graph (bitwise, covered here as rerun determinism of the explicit-
+  default config against the implicit one);
+* ``comm_buckets > 1`` on the f32 uplink is a TOLERANCE tier: the
+  bucketed psum_scatter reassociates the f32 MAC reduction and the
+  interference draw crosses ``cms_transform_fast`` (fast-exp identity,
+  ~5e-7 relative);
+* ``comm_buckets > 1`` on QUANTIZED uplinks is BITWISE: bucketing a
+  ppermute payload is a value-identical permutation of int8/packed
+  words, so the quantized wire cannot drift;
+* async checkpoints are BITWISE file-identical to blocking saves (the
+  device->host snapshot is synchronous; only the npz encode + rename
+  run behind the loop), and a resume from an async file is bitwise.
+
+The in-process tests run on the (1,)-mesh (the pytest process keeps
+jax's real single-device view); the multi-device overlap acceptance
+runs ``repro.launch.shard_check --comm-buckets 4`` in a subprocess that
+forces 8 host devices, exactly like the PR 3 acceptance.
+"""
+
+import dataclasses
+import hashlib
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint as ckpt
+from repro.compat import make_auto_mesh
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        UplinkConfig, init_train_state,
+                        make_slab_round_runner, make_slab_round_step)
+from repro.core.channel import CMS_U_BOUND, cms_transform, cms_transform_fast
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# 486 elements -> one 512-wide (4 LANE-block) shard on the (1,)-mesh,
+# so comm_buckets in {1, 2, 4} is valid in-process and 3 is not, and
+# the 26-element pad tail crosses the overlap interference path.
+SHAPES = [(3, 45), (130,), (1,), (220,)]
+N = 8
+
+
+def _params(key=None):
+    ks = jax.random.split(key or jax.random.key(0), len(SHAPES))
+    return {f"p{i}": jax.random.normal(k, s)
+            for i, (k, s) in enumerate(zip(ks, SHAPES))}
+
+
+def _batches(params, n=N, key=None):
+    return jax.tree.map(
+        lambda p: jax.random.normal(key or jax.random.key(3),
+                                    (n,) + p.shape), params)
+
+
+def _loss_fn(p, batch):
+    return sum(jnp.mean((x - t) ** 2)
+               for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(batch)))
+
+
+def _configs(uplink="f32", comm_buckets=1, alpha=1.5, downlink="f32",
+             error_feedback=False, sign_pack="fold", **fl_kw):
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1,
+                          comm_buckets=comm_buckets, downlink=downlink,
+                          uplink=UplinkConfig(mode=uplink,
+                                              sign_pack=sign_pack,
+                                              error_feedback=error_feedback))
+    ad = AdaptiveConfig(optimizer=fl_kw.pop("optimizer", "adam_ota"),
+                        lr=0.05, alpha=alpha, beta2=0.3)
+    return ch, ad, FLConfig(n_clients=fl_kw.pop("n_clients", N), **fl_kw)
+
+
+def _run_sharded(ch, ad, fl, rounds=3, params=None, batches=None):
+    """Slab-resident pallas_sharded trajectory on the (1,)-mesh."""
+    params = params or _params()
+    batches = batches if batches is not None else _batches(params)
+    mesh = make_auto_mesh((1,), ("data",))
+    run = make_slab_round_runner(_loss_fn, ch, ad, fl,
+                                 backend="pallas_sharded", mesh=mesh)
+    st = init_train_state(ad, params, shards=1,
+                          error_feedback=ch.uplink.error_feedback)
+    keys = jnp.stack([jax.random.fold_in(jax.random.key(6), t)
+                      for t in range(rounds)])
+    st, ms = run(st, keys, jax.tree.map(
+        lambda b: jnp.stack([b] * rounds), batches))
+    return st, ms
+
+
+def _state_arrays(st):
+    arrs = [st.w, *st.opt, st.alpha_hat]
+    if getattr(st, "ef", None) is not None:
+        arrs.append(st.ef)
+    return arrs
+
+
+def _assert_state_close(st_a, st_b, tol):
+    for a, b in zip(_state_arrays(st_a), _state_arrays(st_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=tol, atol=tol)
+
+
+def _assert_state_bitwise(st_a, st_b):
+    for a, b in zip(_state_arrays(st_a), _state_arrays(st_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (b): bucketed MAC collectives
+# ---------------------------------------------------------------------------
+
+def test_bucket_count_one_is_bitwise_default():
+    """comm_buckets=1 keeps the existing single-collective graph: the
+    explicit-default config must be bitwise equal to the implicit one
+    (no overlap machinery may leak into the B=1 round)."""
+    ch, ad, fl = _configs(comm_buckets=1)
+    st_a, ms_a = _run_sharded(ch, ad, fl)
+    st_b, ms_b = _run_sharded(dataclasses.replace(ch), ad, fl)
+    _assert_state_bitwise(st_a, st_b)
+    np.testing.assert_array_equal(np.asarray(ms_a.loss),
+                                  np.asarray(ms_b.loss))
+
+
+@pytest.mark.parametrize("optimizer,alpha", [("adam_ota", 1.5),
+                                             ("fedavg", 1.5),
+                                             ("adam_ota", "auto")])
+def test_bucketed_engine_close_to_default(optimizer, alpha):
+    """The overlapped round (B=4: bucketed psum_scatter, fused metrics
+    psum, fast-exp CMS draw, prefetched broadcast) stays within the f32
+    tolerance tier of the default engine, with and without the closed
+    alpha loop."""
+    ch1, ad, fl = _configs(optimizer=optimizer, alpha=alpha)
+    ch4 = dataclasses.replace(ch1, comm_buckets=4)
+    st_1, ms_1 = _run_sharded(ch1, ad, fl, rounds=4)
+    st_4, ms_4 = _run_sharded(ch4, ad, fl, rounds=4)
+    _assert_state_close(st_1, st_4, 1e-4)
+    assert int(st_4.step) == 4
+    np.testing.assert_allclose(np.asarray(ms_1.loss),
+                               np.asarray(ms_4.loss), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ms_1.noisy_grad_norm),
+                               np.asarray(ms_4.noisy_grad_norm),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_bucketed_dynamic_round_close():
+    """The dynamic (streamed + sampled) round body buckets its stacked
+    [partial, clean] scatter the same way: B=4 within tolerance of B=1
+    with Bernoulli participation on."""
+    ch1, ad, fl = _configs(client_chunk=2, sample_rate=0.8)
+    ch4 = dataclasses.replace(ch1, comm_buckets=4)
+    st_1, ms_1 = _run_sharded(ch1, ad, fl, rounds=4)
+    st_4, ms_4 = _run_sharded(ch4, ad, fl, rounds=4)
+    _assert_state_close(st_1, st_4, 1e-4)
+    # the participation draw is keyed off the round key alone: B cannot
+    # change WHO participates
+    np.testing.assert_array_equal(np.asarray(ms_1.n_participants),
+                                  np.asarray(ms_4.n_participants))
+
+
+@pytest.mark.parametrize("uplink,downlink,ef", [("int8", "f32", False),
+                                                ("sign", "int8", True)])
+def test_bucketed_quantized_uplink_is_bitwise(uplink, downlink, ef):
+    """Bucketing a quantized exchange is a value-identical permutation
+    of the wire words (the quantize epilogue runs before the split), so
+    B=4 must reproduce B=1 BITWISE — including the EF residual slab and
+    the int8 downlink (whose SR draw is keyed per round, prefetch or
+    not)."""
+    ch1, ad, fl = _configs(uplink=uplink, downlink=downlink,
+                           error_feedback=ef)
+    ch4 = dataclasses.replace(ch1, comm_buckets=4)
+    st_1, ms_1 = _run_sharded(ch1, ad, fl, rounds=3)
+    st_4, ms_4 = _run_sharded(ch4, ad, fl, rounds=3)
+    _assert_state_bitwise(st_1, st_4)
+    np.testing.assert_array_equal(np.asarray(ms_1.loss),
+                                  np.asarray(ms_4.loss))
+
+
+def test_comm_buckets_validation():
+    """B must divide the per-shard LANE-block count (4 here), and the
+    config refuses non-positive counts outright."""
+    with pytest.raises(ValueError, match="comm_buckets"):
+        OTAChannelConfig(comm_buckets=0)
+    ch, ad, fl = _configs(comm_buckets=3)
+    with pytest.raises(ValueError, match="comm_buckets"):
+        _run_sharded(ch, ad, fl, rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (a): double-buffered client streaming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_double_buffer_close_to_plain_stream(backend):
+    """The two-slot scan changes only the fold order of the chunked
+    client reduction: dbuf on vs off stays within the cross-engine
+    tolerance on every backend."""
+    ch, ad, fl_p = _configs(client_chunk=2)
+    fl_d = dataclasses.replace(fl_p, double_buffer=True)
+    step = make_slab_round_step(_loss_fn, ch, ad, fl_p, backend=backend)
+    step_d = make_slab_round_step(_loss_fn, ch, ad, fl_d, backend=backend)
+    params = _params()
+    batches = _batches(params)
+    st_p, st_d = (init_train_state(ad, params) for _ in range(2))
+    for t in range(3):
+        k = jax.random.fold_in(jax.random.key(6), t)
+        st_p, m_p = step(st_p, k, batches)
+        st_d, m_d = step_d(st_d, k, batches)
+    _assert_state_close(st_p, st_d, 1e-4)
+    np.testing.assert_allclose(float(m_p.loss), float(m_d.loss), rtol=1e-5)
+
+
+def test_double_buffer_with_buckets_sharded():
+    """Everything on at once — dbuf streaming + B=4 bucketed exchange +
+    participation — vs the fully-default engine, tolerance tier."""
+    ch1, ad, fl_p = _configs(client_chunk=2, sample_rate=0.8)
+    ch4 = dataclasses.replace(ch1, comm_buckets=4)
+    fl_d = dataclasses.replace(fl_p, double_buffer=True)
+    st_p, ms_p = _run_sharded(ch1, ad, fl_p, rounds=4)
+    st_d, ms_d = _run_sharded(ch4, ad, fl_d, rounds=4)
+    _assert_state_close(st_p, st_d, 1e-4)
+    np.testing.assert_array_equal(np.asarray(ms_p.n_participants),
+                                  np.asarray(ms_d.n_participants))
+
+
+def test_double_buffer_needs_client_chunk():
+    with pytest.raises(ValueError, match="double_buffer"):
+        FLConfig(n_clients=N, double_buffer=True)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (c): async slab checkpointing
+# ---------------------------------------------------------------------------
+
+def _advance(step, st, t0, rounds, batches):
+    for t in range(t0, t0 + rounds):
+        st, m = step(st, jax.random.fold_in(jax.random.key(6), t), batches)
+    return st
+
+
+def test_async_ckpt_file_bitwise_equals_blocking(tmp_path):
+    """save_slab_state(blocking=False) must produce byte-identical
+    files (same arrays, same deterministic zip) and round-trip extras."""
+    ch, ad, fl = _configs()
+    params = _params()
+    st = init_train_state(ad, params)
+    p_sync = str(tmp_path / "sync.npz")
+    p_async = str(tmp_path / "async.npz")
+    extra = {"key": np.arange(4, dtype=np.uint32)}
+    ckpt.save_slab_state(p_sync, st, extra=extra)
+    ckpt.save_slab_state(p_async, st, extra=extra, blocking=False)
+    ckpt.wait_for_async_saves()
+    sha = [hashlib.sha256(open(p, "rb").read()).hexdigest()
+           for p in (p_sync, p_async)]
+    assert sha[0] == sha[1]
+    st2, extra2 = ckpt.load_slab_state(p_async, st.spec)
+    _assert_state_bitwise(st, st2)
+    np.testing.assert_array_equal(extra2["key"], extra["key"])
+
+
+def test_async_ckpt_resume_is_bitwise(tmp_path):
+    """A trajectory resumed from an async checkpoint must be bitwise
+    equal to the uninterrupted one."""
+    ch, ad, fl = _configs()
+    params = _params()
+    batches = _batches(params)
+    step = make_slab_round_step(_loss_fn, ch, ad, fl, backend="pallas")
+    st = _advance(step, init_train_state(ad, params), 0, 2, batches)
+    path = str(tmp_path / "round_2.npz")
+    ckpt.save_slab_state(path, st, blocking=False)
+    st_a = _advance(step, st, 2, 2, batches)     # overlaps the write
+    st_r, _ = ckpt.load_slab_state(path, st.spec)
+    st_b = _advance(step, st_r, 2, 2, batches)
+    _assert_state_bitwise(st_a, st_b)
+    assert int(st_b.step) == 4
+
+
+def test_async_ckpt_snapshot_precedes_donation(tmp_path):
+    """The device->host snapshot is synchronous: deleting (donating)
+    every device buffer right after the non-blocking call must not
+    corrupt the file."""
+    ch, ad, fl = _configs()
+    st = init_train_state(ad, _params())
+    want = [np.array(a) for a in _state_arrays(st)]
+    path = str(tmp_path / "donated.npz")
+    ckpt.save_slab_state(path, st, blocking=False)
+    for arr in _state_arrays(st):
+        arr.delete()                 # what a donating dispatch does
+    st2, _ = ckpt.load_slab_state(path, st.spec)
+    for a, b in zip(want, _state_arrays(st2)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_async_ckpt_write_errors_surface(tmp_path, monkeypatch):
+    """A failed background write must raise at the next join — a
+    crashed async save cannot pass silently."""
+    ch, ad, fl = _configs()
+    st = init_train_state(ad, _params())
+
+    def boom(path, arrays):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(ckpt, "_atomic_savez", boom)
+    ckpt.save_slab_state(str(tmp_path / "x.npz"), st, blocking=False)
+    with pytest.raises(RuntimeError, match="async checkpoint"):
+        ckpt.wait_for_async_saves()
+    ckpt.wait_for_async_saves()      # error queue drained; clean again
+
+
+# ---------------------------------------------------------------------------
+# Satellites: dead-round aggregation, bench --compare
+# ---------------------------------------------------------------------------
+
+def test_dead_round_aggregator_spans():
+    from repro.core.fl import _DeadRoundAggregator
+    lines = []
+    agg = _DeadRoundAggregator(lines.append)
+    agg.flush()                      # nothing recorded -> no line
+    assert lines == []
+    for t in (3, 4, 5):
+        agg.record(t)
+    agg.flush()
+    assert len(lines) == 1
+    assert "rounds 4-6" in lines[0] and "3 dead round(s)" in lines[0]
+    agg.record(9)
+    agg.flush()
+    agg.flush()                      # count reset: no duplicate line
+    assert len(lines) == 2
+    assert "round" in lines[1] and "1 dead round(s)" in lines[1]
+
+
+def test_bench_delta_column():
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.run import _delta_column
+    prev = {"meta": {"git_sha": "abcdef1234"},
+            "records": [{"name": "r1", "rounds_per_sec": 10.0},
+                        {"name": "r3", "clients_per_sec": 100.0}]}
+    assert (_delta_column({"name": "r1", "rounds_per_sec": 12.0}, prev, True)
+            == "delta_rounds_per_sec=+20.0%_vs_abcdef1")
+    assert "-50.0%" in _delta_column(
+        {"name": "r3", "clients_per_sec": 50.0}, prev, True)
+    assert _delta_column({"name": "brand-new"}, prev, True) == "delta=new"
+    assert (_delta_column({"name": "r1", "rounds_per_sec": 12.0}, prev, False)
+            == "delta=incomparable(fingerprint-drift)")
+    # headline metric changed since the previous artifact
+    assert (_delta_column({"name": "r3", "rounds_per_sec": 5.0}, prev, True)
+            == "delta=new-metric")
+
+
+def test_cms_transform_fast_matches_reference():
+    """The fast-exp CMS transform is an algebraic rewrite of the
+    textbook one: tight relative agreement across the (u, e, alpha)
+    domain, and exactly zero on the pad sentinel (u=0, e=1)."""
+    u = jnp.linspace(-CMS_U_BOUND, CMS_U_BOUND, 513)
+    e = jnp.logspace(-5, 1, 513)
+    for alpha in (0.8, 1.2, 1.5, 1.9):
+        ref = np.asarray(cms_transform(u, e, alpha))
+        fast = np.asarray(cms_transform_fast(u, e, alpha))
+        np.testing.assert_allclose(fast, ref, rtol=2e-5, atol=1e-6)
+    assert float(cms_transform_fast(jnp.zeros(()), jnp.ones(()), 1.5)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Multi-device acceptance (subprocess, 8 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_overlap_multi_device_acceptance():
+    """ACCEPTANCE: the overlapped round (--comm-buckets 4) holds parity
+    with the default-engine references on meshes (2,) and (4,2) — 8
+    forced host devices, real collectives — at the 1e-4 tolerance tier,
+    with bitwise rerun determinism (checked inside shard_check)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.shard_check",
+         "--comm-buckets", "4", "--meshes", "2", "4,2", "--rounds", "3",
+         "--optimizers", "adam_ota", "fedavg"],
+        capture_output=True, text=True, cwd=REPO_ROOT, env=env, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "PARITY OK" in out.stdout, out.stdout

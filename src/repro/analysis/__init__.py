@@ -1,0 +1,43 @@
+"""repro-lint: repo-specific static analysis for the slab engine.
+
+Nine PRs of growth left the engine with a web of invariants that lived
+only in docstrings and reviewer memory — the PRNG draw contract
+(identical draws sliced, never re-keyed, across the jnp / pallas /
+pallas_sharded backends), the slab zero-padding tail surviving every
+kernel mode and wire format, the kernel <-> jnp-oracle mirror in
+``repro.kernels.ref``, and the donated-buffer discipline of the
+compiled fast path. This package machine-enforces them:
+
+* **AST tier** (``repro.analysis.ast_rules``) — pure-stdlib rules over
+  ``src/``: the fold_in domain-separator ledger
+  (``repro.analysis.fold_registry``), re-keying inside round bodies,
+  quantized aggregates paired with ``restore_zero_tail``, every public
+  Pallas kernel mirrored by a signature-matching oracle, and module
+  import hygiene. Runs anywhere Python runs; no jax needed.
+* **jaxpr tier** (``repro.analysis.jaxpr_checks``) — abstractly traces
+  ``make_slab_round_step`` per backend on a tiny config cell and
+  asserts the PRNG-consumption ledger is identical across backends,
+  that the all-f32 wire cell contains no precision downcast, and that
+  every donated ``SlabTrainState`` byte is aliased by the compiled
+  round scan.
+
+Run ``python -m repro.analysis`` (add ``--jaxpr`` for the second
+tier). Accepted findings live in the committed baseline
+(``.repro-lint-baseline.json``); CI fails only on NEW findings. A
+finding can also be waived in place with a trailing
+``# repro-lint: allow[<rule-id>]`` comment (``lazy-import`` is the
+dedicated waiver for deliberate function-local imports).
+"""
+
+from repro.analysis.findings import (DEFAULT_BASELINE, Finding,
+                                     load_baseline, new_findings,
+                                     write_baseline)
+from repro.analysis.fold_registry import MIN_SEPARATOR, REGISTERED_FOLDS
+from repro.analysis.ast_rules import (AST_RULES, analyze_paths,
+                                      analyze_repo)
+
+__all__ = [
+    "AST_RULES", "DEFAULT_BASELINE", "Finding", "MIN_SEPARATOR",
+    "REGISTERED_FOLDS", "analyze_paths", "analyze_repo", "load_baseline",
+    "new_findings", "write_baseline",
+]

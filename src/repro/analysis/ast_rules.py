@@ -1,0 +1,528 @@
+"""AST-tier repro-lint rules: pure-stdlib checks over ``src/``.
+
+Each rule answers one question the test suite cannot (cheaply) ask:
+
+* ``fold-collision`` / ``fold-drift`` / ``fold-unregistered`` — is
+  every ``fold_in`` domain separator unique and ledgered in
+  ``repro.analysis.fold_registry``? Colliding separators correlate
+  draws that must be independent, yet each corrupted stream is still
+  individually uniform — invisible to numeric tests.
+* ``rekey-in-round`` — does a round body mint or re-split PRNG keys?
+  The three backends (jnp / pallas / pallas_sharded) agree bitwise
+  only because every draw is sliced from the SAME pre-split round
+  keys; a branch that re-splits locally silently forks the streams.
+* ``zero-tail-restore`` — is every quantized-aggregate receive site
+  that can see a ``zero_fold`` sign wire paired with
+  ``restore_zero_tail``? Sign-wire padding blocks dequantize to
+  ±scale, not zero, so an unmasked tail leaks into the next round's
+  master weights.
+* ``kernel-mirror`` — does every public Pallas kernel have an
+  op-mirrored jnp oracle in ``repro.kernels.ref`` with a matching
+  signature (modulo launch-geometry params)? The parity tests only
+  cover kernels the oracle knows about.
+* ``rekey-in-round`` and ``local-import`` findings can be waived in
+  place: ``# repro-lint: allow[<rule-id>]`` on (or up to three lines
+  above) the flagged line, or ``# repro-lint: lazy-import (reason)``
+  for a deliberate function-local import (cycle breaks, side-effect
+  deferral). Every rule honours ``allow[...]``.
+
+Entry points: ``analyze_repo(root)`` for the live tree,
+``analyze_sources({relpath: source})`` for in-memory fixtures (the
+test suite), ``analyze_paths(files, root)`` for an explicit file set.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+from repro.analysis.fold_registry import MIN_SEPARATOR, REGISTERED_FOLDS
+
+# Rule id -> one-line description (the CLI's --list-rules catalogue).
+AST_RULES = {
+    "fold-collision":
+        "two fold_in domain separators share a value (correlated draws)",
+    "fold-drift":
+        "a *_FOLD constant disagrees with / is missing from the registry",
+    "fold-unregistered":
+        "a fold_in separator literal >= MIN_SEPARATOR is not registered",
+    "rekey-in-round":
+        "PRNG key minted or re-split inside a round body (parity hazard)",
+    "zero-tail-restore":
+        "quantized receive with zero_fold in scope lacks restore_zero_tail",
+    "kernel-mirror":
+        "public Pallas kernel without a signature-matching oracle in ref.py",
+    "local-import":
+        "function-local import without a lazy-import waiver",
+    "syntax-error":
+        "file does not parse (all other rules skipped for it)",
+}
+
+# Launch-geometry / kernel-implementation params exempt from the
+# kernel<->oracle signature match: grid tiling, interpret-mode policy,
+# and the in-kernel SR seed (the oracle takes pre-drawn uniforms).
+KERNEL_ONLY_PARAMS = {"block_cols", "block_rows", "bq", "bk",
+                      "interpret", "sr_seed"}
+
+# Modules whose function bodies are "round bodies" for rekey-in-round.
+_ROUND_SCOPE_SUFFIXES = ("repro/core/ota.py", "repro/core/shard.py",
+                         "repro/core/stream.py")
+# Modules holding quantized-aggregate receive sites (zero-tail rule).
+_ZERO_TAIL_SUFFIXES = _ROUND_SCOPE_SUFFIXES
+
+_RECEIVE_FNS = {"ota_receive_slab", "ota_receive_ref"}
+
+_WAIVER_TAG = "# repro-lint:"
+# How many lines above a flagged statement a waiver comment may sit.
+_WAIVER_REACH = 3
+
+
+class _Mod:
+    """One parsed source file (repo-relative posix path + AST)."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source)
+
+    def snippet(self, line: int) -> str:
+        if 0 < line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+def _norm(path: str) -> str:
+    return str(path).replace(os.sep, "/")
+
+
+def _is_kernel_mod(path: str) -> bool:
+    return ("repro/kernels/" in path
+            and not path.endswith(("/ref.py", "/interpret.py",
+                                   "/__init__.py")))
+
+
+def _in_round_scope(path: str) -> bool:
+    return path.endswith(_ROUND_SCOPE_SUFFIXES) or _is_kernel_mod(path)
+
+
+def _waived(mod: _Mod, node: ast.AST, rule: str) -> bool:
+    start = getattr(node, "lineno", 1)
+    end = getattr(node, "end_lineno", start) or start
+    for ln in range(max(1, start - _WAIVER_REACH), end + 1):
+        text = mod.lines[ln - 1] if ln <= len(mod.lines) else ""
+        if _WAIVER_TAG not in text:
+            continue
+        # A waiver ABOVE the statement must be a standalone comment;
+        # a trailing waiver (code + comment) covers only its own line.
+        if ln < start and not text.lstrip().startswith("#"):
+            continue
+        tag = text.split(_WAIVER_TAG, 1)[1]
+        if f"allow[{rule}]" in tag:
+            return True
+        if rule == "local-import" and "lazy-import" in tag:
+            return True
+    return False
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for an Attribute/Name chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _call_name(func: ast.AST) -> Optional[str]:
+    """Last path component of a call target (``ota.f`` -> ``f``)."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _int_const(node: ast.AST) -> Optional[int]:
+    if (isinstance(node, ast.Constant) and isinstance(node.value, int)
+            and not isinstance(node.value, bool)):
+        return node.value
+    return None
+
+
+# ---------------------------------------------------------------------------
+# fold rules
+
+
+def _check_folds(mods: Sequence[_Mod], registry: Dict[str, int],
+                 min_separator: int, registry_path: str,
+                 check_registry_coverage: bool) -> List[Finding]:
+    findings = []
+
+    # Registry self-collision: two ledger entries sharing a value.
+    by_value: Dict[int, str] = {}
+    for name in sorted(registry):
+        val = registry[name]
+        if val in by_value:
+            findings.append(Finding(
+                registry_path, 1, "fold-collision", "error",
+                f"registered separators {by_value[val]} and {name} share "
+                f"the value {val:#x}", snippet=name))
+        else:
+            by_value[val] = name
+
+    seen_defs: Dict[int, Tuple[str, str, int]] = {}
+    defined: Set[str] = set()
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                if len(node.targets) != 1:
+                    continue
+                tgt = node.targets[0]
+                if not (isinstance(tgt, ast.Name)
+                        and tgt.id.endswith("_FOLD")):
+                    continue
+                val = _int_const(node.value)
+                if val is None:
+                    continue
+                defined.add(tgt.id)
+                snip = mod.snippet(node.lineno)
+                if tgt.id not in registry:
+                    findings.append(Finding(
+                        mod.path, node.lineno, "fold-drift", "error",
+                        f"{tgt.id} = {val:#x} is not ledgered in "
+                        "repro.analysis.fold_registry.REGISTERED_FOLDS",
+                        snippet=snip))
+                elif registry[tgt.id] != val:
+                    findings.append(Finding(
+                        mod.path, node.lineno, "fold-drift", "error",
+                        f"{tgt.id} = {val:#x} here but "
+                        f"{registry[tgt.id]:#x} in the registry",
+                        snippet=snip))
+                prev = seen_defs.get(val)
+                if prev is not None and prev[0] != tgt.id:
+                    findings.append(Finding(
+                        mod.path, node.lineno, "fold-collision", "error",
+                        f"{tgt.id} = {val:#x} collides with {prev[0]} "
+                        f"({prev[1]}:{prev[2]})", snippet=snip))
+                else:
+                    seen_defs.setdefault(val, (tgt.id, mod.path,
+                                               node.lineno))
+            elif isinstance(node, ast.Call):
+                if _call_name(node.func) != "fold_in":
+                    continue
+                if len(node.args) < 2:
+                    continue
+                sep = node.args[1]
+                lit = _int_const(sep)
+                if lit is not None:
+                    if (lit >= min_separator
+                            and lit not in registry.values()
+                            and not _waived(mod, node,
+                                            "fold-unregistered")):
+                        findings.append(Finding(
+                            mod.path, node.lineno, "fold-unregistered",
+                            "error",
+                            f"fold_in separator {lit:#x} is not a "
+                            "registered domain separator — name it and "
+                            "add it to repro.analysis.fold_registry",
+                            snippet=mod.snippet(node.lineno)))
+                elif (isinstance(sep, ast.Name)
+                        and sep.id.endswith("_FOLD")
+                        and sep.id not in registry
+                        and not _waived(mod, node, "fold-unregistered")):
+                    findings.append(Finding(
+                        mod.path, node.lineno, "fold-unregistered",
+                        "error",
+                        f"fold_in separator {sep.id} is not registered "
+                        "in repro.analysis.fold_registry",
+                        snippet=mod.snippet(node.lineno)))
+
+    if check_registry_coverage:
+        for name in sorted(set(registry) - defined):
+            findings.append(Finding(
+                registry_path, 1, "fold-drift", "error",
+                f"{name} is registered but no module in src/ defines it "
+                "— delete the stale registry entry or restore the "
+                "constant", snippet=name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rekey-in-round
+
+
+def _function_scopes(tree: ast.Module) -> Iterable[ast.AST]:
+    """Top-level function/class bodies (each walked exactly once)."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            yield node
+
+
+def _check_rekey(mod: _Mod) -> List[Finding]:
+    if not _in_round_scope(mod.path):
+        return []
+    findings = []
+    for scope in _function_scopes(mod.tree):
+        for node in ast.walk(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func) or ""
+            mint = (dotted.endswith("random.PRNGKey")
+                    or dotted.endswith("random.key"))
+            resplit = dotted.endswith("random.split")
+            if not (mint or resplit):
+                continue
+            if _waived(mod, node, "rekey-in-round"):
+                continue
+            if mint:
+                msg = (f"{dotted} mints a fresh PRNG key inside a round "
+                       "body — round randomness must derive from the "
+                       "caller's round key")
+                sev = "error"
+            else:
+                msg = (f"{dotted} re-splits a key inside a round body — "
+                       "backend parity requires draws sliced from "
+                       "pre-split round keys; new split sites fork the "
+                       "streams")
+                sev = "warn"
+            findings.append(Finding(
+                mod.path, node.lineno, "rekey-in-round", sev, msg,
+                snippet=mod.snippet(node.lineno)))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# zero-tail-restore
+
+
+def _check_zero_tail(mod: _Mod) -> List[Finding]:
+    if not mod.path.endswith(_ZERO_TAIL_SUFFIXES):
+        return []
+    findings = []
+    for fn in mod.tree.body:
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls: Set[str] = set()
+        names: Set[str] = set()
+        first_recv: Optional[ast.Call] = None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                cname = _call_name(node.func)
+                if cname:
+                    calls.add(cname)
+                    if cname in _RECEIVE_FNS and first_recv is None:
+                        first_recv = node
+                names.update(kw.arg for kw in node.keywords if kw.arg)
+            elif isinstance(node, ast.Name):
+                names.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                names.add(node.attr)
+            elif isinstance(node, ast.arg):
+                names.add(node.arg)
+        if (first_recv is not None and "zero_fold" in names
+                and "restore_zero_tail" not in calls
+                and not _waived(mod, first_recv, "zero-tail-restore")):
+            findings.append(Finding(
+                mod.path, first_recv.lineno, "zero-tail-restore", "error",
+                f"{fn.name} receives a quantized aggregate with "
+                "zero_fold reachable but never calls restore_zero_tail "
+                "— sign-wire padding blocks dequantize to ±scale, not "
+                "zero", snippet=mod.snippet(first_recv.lineno)))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# kernel-mirror
+
+
+def _contains_pallas_call(fn: ast.AST) -> bool:
+    return any(_call_name(getattr(n, "func", None)) == "pallas_call"
+               for n in ast.walk(fn) if isinstance(n, ast.Call))
+
+
+def _param_names(fn) -> Tuple[List[str], List[str]]:
+    """(positional names, all names) — posonly + args + kwonly."""
+    a = fn.args
+    pos = [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+    return pos, pos + [p.arg for p in a.kwonlyargs]
+
+
+def _check_kernel_mirror(kernel_mods: Sequence[_Mod],
+                         ref_mod: Optional[_Mod]) -> List[Finding]:
+    findings = []
+    if ref_mod is None:
+        for mod in kernel_mods:
+            for fn in mod.tree.body:
+                if (isinstance(fn, ast.FunctionDef)
+                        and not fn.name.startswith("_")
+                        and _contains_pallas_call(fn)):
+                    findings.append(Finding(
+                        mod.path, fn.lineno, "kernel-mirror", "error",
+                        f"public Pallas kernel {fn.name} but "
+                        "repro/kernels/ref.py is absent — no oracle to "
+                        "mirror it", snippet=mod.snippet(fn.lineno)))
+        return findings
+
+    ref_fns = {fn.name: fn for fn in ref_mod.tree.body
+               if isinstance(fn, ast.FunctionDef)}
+    for mod in kernel_mods:
+        for fn in mod.tree.body:
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            if fn.name.startswith("_") or not _contains_pallas_call(fn):
+                continue
+            if _waived(mod, fn, "kernel-mirror"):
+                continue
+            stem = fn.name[:-5] if fn.name.endswith("_slab") else fn.name
+            ref_name = f"{stem}_ref"
+            snip = mod.snippet(fn.lineno)
+            rfn = ref_fns.get(ref_name)
+            if rfn is None:
+                findings.append(Finding(
+                    mod.path, fn.lineno, "kernel-mirror", "error",
+                    f"public Pallas kernel {fn.name} has no oracle "
+                    f"{ref_name} in {ref_mod.path} — the parity suite "
+                    "cannot cover it", snippet=snip))
+                continue
+            kpos, kall = _param_names(fn)
+            rpos, rall = _param_names(rfn)
+            kset = set(kall) - KERNEL_ONLY_PARAMS
+            rset = set(rall) - KERNEL_ONLY_PARAMS
+            missing = sorted(kset - rset)
+            extra = sorted(rset - kset)
+            kp = [p for p in kpos if p not in KERNEL_ONLY_PARAMS]
+            if missing or extra:
+                parts = []
+                if missing:
+                    parts.append(f"oracle is missing {missing}")
+                if extra:
+                    parts.append(f"oracle has extra {extra}")
+                findings.append(Finding(
+                    mod.path, fn.lineno, "kernel-mirror", "error",
+                    f"{fn.name} and {ref_name} signatures disagree: "
+                    + "; ".join(parts), snippet=snip))
+            elif rpos[:len(kp)] != kp:
+                findings.append(Finding(
+                    mod.path, fn.lineno, "kernel-mirror", "error",
+                    f"{fn.name} positional operands {kp} but {ref_name} "
+                    f"leads with {rpos[:len(kp)]}", snippet=snip))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# local-import
+
+
+def _is_import_guard(node: ast.AST) -> bool:
+    if isinstance(node, ast.Try):
+        for handler in node.handlers:
+            types = handler.type
+            if types is None:
+                return True
+            names = ([_call_name(e) for e in types.elts]
+                     if isinstance(types, ast.Tuple)
+                     else [_call_name(types)])
+            if {"ImportError", "ModuleNotFoundError",
+                    "Exception"} & set(filter(None, names)):
+                return True
+    if isinstance(node, ast.If):
+        test = _dotted(node.test)
+        if test and test.endswith("TYPE_CHECKING"):
+            return True
+    return False
+
+
+def _check_local_imports(mod: _Mod) -> List[Finding]:
+    findings = []
+
+    def visit(node: ast.AST, in_fn: bool, guarded: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.Import, ast.ImportFrom)):
+                if (in_fn and not guarded
+                        and not _waived(mod, child, "local-import")):
+                    if isinstance(child, ast.ImportFrom):
+                        what = f"from {child.module or '.'} import ..."
+                    else:
+                        what = ("import "
+                                + ", ".join(a.name for a in child.names))
+                    findings.append(Finding(
+                        mod.path, child.lineno, "local-import", "warn",
+                        f"function-local `{what}` — hoist to module "
+                        "level, or waive with `# repro-lint: "
+                        "lazy-import (reason)` if it breaks a cycle or "
+                        "defers a side effect",
+                        snippet=mod.snippet(child.lineno)))
+            visit(child,
+                  in_fn or isinstance(child, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef,
+                                              ast.Lambda)),
+                  guarded or _is_import_guard(child))
+
+    visit(mod.tree, False, False)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# drivers
+
+
+def analyze_sources(sources: Dict[str, str], *,
+                    registry: Optional[Dict[str, int]] = None,
+                    min_separator: int = MIN_SEPARATOR,
+                    registry_path: str =
+                    "src/repro/analysis/fold_registry.py",
+                    check_registry_coverage: bool = False
+                    ) -> List[Finding]:
+    """Run every AST rule over ``{repo-relative path: source text}``."""
+    if registry is None:
+        registry = REGISTERED_FOLDS
+    mods: List[_Mod] = []
+    findings: List[Finding] = []
+    for path in sorted(sources):
+        npath = _norm(path)
+        try:
+            mods.append(_Mod(npath, sources[path]))
+        except SyntaxError as exc:
+            findings.append(Finding(
+                npath, exc.lineno or 1, "syntax-error", "error",
+                f"does not parse: {exc.msg}"))
+    findings += _check_folds(mods, registry, min_separator,
+                             registry_path, check_registry_coverage)
+    for mod in mods:
+        findings += _check_rekey(mod)
+        findings += _check_zero_tail(mod)
+        findings += _check_local_imports(mod)
+    kernel_mods = [m for m in mods if _is_kernel_mod(m.path)]
+    ref_mod = next((m for m in mods
+                    if m.path.endswith("repro/kernels/ref.py")), None)
+    findings += _check_kernel_mirror(kernel_mods, ref_mod)
+    return sorted(findings)
+
+
+def analyze_paths(paths: Iterable[Path], root: Path,
+                  **kwargs) -> List[Finding]:
+    """Analyze an explicit file set; paths reported relative to root."""
+    root = Path(root).resolve()
+    sources = {}
+    for p in paths:
+        p = Path(p).resolve()
+        try:
+            rel = p.relative_to(root)
+        except ValueError:
+            rel = p
+        sources[_norm(rel)] = p.read_text()
+    return analyze_sources(sources, **kwargs)
+
+
+def analyze_repo(root: Path, **kwargs) -> List[Finding]:
+    """Analyze every ``*.py`` under ``<root>/src``."""
+    src = Path(root) / "src"
+    kwargs.setdefault("check_registry_coverage", True)
+    return analyze_paths(sorted(src.rglob("*.py")), Path(root), **kwargs)

@@ -1,0 +1,45 @@
+"""The ledger of PRNG ``fold_in`` domain separators.
+
+The engine keys every independent random draw of a round off ONE round
+key via ``jax.random.fold_in(key, SEPARATOR)``. Two draws folding the
+same separator would be perfectly correlated — the participation mask
+reusing the stochastic-rounding stream, say — a bug that no numeric
+test catches reliably (the corrupted streams are still individually
+uniform). So the separators are ledgered here and machine-checked:
+
+* **fold-collision** — two registered separators share a value;
+* **fold-drift** — a ``*_FOLD`` constant defined in ``src/`` disagrees
+  with (or is missing from) this registry;
+* **fold-unregistered** — a literal ``>= MIN_SEPARATOR`` passed to
+  ``fold_in`` that is not a registered value.
+
+Literals below ``MIN_SEPARATOR`` are *index* folds (leaf index, shard
+index, round number — dense small ints by construction) and exempt;
+that is also why every separator is chosen ``>= 0x100``.
+
+This module is deliberately standalone (values duplicated from their
+defining modules as plain literals, no jax import) so the AST tier can
+run without the engine's dependencies; fold-drift is exactly the check
+that the duplicates never diverge.
+"""
+
+REGISTERED_FOLDS = {
+    # repro/core/stream.py — the round participation mask draw.
+    "PART_FOLD": 0xACCE,
+    # repro/core/channel.py — uplink stochastic-rounding uniforms.
+    "SR_FOLD": 0x5A8,
+    # repro/core/ota.py keys downlink SR off repro/core/channel.py's
+    # DL_FOLD; disjoint from SR_FOLD so uplink and downlink rounding
+    # never correlate within a round.
+    "DL_FOLD": 0xD01,
+    # repro/core/channel.py — the standalone fading draw of
+    # ``client_fading_weights`` (diagnostics/examples path).
+    "FADING_FOLD": 0x0FAD,
+}
+
+# Smallest value treated as a domain separator; smaller fold_in
+# literals are index folds and exempt from registration.
+MIN_SEPARATOR = 0x100
+
+assert all(v >= MIN_SEPARATOR for v in REGISTERED_FOLDS.values()), \
+    "registered separators must be >= MIN_SEPARATOR"

@@ -1,0 +1,235 @@
+"""jaxpr-tier repro-lint: contracts checked on real traces.
+
+The AST tier reads source; this tier traces ``make_slab_round_step``
+on a tiny config cell per backend and inspects the jaxprs (recursing
+into pjit / scan / cond / shard_map / pallas_call subjaxprs):
+
+* ``prng-ledger`` — the multiset of random-bit-generating equations
+  (primitive name + output shapes) must be IDENTICAL across the jnp,
+  pallas and pallas_sharded backends. This is the identical-draw
+  contract stated structurally: a backend that draws more, fewer, or
+  differently-shaped randomness has forked the streams even if a
+  seed-level numeric test happens to pass.
+* ``wire-downcast`` — the all-f32 wire cell (no uplink/downlink
+  quantization configured) must contain ZERO
+  ``convert_element_type`` equations to int8/uint8/bf16/f16: the f32
+  master update path never narrows outside a declared wire boundary.
+* ``post-donation-use`` — with ``donate=True`` every byte of the
+  donated ``SlabTrainState`` must be input-output aliased by the
+  compiled round scan (via ``repro.core.fl.donation_report``); an
+  unaliased donated buffer means something still reads it after
+  donation, silently forcing a copy.
+
+Heavier than the AST tier (imports jax, traces the engine) — run via
+``python -m repro.analysis --jaxpr``. Findings anchor to
+``src/repro/core/fl.py`` (the round-step builder that owns these
+contracts) with the backend name as the stable baseline snippet.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.compat import make_auto_mesh
+from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
+                        donation_report, init_train_state,
+                        make_slab_round_runner, make_slab_round_step)
+
+JAXPR_RULES = {
+    "prng-ledger":
+        "PRNG-consumption equations differ across round-step backends",
+    "wire-downcast":
+        "precision downcast in the all-f32 cell outside a wire boundary",
+    "post-donation-use":
+        "donated state bytes not fully aliased by the compiled scan",
+    "jaxpr-internal-error":
+        "a jaxpr-tier check itself crashed (API drift?)",
+}
+
+# Contracts live in the round-step builder; jaxpr findings anchor there.
+_ANCHOR = "src/repro/core/fl.py"
+
+_RANDOM_PRIMS = ("random_bits", "threefry2x32")
+_WIRE_DTYPES = ("int8", "uint8", "bfloat16", "float16")
+
+
+def _jaxprs_in(value):
+    if isinstance(value, jax.core.ClosedJaxpr):
+        yield value.jaxpr
+    elif isinstance(value, jax.core.Jaxpr):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _jaxprs_in(v)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _jaxprs_in(v)
+
+
+def _walk_eqns(closed_jaxpr):
+    """Every equation, recursing through all subjaxpr-bearing params.
+
+    No visited-set: two pjit eqns can share one cached subjaxpr object
+    (jax memoises traced wrappers like ``jax.random.uniform``) yet
+    represent two executions — deduping by identity would undercount
+    the draws.
+    """
+    stack = [closed_jaxpr.jaxpr]
+    while stack:
+        jaxpr = stack.pop()
+        for eqn in jaxpr.eqns:
+            yield eqn
+            for v in eqn.params.values():
+                stack.extend(_jaxprs_in(v))
+
+
+def prng_ledger(fn, *args) -> Counter:
+    """Multiset of (primitive, output shapes) for random-bit eqns."""
+    closed = jax.make_jaxpr(fn)(*args)
+    counts: Counter = Counter()
+    for eqn in _walk_eqns(closed):
+        if eqn.primitive.name in _RANDOM_PRIMS:
+            shapes = tuple(tuple(v.aval.shape) for v in eqn.outvars)
+            counts[(eqn.primitive.name, shapes)] += 1
+    return counts
+
+
+def downcast_ledger(fn, *args) -> Counter:
+    """Multiset of banned convert_element_type target dtypes."""
+    closed = jax.make_jaxpr(fn)(*args)
+    counts: Counter = Counter()
+    for eqn in _walk_eqns(closed):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        dtype = str(eqn.params.get("new_dtype"))
+        if dtype in _WIRE_DTYPES:
+            counts[dtype] += 1
+    return counts
+
+
+def _tiny_cell(backend: str, mesh=None, shards: int = 1):
+    """A minimal f32 round cell: step(state, key, batches) traceable.
+
+    Mirrors the test-suite fixture style — two clients, two leaves
+    (one with a partial final 128-lane block), the adam_ota cell.
+    """
+    params = {"a": jnp.ones((3, 5), jnp.float32),
+              "b": jnp.ones((130,), jnp.float32)}
+
+    def loss_fn(p, batch):
+        return sum(jnp.mean((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(batch)))
+
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5,
+                        beta2=0.3)
+    fl = FLConfig(n_clients=2)
+    step = make_slab_round_step(loss_fn, ch, ad, fl, jit=False,
+                                backend=backend, mesh=mesh)
+    state = init_train_state(ad, params, shards=shards)
+    key = jax.random.key(0)
+    batches = jax.tree.map(lambda p: jnp.zeros((2,) + p.shape), params)
+    return step, state, key, batches
+
+
+def _backend_cells():
+    """(backend-name, cell) for every backend traceable here."""
+    cells = [("jnp", _tiny_cell("jnp")),
+             ("pallas", _tiny_cell("pallas"))]
+    mesh = make_auto_mesh((1,), ("data",))
+    cells.append(("pallas_sharded",
+                  _tiny_cell("pallas_sharded", mesh=mesh, shards=1)))
+    return cells
+
+
+def check_prng_ledger() -> List[Finding]:
+    ledgers: Dict[str, Counter] = {}
+    for name, (step, state, key, batches) in _backend_cells():
+        ledgers[name] = prng_ledger(step, state, key, batches)
+    ref = ledgers["jnp"]
+    findings = []
+    for name, led in ledgers.items():
+        if name == "jnp" or led == ref:
+            continue
+        diffs = []
+        for entry in sorted(set(ref) | set(led), key=repr):
+            if ref[entry] != led[entry]:
+                prim, shapes = entry
+                diffs.append(f"{prim}{list(shapes)}: jnp x{ref[entry]} "
+                             f"vs {name} x{led[entry]}")
+        findings.append(Finding(
+            _ANCHOR, 1, "prng-ledger", "error",
+            f"PRNG-consumption ledger differs between jnp and {name} "
+            "round steps on the tiny f32 cell: " + "; ".join(diffs),
+            snippet=name))
+    return findings
+
+
+def check_wire_downcast() -> List[Finding]:
+    findings = []
+    for name, (step, state, key, batches) in _backend_cells():
+        counts = downcast_ledger(step, state, key, batches)
+        if counts:
+            detail = ", ".join(f"{d} x{n}"
+                               for d, n in sorted(counts.items()))
+            findings.append(Finding(
+                _ANCHOR, 1, "wire-downcast", "error",
+                f"{name} round step on the all-f32 cell downcasts the "
+                f"master path ({detail}) — narrowing is only allowed "
+                "inside declared wire boundaries (quantized cells)",
+                snippet=name))
+    return findings
+
+
+def check_donation() -> List[Finding]:
+    params = {"a": jnp.ones((3, 5), jnp.float32),
+              "b": jnp.ones((130,), jnp.float32)}
+
+    def loss_fn(p, batch):
+        return sum(jnp.mean((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p),
+                                   jax.tree.leaves(batch)))
+
+    ch = OTAChannelConfig(alpha=1.5, xi_scale=0.1)
+    ad = AdaptiveConfig(optimizer="adam_ota", lr=0.05, alpha=1.5,
+                        beta2=0.3)
+    fl = FLConfig(n_clients=2)
+    run = make_slab_round_runner(loss_fn, ch, ad, fl, donate=True)
+    state = init_train_state(ad, params)
+    keys = jnp.stack([jax.random.key(3), jax.random.key(4)])
+    batches = jax.tree.map(lambda p: jnp.zeros((2, 2) + p.shape), params)
+    rep = donation_report(run, state, keys, batches)
+    if not rep["supported"]:
+        # This backend's compiled memory analysis does not expose
+        # aliasing; nothing to assert (matches the test suite's skip).
+        return []
+    if rep["aliased_bytes"] != rep["donated_bytes"]:
+        return [Finding(
+            _ANCHOR, 1, "post-donation-use", "error",
+            f"only {rep['aliased_bytes']} of {rep['donated_bytes']} "
+            "donated SlabTrainState bytes are input-output aliased by "
+            "the compiled round scan — a donated buffer is still "
+            "referenced after donation (copy reintroduced)",
+            snippet="donate=True")]
+    return []
+
+
+def run_jaxpr_checks() -> List[Finding]:
+    """All jaxpr-tier checks; a crashing check surfaces as a finding."""
+    findings: List[Finding] = []
+    for check in (check_prng_ledger, check_wire_downcast,
+                  check_donation):
+        try:
+            findings += check()
+        except Exception as exc:  # noqa: BLE001 - surfaced, not hidden
+            findings.append(Finding(
+                _ANCHOR, 1, "jaxpr-internal-error", "error",
+                f"{check.__name__} crashed: {type(exc).__name__}: {exc}",
+                snippet=check.__name__))
+    return findings

@@ -26,6 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.slab_state import (SlabTrainState, check_spec_meta,
+                                   spec_meta)
+
 PyTree = Any
 _SEP = "|"
 _BF16 = "~bf16"   # npz cannot store ml_dtypes.bfloat16; stored as uint16 view
@@ -139,7 +142,6 @@ def save_slab_state(path: str, state, extra: Optional[Dict[str, Any]] = None,
     deterministic zip). Join stragglers with
     :func:`wait_for_async_saves` at loop exit.
     """
-    from repro.core.slab_state import spec_meta
     arrays = {"step": np.asarray(state.step), "w": np.asarray(state.w),
               "alpha_hat": np.asarray(state.alpha_hat),
               "spec_meta": np.asarray(json.dumps(spec_meta(state.spec)))}
@@ -177,7 +179,6 @@ def load_slab_state(path: str, spec) -> Tuple[Any, Dict[str, np.ndarray]]:
     ``(state, extra)`` with ``extra`` the ``x_``-prefixed arrays given
     at save time.
     """
-    from repro.core.slab_state import SlabTrainState, check_spec_meta
     wait_for_async_saves()       # never read a file still in flight
     with np.load(path) as data:
         stored = {k: data[k] for k in data.files}

@@ -33,6 +33,8 @@ def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
     if hasattr(jax, "shard_map"):
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=check)
+    # repro-lint: lazy-import (version fallback: jax.experimental.shard_map
+    # only exists / is only wanted on old jax, probed at call time)
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       check_rep=check)

@@ -398,6 +398,8 @@ def slab_update_slabs(cfg: AdaptiveConfig, g_slab: jax.Array,
     ``cfg.alpha`` with the tracked traced scalar (mandatory when
     ``cfg.alpha == "auto"``). Returns ``(new_state_slabs, w')``.
     """
+    # repro-lint: lazy-import (cycle: kernels.adaptive_update imports
+    # core.adaptive for _abs_pow)
     from repro.kernels.adaptive_update import adaptive_update_slab
 
     mode = _SLAB_MODES[cfg.optimizer]

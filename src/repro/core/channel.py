@@ -153,6 +153,14 @@ SR_FOLD = 0x5A8
 # enabling the quantized downlink must not perturb any uplink draw.
 DL_FOLD = 0xD01
 
+# Domain separator for the standalone fading draw of
+# ``repro.core.ota.client_fading_weights`` (diagnostics/examples path;
+# the round engines derive fading from the split round key instead).
+# Every fold_in domain separator in the repo is mirrored in
+# ``repro.analysis.fold_registry`` — the repro-lint fold rules fail on
+# unregistered or colliding constants.
+FADING_FOLD = 0x0FAD
+
 
 def sr_inputs(key: jax.Array, shape: Tuple[int, ...],
               dtype=jnp.float32) -> jax.Array:

@@ -66,12 +66,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
-                                 apply_slab_update, make_server_optimizer)
+                                 apply_slab_update, make_server_optimizer,
+                                 slab_update_slabs)
 from repro.core.channel import OTAChannelConfig
-from repro.core.ota import ota_aggregate_slab, ota_aggregate_stacked, ota_psum
+from repro.core.ota import (downlink_quantize_slab, downlink_sr_slab_inputs,
+                            ota_aggregate_slab, ota_aggregate_stacked,
+                            ota_psum)
 from repro.core.slab import make_slab_spec, slab_to_tree, tree_to_slab
 from repro.core.slab_state import (SlabTrainState, pack_train_state,
                                    unpack_train_state)
+from repro.core.stream import streamed_round_parts
 from repro.core.tail_index import effective_alpha, update_alpha_ema
 
 PyTree = Any
@@ -267,6 +271,7 @@ def make_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
             "across rounds and no slab broadcast to quantize")
     alpha_const = jnp.asarray(adaptive_cfg.alpha, jnp.float32)
     if backend == "pallas_sharded":
+        # repro-lint: lazy-import (cycle: core.shard imports core.fl)
         from repro.core.shard import shard_round_step
         if mesh is None:
             raise ValueError('backend="pallas_sharded" needs a mesh; pass '
@@ -367,6 +372,7 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
     backend, channel_cfg, adaptive_cfg = _resolve_backend(
         backend, channel_cfg, adaptive_cfg)
     if backend == "pallas_sharded":
+        # repro-lint: lazy-import (cycle: core.shard imports core.fl)
         from repro.core.shard import make_shard_slab_step
         if mesh is None:
             raise ValueError('backend="pallas_sharded" needs a mesh; pass '
@@ -406,14 +412,10 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         under downlink="int8" (the server always keeps the master)."""
         if not dl_int8:
             return state.w
-        from repro.core.ota import (downlink_quantize_slab,
-                                    downlink_sr_slab_inputs)
         r = downlink_sr_slab_inputs(key, state.spec.padded)
         return downlink_quantize_slab(state.w, r)
 
     if fl_cfg.dynamic_round:
-        from repro.core.adaptive import slab_update_slabs
-        from repro.core.stream import streamed_round_parts
         use_kernels = backend != "jnp"
 
         def step(state: SlabTrainState, key, client_batches=None):
@@ -535,8 +537,6 @@ def make_slab_round_step(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
 
         return jax.jit(step) if jit else step
 
-    from repro.core.adaptive import slab_update_slabs
-
     def step(state: SlabTrainState, key, client_batches):
         _check_ef_state(state)
         spec = state.spec
@@ -626,6 +626,7 @@ def make_slab_round_runner(loss_fn: LossFn, channel_cfg: OTAChannelConfig,
         raise ValueError("donate=True needs jit=True: buffer donation "
                          "is a property of the compiled executable")
     if backend == "pallas_sharded":
+        # repro-lint: lazy-import (cycle: core.shard imports core.fl)
         from repro.core.shard import make_shard_slab_runner
         if mesh is None:
             raise ValueError('backend="pallas_sharded" needs a mesh; pass '

@@ -58,13 +58,20 @@ from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.extend.random import threefry_2x32
 
 from repro.core.channel import (CMS_E_FLOOR, CMS_U_BOUND, DL_FOLD,
-                                OTAChannelConfig, cms_inputs, sample_fading,
-                                sample_interference, sr_inputs,
+                                FADING_FOLD, OTAChannelConfig, cms_inputs,
+                                sample_fading, sample_interference, sr_inputs,
                                 sr_kernel_seed)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, stack_to_slab
+from repro.core.tail_index import log_moment_stats
 from repro.kernels.interpret import resolve_interpret
+from repro.kernels.ota_channel import (INT8_MAX, LANE, ota_channel_slab,
+                                       ota_receive_slab, ota_transmit_slab,
+                                       pack_sign_slab)
+from repro.kernels.ref import (ota_channel_ref, ota_receive_ref,
+                               ota_transmit_ref)
 
 PyTree = Any
 
@@ -149,7 +156,6 @@ def cms_slab_inputs_partial(kx: jax.Array, spec: SlabSpec, n_shards: int,
     ``_cms_slab_inputs`` pins e's tail to 1.0, so consumers of the
     combined rows re-pin it on their received slice (``pin_pad_tail``)
     before the CMS transform."""
-    from jax.extend.random import threefry_2x32
     u_parts, e_parts = [], []
     for i, shape in enumerate(spec.shapes):
         kl = jax.random.fold_in(kx, i)
@@ -283,7 +289,6 @@ def downlink_quantize_slab(w: jax.Array, r: jax.Array) -> jax.Array:
     zero-tail contract). The server keeps the f32 master weights; only
     what CLIENTS see (their gradient point) is quantized.
     """
-    from repro.kernels.ota_channel import INT8_MAX, LANE
     d = w.shape[0]
     a = w.astype(jnp.float32).reshape(d // LANE, LANE)
     maxabs = jnp.max(jnp.abs(a), axis=1, keepdims=True)
@@ -343,7 +348,6 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
     ef_new = None
 
     if cfg.uplink.quantized:
-        from repro.kernels.ota_channel import pack_sign_slab
         qmode = cfg.uplink.mode
         zero_fold = cfg.uplink.zero_fold
         # The wire representation of the sign payload: when packed
@@ -365,7 +369,6 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
              if stochastic and not inkernel else None)
         want_ef = ef is not None
         if cfg.backend == "jnp":
-            from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
             tx = ota_transmit_ref(grads_slab, h, quantize=True, r=r,
                                   stochastic=stochastic, qmode=qmode,
                                   zero_fold=zero_fold,
@@ -378,8 +381,6 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
                                      packed=packed,
                                      pilot_stats=pilot_stats)
         else:
-            from repro.kernels.ota_channel import (ota_receive_slab,
-                                                   ota_transmit_slab)
             sr_seed = sr_kernel_seed(key)[0] if inkernel else None
             tx = ota_transmit_slab(grads_slab, h, quantize=True, r=r,
                                    stochastic=stochastic, qmode=qmode,
@@ -404,11 +405,9 @@ def ota_aggregate_slab(key: jax.Array, cfg: OTAChannelConfig,
         return g_slab, h, grads_slab, stats, ef_new
 
     if cfg.backend == "jnp":
-        from repro.kernels.ref import ota_channel_ref
         g_slab = ota_channel_ref(grads_slab, h, u, e, alpha=cfg.alpha,
                                  scale=scale, pilot_stats=pilot_stats)
     else:
-        from repro.kernels.ota_channel import ota_channel_slab
         g_slab = ota_channel_slab(grads_slab, h, u, e, alpha=cfg.alpha,
                                   scale=scale, pilot_stats=pilot_stats,
                                   interpret=cfg.interpret)
@@ -430,7 +429,6 @@ def interference_log_moment_stats(kx: jax.Array, cfg: OTAChannelConfig,
     injects no interference. Standalone form; the round hot path uses
     ``_add_interference_with_stats`` to sample each leaf only once.
     """
-    from repro.core.tail_index import log_moment_stats
     if not cfg.interference:
         return jnp.zeros((3,), jnp.float32)
     keys = _leaf_keys(kx, tree)
@@ -446,7 +444,6 @@ def _add_interference_with_stats(kx: jax.Array, cfg: OTAChannelConfig,
     """``add_interference`` + the pilot-stats reduction in ONE pass over
     the per-leaf draws (the tracked jnp round would otherwise synthesize
     the full interference vector twice)."""
-    from repro.core.tail_index import log_moment_stats
     if not cfg.interference:
         return grads, jnp.zeros((3,), jnp.float32)
     leaves, treedef = jax.tree.flatten(grads)
@@ -590,5 +587,5 @@ def faded_loss_weights(key: jax.Array, cfg: OTAChannelConfig,
     Returns:
       (weights, h): weights of shape (batch,) and the h draw (N,).
     """
-    h = sample_fading(jax.random.fold_in(key, 0x0FAD), cfg, (n_clients,))
+    h = sample_fading(jax.random.fold_in(key, FADING_FOLD), cfg, (n_clients,))
     return h[client_ids], h

@@ -120,13 +120,19 @@ from repro.core.channel import (OTAChannelConfig, cms_transform,
                                 sr_kernel_seed)
 from repro.core.fl import FLConfig, RoundMetrics, _client_update
 from repro.core.ota import (_cms_slab_inputs, _interference_slab_inputs,
-                            linear_shard_index, uplink_sr_slab_inputs)
+                            downlink_quantize_slab, downlink_sr_slab_inputs,
+                            linear_shard_index, restore_zero_tail,
+                            uplink_sr_slab_inputs)
 from repro.core.slab import SlabSpec, make_slab_spec, slab_to_tree, \
     stack_to_slab, tree_to_slab
 from repro.core.slab_state import (SlabTrainState, pack_train_state,
                                    unpack_train_state)
+from repro.core.stream import round_participation
 from repro.core.tail_index import (effective_alpha, log_moment_stats,
                                    update_alpha_ema)
+from repro.kernels.interpret import resolve_interpret
+from repro.kernels.ota_channel import (LANE, ota_receive_slab,
+                                       ota_transmit_slab, pack_sign_slab)
 
 PyTree = Any
 
@@ -199,7 +205,6 @@ def _use_inkernel_sr(channel_cfg: OTAChannelConfig,
     config opts in AND the launch is a compiled pallas one (interpret
     mode keeps the host-drawn oracle — the pltpu PRNG only lowers on
     TPU)."""
-    from repro.kernels.interpret import resolve_interpret
     return (stochastic and channel_cfg.uplink.sr_inkernel
             and not resolve_interpret(channel_cfg.interpret))
 
@@ -241,8 +246,6 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
     subset-agnostic by the zero-mask contract) and ``ef_new`` the fresh
     full-width (padded,) residual (None unless ``ef`` was passed).
     """
-    from repro.kernels.ota_channel import ota_transmit_slab
-
     qmode = channel_cfg.uplink.mode
     zero_fold = channel_cfg.uplink.zero_fold
     stochastic = channel_cfg.uplink.stochastic_rounding and qmode == "int8"
@@ -276,7 +279,6 @@ def _int8_uplink(channel_cfg: OTAChannelConfig, g_stack: jax.Array,
         channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx, idx, spec,
         axes, axis_sizes, pilot_stats=pilot_stats)
     if channel_cfg.uplink.zero_fold and ef_new is not None:
-        from repro.core.ota import restore_zero_tail
         ef_new = restore_zero_tail(ef_new, spec)
     return g_slice, clean_slice, stats, ef_new
 
@@ -297,9 +299,6 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
     the collective moves 1 bit/coord (zero-folded) or 2 bits/coord
     (planes) instead of the 8-bit int8 container — and the receive
     launches unpack their own slice."""
-    from repro.kernels.ota_channel import (LANE, ota_receive_slab,
-                                           pack_sign_slab)
-
     n_shards = math.prod(axis_sizes)
     shard_len = spec.shard_len
     sl = lambda s: jax.lax.dynamic_slice_in_dim(s, idx * shard_len,
@@ -337,7 +336,6 @@ def _exchange_and_receive(channel_cfg: OTAChannelConfig, q_noisy, s_noisy,
         # layer owns the zero-tail contract, so this shard re-masks its
         # own columns (see ota.restore_zero_tail — fold-only, every
         # other wire's graph stays bitwise-untouched).
-        from repro.core.ota import restore_zero_tail
         off = idx * shard_len
         g_slice = restore_zero_tail(g_slice, spec, offset=off,
                                     width=shard_len)
@@ -450,8 +448,6 @@ def _make_bcast_fn(channel_cfg: OTAChannelConfig, spec: SlabSpec,
 
     def bcast(w_slice, key):
         if dl_int8:
-            from repro.core.ota import (downlink_quantize_slab,
-                                        downlink_sr_slab_inputs)
             idx = linear_shard_index(axes)
             r_dl = jax.lax.dynamic_slice_in_dim(
                 downlink_sr_slab_inputs(key, spec.padded),
@@ -493,7 +489,6 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
     comm_buckets = channel_cfg.comm_buckets
     overlap = comm_buckets > 1
     if overlap:
-        from repro.kernels.ota_channel import LANE
         if (spec.shard_len // LANE) % comm_buckets != 0:
             raise ValueError(
                 f"comm_buckets={comm_buckets} must divide the per-shard "
@@ -580,7 +575,6 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             else:
                 # Fused transmit: the faded partial sum over the local
                 # client rows, full slab width, analog (f32) wire format.
-                from repro.kernels.ota_channel import ota_transmit_slab
                 partial = ota_transmit_slab(g_stack, h_loc, n_total=n,
                                             interpret=channel_cfg.interpret)
                 clean_part = jnp.sum(g_stack, axis=0)
@@ -622,8 +616,6 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
             # collective — folded into the effective fading; the local
             # rows stream through the accumulating transmit kernel in
             # O(chunk * d) memory.
-            from repro.core.stream import round_participation
-            from repro.kernels.ota_channel import ota_transmit_slab
             mask, gain = round_participation(key, fl_cfg)
             h_eff = h * gain if dynamic_norm else h
             n_div = 1 if dynamic_norm else n
@@ -748,7 +740,6 @@ def _make_round_body(loss_fn, channel_cfg: OTAChannelConfig,
                     channel_cfg, q_noisy, s_noisy, q_clean, s_clean, kx,
                     idx, spec, axes, axis_sizes, pilot_stats=track)
                 if channel_cfg.uplink.zero_fold and use_ef:
-                    from repro.core.ota import restore_zero_tail
                     ef_new = restore_zero_tail(ef_new, spec)
             elif overlap:
                 both = _bucketed_psum_scatter(

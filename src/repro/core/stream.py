@@ -55,9 +55,14 @@ import jax.numpy as jnp
 
 from repro.core.channel import (OTAChannelConfig, sample_fading,
                                 sr_kernel_seed)
-from repro.core.ota import _interference_slab_inputs, uplink_sr_slab_inputs
+from repro.core.ota import (_interference_slab_inputs, restore_zero_tail,
+                            uplink_sr_slab_inputs)
 from repro.core.slab import SlabSpec, stack_to_slab
 from repro.kernels.interpret import resolve_interpret
+from repro.kernels.ota_channel import (ota_channel_slab, ota_receive_slab,
+                                       ota_transmit_slab, pack_sign_slab)
+from repro.kernels.ref import (ota_channel_ref, ota_receive_ref,
+                               ota_transmit_ref)
 
 PyTree = Any
 
@@ -184,14 +189,10 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
         h_sched, mask_sched = h_eff, mask
 
     if use_kernels:
-        from repro.kernels.ota_channel import ota_transmit_slab
-
         def transmit(g_stack, h_c, acc):
             return ota_transmit_slab(g_stack, h_c, n_total=n_div, acc=acc,
                                      interpret=cfg.interpret)
     else:
-        from repro.kernels.ref import ota_transmit_ref
-
         def transmit(g_stack, h_c, acc):
             return ota_transmit_ref(g_stack, h_c, n_total=n_div, acc=acc)
 
@@ -306,7 +307,6 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
     stats = None
     ef_new = None
     if cfg.uplink.quantized:
-        from repro.kernels.ota_channel import pack_sign_slab
         qmode = cfg.uplink.mode
         zero_fold = cfg.uplink.zero_fold
         packed = cfg.uplink.packed_sign
@@ -317,8 +317,6 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
              if stochastic and not inkernel else None)
         want_ef = ef is not None
         if use_kernels:
-            from repro.kernels.ota_channel import (ota_receive_slab,
-                                                   ota_transmit_slab)
             sr_seed = sr_kernel_seed(key)[0] if inkernel else None
             tx = ota_transmit_slab(g_pre[None], one, n_total=1,
                                    quantize=True, r=r,
@@ -335,7 +333,6 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
                                       pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
         else:
-            from repro.kernels.ref import ota_receive_ref, ota_transmit_ref
             tx = ota_transmit_ref(g_pre[None], one, n_total=1,
                                   quantize=True, r=r,
                                   stochastic=stochastic, qmode=qmode,
@@ -352,20 +349,17 @@ def streamed_round_parts(key: jax.Array, channel_cfg: OTAChannelConfig,
             ef_new = tx[2]
     else:
         if use_kernels:
-            from repro.kernels.ota_channel import ota_channel_slab
             g_slab = ota_channel_slab(g_pre[None], one, u, e,
                                       alpha=cfg.alpha, scale=scale,
                                       n_total=1, pilot_stats=pilot_stats,
                                       interpret=cfg.interpret)
         else:
-            from repro.kernels.ref import ota_channel_ref
             g_slab = ota_channel_ref(g_pre[None], one, u, e,
                                      alpha=cfg.alpha, scale=scale,
                                      pilot_stats=pilot_stats)
     if pilot_stats:
         g_slab, stats = g_slab
     if cfg.uplink.quantized and cfg.uplink.zero_fold:
-        from repro.core.ota import restore_zero_tail
         g_slab = restore_zero_tail(g_slab, spec)
         ef_new = restore_zero_tail(ef_new, spec)
 

@@ -12,7 +12,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.partition import (dirichlet_partition, heterogeneity_index,
+                                  iid_partition)
 from repro.data.synthetic import ClassificationData
 
 
@@ -49,5 +50,4 @@ class FederatedBatcher:
         return {"x": x, "y": y}
 
     def heterogeneity(self) -> float:
-        from repro.data.partition import heterogeneity_index
         return heterogeneity_index(self.parts, self.data.y)

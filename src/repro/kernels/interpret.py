@@ -48,6 +48,9 @@ def default_interpret() -> bool:
         raise ValueError(
             f"{INTERPRET_ENV}={env!r} is not a boolean; use one of "
             f"{_TRUE + _FALSE}")
+    # repro-lint: lazy-import (jax.default_backend() initializes the
+    # platform; importing this module must stay side-effect-free so
+    # XLA_FLAGS set after import still take effect)
     import jax
     return jax.default_backend() != "tpu"
 

@@ -15,6 +15,7 @@ compile on TPU without every caller opting in.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Optional, Tuple
 
 import jax
@@ -59,7 +60,6 @@ def fused_ota_aggregate(grads: jax.Array, h: jax.Array, key: jax.Array, *,
                         alpha: float, scale: float,
                         interpret: Optional[bool] = None) -> jax.Array:
     """Kernel-fused OTA MAC on stacked client gradients (N, d)."""
-    import math
     d = grads.shape[1]
     ku, ke = jax.random.split(key)
     u = jax.random.uniform(ku, (d,), jnp.float32,

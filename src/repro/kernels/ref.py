@@ -9,6 +9,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.channel import CMS_E_FLOOR, CMS_U_BOUND, cms_transform
+from repro.core.tail_index import log_moment_stats
+from repro.kernels.ota_channel import unpack_sign_slab
+
 
 def adaptive_update_ref(g: jax.Array, delta, nu, w: jax.Array, *, lr: float,
                         beta1: float, beta2: float, alpha, eps: float,
@@ -60,12 +64,12 @@ def _residual_stats_ref(xi: jax.Array, scale: float) -> jax.Array:
     step). Delegates to the estimator's own reduction — the contract is
     exact agreement with what ``alpha_from_log_moments`` consumes, so
     there is deliberately only one jnp spelling of it."""
-    from repro.core.tail_index import log_moment_stats
     return log_moment_stats(scale * xi)
 
 
 def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
                     e: jax.Array, *, alpha: float, scale: float,
+                    n_total: Optional[int] = None,
                     pilot_stats: bool = False):
     """Fused OTA MAC on a slab: (1/N) sum_n h_n grads[n] + xi, where xi is
     the CMS transform of uniform angles u in (-pi/2, pi/2) and Exp(1)
@@ -74,17 +78,20 @@ def ota_channel_ref(grads: jax.Array, h: jax.Array, u: jax.Array,
     (-pi/2, pi/2), e floored — finite everywhere incl. alpha == 2
     (Gaussian reduction).
 
-    grads: (N, d); h: (N,). Returns (d,) float32, plus the (3,)
-    residual log-moment statistics when ``pilot_stats=True`` (the
-    oracle of the kernel's fused epilogue).
+    grads: (N, d); h: (N,). ``n_total`` overrides the 1/N normalisation
+    (defaults to the local row count N), mirroring the kernel's
+    global-count contract for sharded partial sums. Returns (d,)
+    float32, plus the (3,) residual log-moment statistics when
+    ``pilot_stats=True`` (the oracle of the kernel's fused epilogue).
     """
     # Guard constants shared with the production transform so the
     # oracle can't silently drift from it; the expression itself is
     # written out independently on purpose.
-    from repro.core.channel import CMS_E_FLOOR, CMS_U_BOUND
     n = grads.shape[0]
+    if n_total is None:
+        n_total = n
     agg = jnp.einsum("n,nd->d", h.astype(jnp.float32),
-                     grads.astype(jnp.float32)) / n
+                     grads.astype(jnp.float32)) / n_total
     a = alpha
     u = jnp.clip(u, -CMS_U_BOUND, CMS_U_BOUND)
     e = jnp.maximum(e, CMS_E_FLOOR)
@@ -223,14 +230,12 @@ def ota_receive_ref(payload: jax.Array, scales: jax.Array, u: jax.Array,
     oracle exercises the identical wire bits.
     """
     if packed is not None:
-        from repro.kernels.ota_channel import unpack_sign_slab
         payload = unpack_sign_slab(payload, scales.shape[1] * LANE,
                                    planes=(packed == "planes"))
     rows, d = payload.shape
     deq = (payload.astype(jnp.float32).reshape(rows, d // LANE, LANE)
            * scales[..., None])
     agg = jnp.sum(deq, axis=0).reshape(-1)
-    from repro.core.channel import cms_transform
     xi = cms_transform(u, e, alpha)
     out = agg + scale * xi
     if pilot_stats:

@@ -27,6 +27,7 @@ from typing import Dict, Optional
 import jax
 
 from repro.configs import ARCHS, get_config
+from repro.core.adaptive import AdaptiveConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import INPUT_SHAPES, shape_config
 from repro.launch.steps import RunConfig, build_step
@@ -231,7 +232,6 @@ def main() -> None:
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    from repro.core.adaptive import AdaptiveConfig
     run = RunConfig(
         adaptive=AdaptiveConfig(optimizer=args.optimizer),
         fsdp=args.fsdp, shard_cache_seq=args.shard_cache_seq,

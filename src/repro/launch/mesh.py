@@ -8,6 +8,7 @@ backend init, and only ``dryrun.py`` sets the 512-host-device XLA flag.
 from __future__ import annotations
 
 from repro.compat import make_auto_mesh
+from repro.core.shard import client_axes_of, n_client_shards
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -40,10 +41,8 @@ def make_client_mesh(shape):
 
 def data_axes(mesh) -> tuple:
     """The client-carrying axes of a mesh (everything except "model")."""
-    from repro.core.shard import client_axes_of
     return client_axes_of(mesh)
 
 
 def n_clients_of(mesh) -> int:
-    from repro.core.shard import n_client_shards
     return n_client_shards(mesh)

@@ -22,7 +22,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.adaptive import AdaptiveConfig, make_server_optimizer
+import jax.tree_util as jtu
+
+from repro.core.adaptive import (AdaptiveConfig, ServerOptState,
+                                 make_server_optimizer)
 from repro.core.channel import OTAChannelConfig
 from repro.core.ota import add_interference, faded_loss_weights
 from repro.launch import specs as S
@@ -80,12 +83,10 @@ def _opt_state_struct(opt, pshape, pspec, state_dtype):
     def build(shape_leaf, path_spec):
         return path_spec
     # delta & nu either mirror params or are scalars (fedavg variants).
-    import jax.tree_util as jtu
     delta_spec = (pspec if jtu.tree_structure(sshape.delta)
                   == jtu.tree_structure(pshape) else P())
     nu_spec = (pspec if jtu.tree_structure(sshape.nu)
                == jtu.tree_structure(pshape) else P())
-    from repro.core.adaptive import ServerOptState
     sspec = ServerOptState(step=P(), delta=delta_spec, nu=nu_spec)
     if state_dtype != "float32":
         dt = jnp.dtype(state_dtype)

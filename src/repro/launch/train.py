@@ -76,6 +76,8 @@ from repro.core import (AdaptiveConfig, FLConfig, OTAChannelConfig,
                         make_slab_round_runner, make_slab_spec,
                         run_rounds_slab)
 from repro.data import dirichlet_partition, token_stream
+from repro.launch.hostdev import force_host_devices
+from repro.launch.mesh import make_client_mesh
 from repro.models.model import ModelConfig, build_model
 
 
@@ -268,7 +270,6 @@ def main() -> None:
                  f"(got --backend {args.backend}); it would be silently "
                  f"ignored on a single-device backend")
     if args.backend == "pallas_sharded":
-        from repro.launch.hostdev import force_host_devices
         try:
             mesh_shape = tuple(int(x) for x in (args.mesh or "2").split(","))
             if not mesh_shape or any(s < 1 for s in mesh_shape):
@@ -340,7 +341,6 @@ def main() -> None:
                         interpret=interpret)
     n_shards = 1
     if args.backend == "pallas_sharded":
-        from repro.launch.mesh import make_client_mesh
         mesh = make_client_mesh(mesh_shape)
         n_shards = math.prod(mesh_shape)
         print(f"client mesh {dict(mesh.shape)} "

@@ -17,6 +17,7 @@ parallelism over the "model" axis, optional FSDP over "data").
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -126,7 +127,6 @@ class ModelConfig:
 
     def n_params(self) -> int:
         """Exact parameter count by eval_shape (no allocation)."""
-        import math
         model = build_model(self)
         shapes = jax.eval_shape(model.init, jax.random.key(0))
         return sum(math.prod(l.shape) for l in jax.tree.leaves(shapes))

@@ -13,11 +13,14 @@ the sharding constraints (baseline), and §Perf iterates on it.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import dense_init, swiglu, swiglu_init
 
 # Expert-parallel shard_map context, installed by the launcher (the model
@@ -53,7 +56,6 @@ class MoEConfig:
 def moe_init(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
     kr, kg, ku, kd, ks = jax.random.split(key, 5)
     e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
-    import math
     std = 1.0 / math.sqrt(d)
     p = {
         "router": dense_init(kr, d, (e,), jnp.float32),
@@ -188,7 +190,6 @@ def _dispatch_local(cfg: MoEConfig, router_k, gate_w, up_w, down_w, xl,
     t = b * s
     xt = xl.reshape(t, d)
     e_loc = gate_w.shape[0]
-    msize = cfg.n_experts // e_loc
     j = jax.lax.axis_index(model_axis)
     base = j * e_loc
 
@@ -243,7 +244,6 @@ def _dispatch_local(cfg: MoEConfig, router_k, gate_w, up_w, down_w, xl,
 
 def _moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
                        data_axes, model_axis) -> Tuple[jax.Array, jax.Array]:
-    from jax.sharding import PartitionSpec as P
     dp = tuple(data_axes)
 
     def body(router_k, gate_w, up_w, down_w, xl):
@@ -252,7 +252,6 @@ def _moe_apply_sharded(p: dict, cfg: MoEConfig, x: jax.Array, mesh,
         aux = jax.lax.pmean(aux, dp)
         return y, aux
 
-    from repro.compat import shard_map
     y, aux = shard_map(
         body, mesh,
         (P(None, None), P(model_axis, None, None),

@@ -122,7 +122,6 @@ def resnet_tiny(n_classes: int, channels=(16, 32, 64), blocks_per_stage=2,
     def predict(p, x):
         h = _groupnorm(p["gn0_s"], p["gn0_b"], _conv(p["stem"], x))
         h = jax.nn.relu(h)
-        cin = channels[0]
         for si, c in enumerate(channels):
             for bi in range(blocks_per_stage):
                 pre = f"s{si}b{bi}"
@@ -134,7 +133,6 @@ def resnet_tiny(n_classes: int, channels=(16, 32, 64), blocks_per_stage=2,
                 sc = h if (pre + "_proj") not in p else _conv(p[pre + "_proj"],
                                                               h, stride)
                 h = jax.nn.relu(y + sc)
-                cin = c
         pooled = h.mean(axis=(1, 2))
         return pooled @ p["head_w"] + p["head_b"]
 

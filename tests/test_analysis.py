@@ -1,0 +1,395 @@
+"""repro-lint (PR 10): every rule fires on its should-flag fixture,
+stays silent on the should-pass twin, and the live repo is clean
+against the committed baseline.
+
+The AST-tier tests feed in-memory sources through
+``analyze_sources({relpath: source})`` with fabricated repo-relative
+paths, so each rule's scoping (round bodies, zero-tail modules, the
+kernels package) is exercised exactly as on the real tree. The jaxpr
+tier is tested twice: the detection mechanics on hand-built traced
+functions (a forked-draw pair, an int8 downcast), and the real engine
+(all three backends' ledgers identical, no downcast, donation fully
+aliased).
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Finding, load_baseline, new_findings,
+                            write_baseline)
+from repro.analysis.ast_rules import analyze_repo, analyze_sources
+
+ROOT = Path(__file__).resolve().parents[1]
+
+# Fixture paths chosen to land in each rule's scope.
+CORE = "src/repro/core/ota.py"
+KERNEL = "src/repro/kernels/ota_channel.py"
+REF = "src/repro/kernels/ref.py"
+OTHER = "src/repro/launch/train.py"
+
+# A registry for fixtures (isolated from the live one).
+REG = {"SR_FOLD": 0x5A8, "DL_FOLD": 0xD01}
+
+
+def rules_of(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+def analyze_one(path, source, **kw):
+    kw.setdefault("registry", REG)
+    return analyze_sources({path: source}, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fold rules
+
+
+def test_fold_collision_fires_on_duplicate_value():
+    src = "A_FOLD = 0x5A8\nB_FOLD = 0x5A8\n"
+    hits = rules_of(analyze_one(CORE, src,
+                                registry={"A_FOLD": 0x5A8,
+                                          "B_FOLD": 0x5A8}),
+                    "fold-collision")
+    # once for the registry sharing a value, once for the second def
+    assert len(hits) == 2
+    assert any(f.line == 2 and "B_FOLD" in f.message for f in hits)
+    assert all(f.severity == "error" for f in hits)
+
+
+def test_fold_drift_fires_on_value_disagreement():
+    hits = rules_of(analyze_one(CORE, "SR_FOLD = 0x999\n"), "fold-drift")
+    assert len(hits) == 1
+    assert "0x999" in hits[0].message and "0x5a8" in hits[0].message
+
+
+def test_fold_drift_fires_on_unledgered_constant():
+    hits = rules_of(analyze_one(CORE, "NEW_FOLD = 0xBEEF\n"),
+                    "fold-drift")
+    assert len(hits) == 1 and "not ledgered" in hits[0].message
+
+
+def test_fold_unregistered_fires_on_raw_separator_literal():
+    src = "import jax\nk = jax.random.fold_in(key, 0x0FAD)\n"
+    hits = rules_of(analyze_one(CORE, src), "fold-unregistered")
+    assert len(hits) == 1 and hits[0].line == 2
+    assert "0xfad" in hits[0].message
+
+
+def test_fold_rules_pass_on_registered_and_index_folds():
+    src = ("SR_FOLD = 0x5A8\n"
+           "k = jax.random.fold_in(key, SR_FOLD)\n"
+           "ks = [jax.random.fold_in(key, i) for i in range(4)]\n"
+           "k2 = jax.random.fold_in(key, 3)\n")   # index fold, exempt
+    findings = analyze_one(CORE, src)
+    assert not [f for f in findings if f.rule.startswith("fold-")]
+
+
+def test_registry_coverage_flags_stale_entry():
+    hits = rules_of(analyze_one(CORE, "SR_FOLD = 0x5A8\n",
+                                check_registry_coverage=True),
+                    "fold-drift")
+    assert len(hits) == 1 and "DL_FOLD" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# rekey-in-round
+
+
+REKEY_SRC = ("import jax\n"
+             "def round_body(key):\n"
+             "    k1, k2 = jax.random.split(key)\n"
+             "    fresh = jax.random.PRNGKey(0)\n"
+             "    return k1, k2, fresh\n")
+
+
+def test_rekey_fires_inside_round_scope():
+    hits = rules_of(analyze_one(CORE, REKEY_SRC), "rekey-in-round")
+    assert {(f.line, f.severity) for f in hits} == {(3, "warn"),
+                                                   (4, "error")}
+
+
+def test_rekey_scoped_to_round_modules_and_waivable():
+    assert not rules_of(analyze_one(OTHER, REKEY_SRC), "rekey-in-round")
+    waived = REKEY_SRC.replace(
+        "split(key)",
+        "split(key)  # repro-lint: allow[rekey-in-round]")
+    hits = rules_of(analyze_one(CORE, waived), "rekey-in-round")
+    assert [f.line for f in hits] == [4]   # only the un-waived mint
+
+
+def test_rekey_ignores_module_level_calls():
+    src = "import jax\nk1, k2 = jax.random.split(jax.random.key(0))\n"
+    assert not rules_of(analyze_one(CORE, src), "rekey-in-round")
+
+
+# ---------------------------------------------------------------------------
+# zero-tail-restore
+
+
+STRIPPED = ("def aggregate(payload, scales, u, e, zero_fold):\n"
+            "    y = ota_receive_slab(payload, scales, u, e,\n"
+            "                         alpha=1.5, scale=0.1,\n"
+            "                         packed='sign' if zero_fold else None)\n"
+            "    return y\n")
+
+
+def test_zero_tail_fires_on_stripped_restore():
+    hits = rules_of(analyze_one(CORE, STRIPPED), "zero-tail-restore")
+    assert len(hits) == 1
+    assert hits[0].line == 2 and hits[0].severity == "error"
+    assert "restore_zero_tail" in hits[0].message
+
+
+def test_zero_tail_passes_when_restored_or_not_reachable():
+    restored = STRIPPED.replace(
+        "    return y\n",
+        "    y = restore_zero_tail(y, d, zero_fold)\n    return y\n")
+    assert not rules_of(analyze_one(CORE, restored), "zero-tail-restore")
+    no_zero_fold = ("def aggregate(payload, scales, u, e):\n"
+                    "    return ota_receive_slab(payload, scales, u, e,\n"
+                    "                            alpha=1.5, scale=0.1)\n")
+    assert not rules_of(analyze_one(CORE, no_zero_fold),
+                        "zero-tail-restore")
+    # out of scope: kernels define the receive, core modules consume it
+    assert not rules_of(analyze_one(KERNEL, STRIPPED),
+                        "zero-tail-restore")
+
+
+# ---------------------------------------------------------------------------
+# kernel-mirror
+
+
+KERNEL_SRC = ("import jax.experimental.pallas as pl\n"
+              "def foo_slab(x, y, *, alpha, block_cols=128,\n"
+              "             interpret=None):\n"
+              "    return pl.pallas_call(None)(x, y)\n"
+              "def _helper(x):\n"
+              "    return pl.pallas_call(None)(x)\n")
+
+
+def test_kernel_mirror_fires_on_missing_oracle():
+    hits = rules_of(analyze_sources({KERNEL: KERNEL_SRC,
+                                     REF: "def bar_ref(x):\n    pass\n"},
+                                    registry=REG), "kernel-mirror")
+    assert len(hits) == 1   # _helper is private: skipped
+    assert "foo_ref" in hits[0].message and hits[0].severity == "error"
+
+
+def test_kernel_mirror_fires_on_signature_mismatch():
+    ref = "def foo_ref(x, y, *, beta):\n    pass\n"
+    hits = rules_of(analyze_sources({KERNEL: KERNEL_SRC, REF: ref},
+                                    registry=REG), "kernel-mirror")
+    assert len(hits) == 1
+    assert "missing ['alpha']" in hits[0].message
+    assert "extra ['beta']" in hits[0].message
+
+
+def test_kernel_mirror_passes_modulo_launch_params():
+    ref = "def foo_ref(x, y, *, alpha):\n    pass\n"
+    assert not rules_of(analyze_sources({KERNEL: KERNEL_SRC, REF: ref},
+                                        registry=REG), "kernel-mirror")
+
+
+def test_kernel_mirror_fires_on_operand_order_swap():
+    ref = "def foo_ref(y, x, *, alpha):\n    pass\n"
+    hits = rules_of(analyze_sources({KERNEL: KERNEL_SRC, REF: ref},
+                                    registry=REG), "kernel-mirror")
+    assert len(hits) == 1 and "positional" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# local-import
+
+
+def test_local_import_fires_without_waiver():
+    src = "def f():\n    import math\n    return math.pi\n"
+    hits = rules_of(analyze_one(OTHER, src), "local-import")
+    assert len(hits) == 1 and hits[0].line == 2
+
+
+def test_local_import_honours_waiver_and_guards():
+    src = ("from typing import TYPE_CHECKING\n"
+           "if TYPE_CHECKING:\n"
+           "    from foo import Bar\n"
+           "try:\n"
+           "    import fancy\n"
+           "except ImportError:\n"
+           "    fancy = None\n"
+           "def f():\n"
+           "    # repro-lint: lazy-import (cycle: test fixture)\n"
+           "    from repro.core import fl\n"
+           "    return fl\n")
+    assert not rules_of(analyze_one(OTHER, src), "local-import")
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    hits = rules_of(analyze_one(OTHER, "def f(:\n"), "syntax-error")
+    assert len(hits) == 1 and hits[0].severity == "error"
+
+
+# ---------------------------------------------------------------------------
+# findings + baseline workflow
+
+
+def test_finding_render_format():
+    f = Finding("src/repro/core/ota.py", 12, "fold-drift", "error",
+                "boom", snippet="X_FOLD = 1")
+    assert f.render() == ("src/repro/core/ota.py:12 fold-drift "
+                          "[error] boom")
+
+
+def test_baseline_absorbs_by_snippet_not_line(tmp_path):
+    old = [Finding(CORE, 10, "rekey-in-round", "warn", "m",
+                   snippet="k1, k2 = jax.random.split(key)")]
+    path = str(tmp_path / "base.json")
+    write_baseline(path, old)
+    # same finding drifted to another line: still baselined
+    drifted = [Finding(CORE, 99, "rekey-in-round", "warn", "m",
+                       snippet="k1, k2 = jax.random.split(key)")]
+    assert new_findings(drifted, load_baseline(path)) == []
+    # a SECOND occurrence of the same line is new
+    two = drifted + [Finding(CORE, 120, "rekey-in-round", "warn", "m",
+                             snippet="k1, k2 = jax.random.split(key)")]
+    assert len(new_findings(two, load_baseline(path))) == 1
+
+
+def test_baseline_version_mismatch_rejected(tmp_path):
+    path = tmp_path / "base.json"
+    path.write_text(json.dumps({"version": 99, "findings": {}}))
+    with pytest.raises(ValueError, match="version"):
+        load_baseline(str(path))
+
+
+# ---------------------------------------------------------------------------
+# the live repo
+
+
+def test_live_repo_clean_against_committed_baseline():
+    """The tree as committed has no findings beyond the baseline —
+    the same gate CI runs."""
+    findings = analyze_repo(ROOT)
+    baseline = load_baseline(str(ROOT / ".repro-lint-baseline.json"))
+    fresh = new_findings(findings, baseline)
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+
+
+def test_cli_exit_codes(tmp_path):
+    env_cmd = [sys.executable, "-m", "repro.analysis", "--root",
+               str(ROOT)]
+    r = subprocess.run(env_cmd, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+    # without the baseline the accepted rekey warns resurface -> exit 1
+    r = subprocess.run(env_cmd + ["--no-baseline"], capture_output=True,
+                       text=True)
+    assert r.returncode == 1
+    assert "rekey-in-round" in r.stdout
+    # --write-baseline to a scratch path round-trips to exit 0
+    scratch = str(tmp_path / "b.json")
+    r = subprocess.run(env_cmd + ["--write-baseline", "--baseline",
+                                  scratch], capture_output=True,
+                       text=True)
+    assert r.returncode == 0
+    r = subprocess.run(env_cmd + ["--baseline", scratch],
+                       capture_output=True, text=True)
+    assert r.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr tier
+
+
+def test_prng_ledger_detects_forked_draws():
+    """The mechanics: two traced functions that draw differently have
+    different ledgers; identical draw plans have equal ledgers."""
+    import jax
+    from repro.analysis.jaxpr_checks import prng_ledger
+
+    def one_draw(key):
+        return jax.random.uniform(key, (8,))
+
+    def forked(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.uniform(k1, (8,)) + jax.random.uniform(k2, (8,))
+
+    def one_draw_sliced(key):
+        u = jax.random.uniform(key, (8,))
+        return u[:4] + u[4:]
+
+    key = jax.random.key(0)
+    base = prng_ledger(one_draw, key)
+    assert sum(base.values()) == 1
+    assert prng_ledger(forked, key) != base
+    assert prng_ledger(one_draw_sliced, key) == base
+
+
+def test_downcast_ledger_detects_narrowing():
+    import jax.numpy as jnp
+    from repro.analysis.jaxpr_checks import downcast_ledger
+
+    def narrowing(x):
+        return x.astype(jnp.int8).astype(jnp.float32)
+
+    def clean(x):
+        return x.astype(jnp.float64) if False else x * 2
+
+    x = jnp.ones((4,), jnp.float32)
+    assert downcast_ledger(narrowing, x) == {"int8": 1}
+    assert not downcast_ledger(clean, x)
+
+
+def test_prng_ledger_mismatch_is_reported_with_location(monkeypatch):
+    """When a backend's draw plan forks, check_prng_ledger emits a
+    finding with the anchor file, the prng-ledger rule id, and the
+    offending backend in the message."""
+    import jax
+    from repro.analysis import jaxpr_checks
+
+    def one_draw(key):
+        return jax.random.uniform(key, (8,))
+
+    def forked(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.uniform(k1, (8,)) + jax.random.uniform(k2, (8,))
+
+    key = jax.random.key(0)
+    # Stub cells with the real (step, state, key, batches) shape; the
+    # unmodified prng_ledger/check_prng_ledger path runs end to end.
+    monkeypatch.setattr(
+        jaxpr_checks, "_backend_cells",
+        lambda: [("jnp", (lambda s, k, b: one_draw(k), 0.0, key, 0.0)),
+                 ("pallas", (lambda s, k, b: forked(k), 0.0, key, 0.0))])
+    hits = jaxpr_checks.check_prng_ledger()
+    assert len(hits) == 1
+    f = hits[0]
+    assert f.rule == "prng-ledger" and f.severity == "error"
+    assert f.file == "src/repro/core/fl.py" and f.line == 1
+    assert "pallas" in f.message and "x1 vs pallas x2" in f.message
+    assert f.render().startswith("src/repro/core/fl.py:1 prng-ledger")
+
+
+def test_engine_prng_ledger_identical_across_backends():
+    """The real contract: jnp / pallas / pallas_sharded round steps
+    consume identical randomness on the tiny f32 cell."""
+    from repro.analysis.jaxpr_checks import (_backend_cells,
+                                             check_prng_ledger,
+                                             prng_ledger)
+    ledgers = {name: prng_ledger(step, st, key, b)
+               for name, (step, st, key, b) in _backend_cells()}
+    assert sum(ledgers["jnp"].values()) > 0
+    assert ledgers["pallas"] == ledgers["jnp"]
+    assert ledgers["pallas_sharded"] == ledgers["jnp"]
+    assert check_prng_ledger() == []
+
+
+def test_engine_f32_cell_has_no_wire_downcast():
+    from repro.analysis.jaxpr_checks import check_wire_downcast
+    assert check_wire_downcast() == []
+
+
+def test_engine_donation_fully_aliased():
+    from repro.analysis.jaxpr_checks import check_donation
+    assert check_donation() == []

@@ -129,6 +129,7 @@ def test_full_round_parity(name):
 def test_round_executes_exactly_two_kernel_launches(monkeypatch):
     """Acceptance: one ota_channel_slab + one adaptive_update_slab call
     over the FULL model per round — not one per leaf."""
+    from repro.core import ota as core_ota
     from repro.kernels import adaptive_update as au_mod
     from repro.kernels import ota_channel as oc_mod
 
@@ -143,8 +144,9 @@ def test_round_executes_exactly_two_kernel_launches(monkeypatch):
         calls["update"] += 1
         return real_upd(*a, **k)
 
-    # Patch where the core modules resolve the kernels (lazy imports).
-    monkeypatch.setattr(oc_mod, "ota_channel_slab", count_ota)
+    # Patch where the core modules resolve the kernels: core.ota binds
+    # ota_channel_slab at import time, adaptive still imports lazily.
+    monkeypatch.setattr(core_ota, "ota_channel_slab", count_ota)
     monkeypatch.setattr(au_mod, "adaptive_update_slab", count_upd)
 
     params = _params(jax.random.key(5), jnp.float32)

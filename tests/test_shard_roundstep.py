@@ -137,13 +137,16 @@ def test_resident_trajectory_matches_jnp_single_shard_mesh(optimizer):
 def test_two_launches_per_device_per_round(monkeypatch):
     """On a (1,)-mesh each round is exactly one partial-MAC launch and
     one slab-slice update launch per device."""
+    from repro.core import shard as core_shard
     from repro.kernels import adaptive_update as au_mod
     from repro.kernels import ota_channel as oc_mod
 
     calls = {"ota": 0, "update": 0}
     real_ota, real_upd = oc_mod.ota_transmit_slab, au_mod.adaptive_update_slab
+    # core.shard binds ota_transmit_slab at import time; adaptive still
+    # imports adaptive_update_slab lazily, so patch its defining module.
     monkeypatch.setattr(
-        oc_mod, "ota_transmit_slab",
+        core_shard, "ota_transmit_slab",
         lambda *a, **k: (calls.__setitem__("ota", calls["ota"] + 1),
                          real_ota(*a, **k))[1])
     monkeypatch.setattr(
